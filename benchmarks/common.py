@@ -1,0 +1,33 @@
+"""Shared benchmark fixtures: catalog, the paper's 20 scenarios, timing."""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, List, Tuple
+
+from repro.core import Request, generate_catalog
+
+#: §5.1: Cartesian {10,50,100,400,1000} × {(1,2),(2,2),(1,4)} + 5 irregular
+SCENARIOS: List[Tuple[int, float, float]] = (
+    [(p, c, m) for p in (10, 50, 100, 400, 1000)
+     for c, m in ((1, 2), (2, 2), (1, 4))]
+    + [(17, 7, 7), (75, 3, 5), (115, 4, 2), (287, 1, 6), (439, 1, 9)]
+)
+
+
+def catalog(seed: int = 0, max_offerings: int = 2000):
+    return generate_catalog(seed=seed, max_offerings=max_offerings)
+
+
+def requests() -> List[Request]:
+    return [Request(pods=p, cpu_per_pod=c, mem_per_pod=m)
+            for p, c, m in SCENARIOS]
+
+
+def timed(fn: Callable, *args, repeat: int = 1, **kwargs):
+    t0 = time.perf_counter()
+    out = None
+    for _ in range(repeat):
+        out = fn(*args, **kwargs)
+    dt = (time.perf_counter() - t0) / repeat
+    return out, dt * 1e6          # µs per call

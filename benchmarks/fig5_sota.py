@@ -1,0 +1,70 @@
+"""Fig. 5a/5b: KubePACS vs Greedy / SpotVerse-Node / SpotVerse-Pod across the
+20 scenarios — normalized E_Total and per-type concentration (availability).
+
+Paper claims reproduced: KubePACS ≥ all baselines everywhere; average gains
+of +48.11% (Greedy), +81.06% (SpotVerse-Node), +60.40% (SpotVerse-Pod) on
+their real SpotLake archive; our synthetic archive reproduces the ordering
+(magnitudes recorded in EXPERIMENTS.md).
+"""
+
+import numpy as np
+
+from repro.core import (e_total, karpenter_like, kubepacs_greedy, preprocess,
+                        spotverse)
+from repro.core.gss import bracketed_gss
+
+from . import common
+
+
+def run(cat=None):
+    cat = cat or common.catalog()
+    rows, concentrations = [], {"kubepacs": [], "sv-node": []}
+    t_total = 0.0
+    for req in common.requests():
+        items = preprocess(cat, req)
+        (pool, trace) = bracketed_gss(items, req.pods, tolerance=0.01)[0:2]
+        t_total += trace.wall_seconds
+        ek = e_total(pool, req.pods)
+        row = {"scenario": (req.pods, req.cpu_per_pod, req.mem_per_pod),
+               "kubepacs": 1.0}
+        for name, fn in (("greedy", kubepacs_greedy),
+                         ("sv-node", lambda it, r: spotverse(it, r, "node")),
+                         ("sv-pod", lambda it, r: spotverse(it, r, "pod")),
+                         ("karpenter", karpenter_like)):
+            row[name] = e_total(fn(items, req.pods), req.pods) / ek
+        rows.append(row)
+        concentrations["kubepacs"].append(max(pool.counts) if pool.counts else 0)
+        svn = spotverse(items, req.pods, "node")
+        concentrations["sv-node"].append(max(svn.counts) if svn.counts else 0)
+
+    out = {"rows": rows, "us_per_call": t_total / len(rows) * 1e6}
+    for name in ("greedy", "sv-node", "sv-pod", "karpenter"):
+        rel = np.mean([r[name] for r in rows])
+        out[f"improvement_vs_{name}_pct"] = 100 * (1 / rel - 1)
+        out[f"max_improvement_vs_{name}_pct"] = 100 * (
+            1 / min(r[name] for r in rows) - 1)
+    out["wins"] = sum(1 for r in rows
+                      if all(r[n] <= 1 + 1e-9 for n in
+                             ("greedy", "sv-node", "sv-pod", "karpenter")))
+    out["median_max_nodes_per_type_kubepacs"] = float(
+        np.median(concentrations["kubepacs"]))
+    out["median_max_nodes_per_type_svnode"] = float(
+        np.median(concentrations["sv-node"]))
+    return out
+
+
+def main():
+    out = run()
+    print(f"fig5_sota,{out['us_per_call']:.0f},"
+          f"wins={out['wins']}/20;"
+          f"vs_greedy=+{out['improvement_vs_greedy_pct']:.1f}%;"
+          f"vs_svnode=+{out['improvement_vs_sv-node_pct']:.1f}%;"
+          f"vs_svpod=+{out['improvement_vs_sv-pod_pct']:.1f}%;"
+          f"vs_karpenter=+{out['improvement_vs_karpenter_pct']:.1f}%;"
+          f"conc_kubepacs={out['median_max_nodes_per_type_kubepacs']:.0f};"
+          f"conc_svnode={out['median_max_nodes_per_type_svnode']:.0f}")
+    return out
+
+
+if __name__ == "__main__":
+    main()

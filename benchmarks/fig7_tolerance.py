@@ -1,0 +1,45 @@
+"""Fig. 7: GSS tolerance ε vs solver latency/ILP-solve count vs E_Total.
+
+Claims: iterations ≈ 5n+1 for ε=10⁻ⁿ (Eq. 7); ε=0.01 is the sweet spot."""
+
+import numpy as np
+
+from repro.core import Request, e_total, expected_iterations, preprocess
+from repro.core.gss import golden_section_search
+
+from . import common
+
+
+def run(cat=None):
+    cat = cat or common.catalog()
+    req = Request(pods=100, cpu_per_pod=2, mem_per_pod=2)
+    items = preprocess(cat, req)
+    rows = []
+    for n in (1, 2, 3, 4):
+        eps = 10.0 ** -n
+        pool, trace = golden_section_search(items, req.pods, tolerance=eps)
+        rows.append({
+            "eps": eps,
+            "ilp_solves": trace.ilp_solves,
+            "predicted_iters": expected_iterations(eps),
+            "wall_s": trace.wall_seconds,
+            "e_total": e_total(pool, req.pods) if pool else 0.0,
+        })
+    base = max(r["e_total"] for r in rows)
+    for r in rows:
+        r["e_ratio"] = r["e_total"] / base
+    return {"rows": rows, "us_per_call": rows[1]["wall_s"] * 1e6}
+
+
+def main():
+    out = run()
+    detail = ";".join(
+        f"eps={r['eps']:g}:solves={r['ilp_solves']}"
+        f"(pred~{r['predicted_iters']})"
+        f",t={r['wall_s']:.2f}s,E={r['e_ratio']:.4f}" for r in out["rows"])
+    print(f"fig7_tolerance,{out['us_per_call']:.0f},{detail}")
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+# One function per paper table/figure. Prints ``name,us_per_call,derived`` CSV.
+import sys
+import traceback
+
+from . import (elastic_training, fig5_sota, fig5c_spotkube, fig6_alpha,
+               fig6b_cross_provider, fig7_tolerance, fig8_preferences,
+               fig9_t3_fulfillment, fig12_interrupts, roofline_report,
+               table2_fixed_alpha, table3_perf_dollar)
+
+ALL = [
+    ("fig5_sota", fig5_sota),
+    ("fig5c_spotkube", fig5c_spotkube),
+    ("fig6_alpha", fig6_alpha),
+    ("fig6b_cross_provider", fig6b_cross_provider),
+    ("table2_fixed_alpha", table2_fixed_alpha),
+    ("fig7_tolerance", fig7_tolerance),
+    ("fig8_preferences", fig8_preferences),
+    ("fig9_t3_fulfillment", fig9_t3_fulfillment),
+    ("fig12_interrupts", fig12_interrupts),
+    ("table3_perf_dollar", table3_perf_dollar),
+    ("elastic_training", elastic_training),
+    ("roofline_report", roofline_report),
+]
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, mod in ALL:
+        try:
+            mod.main()
+        except Exception:                      # noqa: BLE001
+            failures += 1
+            traceback.print_exc()
+            print(f"{name},0,FAILED")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""Table 2: normalized E_Total of Greedy / fixed α ∈ {0, 0.5, 1} vs GSS."""
+
+import numpy as np
+
+from repro.core import Request, e_total, kubepacs_greedy, preprocess, solve_ilp
+from repro.core.efficiency import NodePool
+from repro.core.gss import bracketed_gss
+
+from . import common
+
+
+def run(cat=None):
+    cat = cat or common.catalog()
+    rows = []
+    wall = 0.0
+    for pods, cpu, mem in [(50, 1, 2), (100, 2, 2), (400, 1, 4)]:
+        req = Request(pods=pods, cpu_per_pod=cpu, mem_per_pod=mem)
+        items = preprocess(cat, req)
+        pool, trace = bracketed_gss(items, req.pods, tolerance=0.01)
+        wall += trace.wall_seconds
+        base = e_total(pool, req.pods)
+        row = {"ours": 1.0,
+               "greedy": e_total(kubepacs_greedy(items, pods), pods) / base}
+        for a in (0.0, 0.5, 1.0):
+            counts = solve_ilp(items, pods, a)
+            row[f"alpha_{a}"] = e_total(
+                NodePool(items=items, counts=counts), pods) / base
+        rows.append(row)
+    mean = {k: float(np.mean([r[k] for r in rows])) for k in rows[0]}
+    mean["us_per_call"] = wall / 3 * 1e6
+    return mean
+
+
+def main():
+    out = run()
+    print(f"table2_fixed_alpha,{out['us_per_call']:.0f},"
+          f"greedy={out['greedy']:.4f};alpha0={out['alpha_0.0']:.4f};"
+          f"alpha0.5={out['alpha_0.5']:.6f};alpha1={out['alpha_1.0']:.6f};"
+          f"ours={out['ours']:.1f}")
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,23 @@
+"""KubePACS control plane: the paper's contribution as a composable library."""
+
+from .market import (Offering, InterruptEvent, SpotMarketSimulator,
+                     generate_catalog, restrict)
+from .efficiency import (Request, CandidateItem, NodePool, pods_per_instance,
+                         e_perf_cost, e_over_pods, e_total)
+from .scaling import scaled_benchmark_score, build_base_price_index, matches_intent
+from .ilp import solve_ilp, solve_ilp_pulp, objective_coefficients
+from .gss import golden_section_search, expected_iterations, GssTrace, PHI
+from .baselines import kubepacs_greedy, spotverse, spotkube, karpenter_like
+from .provisioner import (KubePACSProvisioner, ProvisioningDecision,
+                          UnavailableOfferingsCache, preprocess, merge_pools)
+
+__all__ = [
+    "Offering", "InterruptEvent", "SpotMarketSimulator", "generate_catalog",
+    "restrict", "Request", "CandidateItem", "NodePool", "pods_per_instance",
+    "e_perf_cost", "e_over_pods", "e_total", "scaled_benchmark_score",
+    "build_base_price_index", "matches_intent", "solve_ilp", "solve_ilp_pulp",
+    "objective_coefficients", "golden_section_search", "expected_iterations",
+    "GssTrace", "PHI", "kubepacs_greedy", "spotverse", "spotkube",
+    "karpenter_like", "KubePACSProvisioner", "ProvisioningDecision",
+    "UnavailableOfferingsCache", "preprocess", "merge_pools",
+]

@@ -1,0 +1,110 @@
+"""Request/candidate data types and the paper's efficiency metrics (Eq. 1–3)."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+from .market import Offering
+
+
+@dataclasses.dataclass(frozen=True)
+class Request:
+    """The user's workload requirement ``Req`` (Table 1) + workload intent."""
+
+    pods: int                    # Req_pod
+    cpu_per_pod: float           # Req_cpu  (vCPUs)
+    mem_per_pod: float           # Req_mem  (GiB)
+    workload: frozenset = frozenset()   # subset of {"network", "disk"} (§3.3)
+
+    def __post_init__(self):
+        object.__setattr__(self, "workload", frozenset(self.workload))
+
+
+@dataclasses.dataclass(frozen=True)
+class CandidateItem:
+    """One preprocessed offering: the ILP's per-type constants."""
+
+    offering: Offering
+    pods: int                    # Pod_i  (Eq. 1)
+    bs: float                    # BS_i, possibly workload-scaled (Eq. 8)
+    spot_price: float            # SP_i
+    t3: int                      # T3_i  (upper bound on x_i)
+
+    @property
+    def perf(self) -> float:     # Perf_i = BS_i * Pod_i
+        return self.bs * self.pods
+
+
+@dataclasses.dataclass
+class NodePool:
+    """A provisioning decision: counts per candidate (only x_i > 0 kept)."""
+
+    items: List[CandidateItem]
+    counts: List[int]
+    alpha: Optional[float] = None        # the α that produced this pool
+    request: Optional[Request] = None
+
+    def as_dict(self) -> Dict[str, int]:
+        return {it.offering.offering_id: c for it, c in zip(self.items, self.counts)}
+
+    @property
+    def total_nodes(self) -> int:
+        return int(sum(self.counts))
+
+    @property
+    def total_pods(self) -> int:
+        return int(sum(it.pods * c for it, c in zip(self.items, self.counts)))
+
+    @property
+    def hourly_cost(self) -> float:
+        return float(sum(it.spot_price * c for it, c in zip(self.items, self.counts)))
+
+    def nonzero(self) -> "NodePool":
+        keep = [(it, c) for it, c in zip(self.items, self.counts) if c > 0]
+        return NodePool(items=[it for it, _ in keep], counts=[c for _, c in keep],
+                        alpha=self.alpha, request=self.request)
+
+
+def pods_per_instance(offering: Offering, req: Request) -> int:
+    """Eq. 1: Pod_i = min(floor(CPU_i/Req_cpu), floor(Mem_i/Req_mem))."""
+    if req.cpu_per_pod <= 0 or req.mem_per_pod <= 0:
+        raise ValueError("per-pod resources must be positive")
+    return int(min(offering.vcpus // req.cpu_per_pod,
+                   offering.mem_gib // req.mem_per_pod))
+
+
+def e_perf_cost(pool: NodePool) -> float:
+    """Eq. 2 left: cumulative performance-per-dollar of the selected pool,
+    implemented as  Σ_i Perf_i·x_i  /  Σ_i SP_i·x_i .
+
+    Interpretation note (recorded in DESIGN.md §7).  Read literally, Eq. 2
+    sums per-node ratios BS_i·x_i/SP_i, which (a) grows linearly in node
+    count so splitting capacity across ever-smaller nodes dominates — the
+    SpotVerse-Node policy would be provably optimal, contradicting Fig. 5a —
+    and (b) cannot reproduce Table 2's collapse to ~1e-4 under α=1
+    over-provisioning.  The aggregate-performance-per-aggregate-dollar
+    reading reproduces both, and matches the text ("cumulative
+    performance-per-dollar of selected instances").  Perf_i = BS_i·Pod_i is
+    the instance-level contribution (Table 1), consistent with Eq. 5.
+    """
+    perf = sum(it.perf * c for it, c in zip(pool.items, pool.counts) if c > 0)
+    cost = sum(it.spot_price * c for it, c in zip(pool.items, pool.counts) if c > 0)
+    if cost <= 0:
+        return 0.0
+    return float(perf) / float(cost)
+
+
+def e_over_pods(pool: NodePool, req_pods: int) -> float:
+    """Eq. 2 right: Req_pod / Σ_i Pod_i·x_i  (over-provisioning penalty)."""
+    allocated = pool.total_pods
+    if allocated <= 0:
+        return 0.0
+    return float(req_pods) / float(allocated)
+
+
+def e_total(pool: NodePool, req_pods: int) -> float:
+    """Eq. 3: E_Total = E_PerfCost × E_OverPods (0 for infeasible pools)."""
+    if pool.total_pods < req_pods:
+        return 0.0   # unmet demand: not a valid provisioning decision
+    return e_perf_cost(pool) * e_over_pods(pool, req_pods)

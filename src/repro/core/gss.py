@@ -1,0 +1,143 @@
+"""Golden Section Search over the cost/performance weight α (paper §3.2, Alg. 1).
+
+GSS maximizes E_Total(α) = E_PerfCost × E_OverPods of the ILP solution at α
+over α ∈ [0, 1], shrinking the bracket by φ = (√5−1)/2 ≈ 0.618 per step and
+reusing one interior evaluation per iteration (one ILP solve per iteration
+after the two initial solves; ≈ 5n+1 iterations for tolerance ε = 10⁻ⁿ,
+Eq. 6–7).  The best pool over *all* evaluated α is returned (Alg. 1's S*),
+which also guards against mild non-unimodality of the empirical E_Total(α).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from typing import Callable, List, Optional, Sequence, Tuple
+
+from .efficiency import CandidateItem, NodePool, e_total
+from .ilp import solve_ilp
+
+PHI = (math.sqrt(5.0) - 1.0) / 2.0     # ≈ 0.618
+
+
+@dataclasses.dataclass
+class GssTrace:
+    """Every (α, E_Total) the search evaluated — Fig. 6's black lines."""
+
+    alphas: List[float] = dataclasses.field(default_factory=list)
+    e_totals: List[float] = dataclasses.field(default_factory=list)
+    ilp_solves: int = 0
+    wall_seconds: float = 0.0
+
+
+def expected_iterations(tolerance: float, a: float = 0.0, b: float = 1.0) -> int:
+    """Eq. 6: k−1 ≥ ⌈log(ε/(b−a)) / log φ⌉  (≈ 4.784·n for ε=10⁻ⁿ)."""
+    return int(math.ceil(math.log(tolerance / (b - a)) / math.log(PHI))) + 1
+
+
+def golden_section_search(
+    items: Sequence[CandidateItem],
+    req_pods: int,
+    tolerance: float = 0.01,
+    alpha_lo: float = 0.0,
+    alpha_hi: float = 1.0,
+    solver: Callable[[Sequence[CandidateItem], int, float], Optional[List[int]]] = solve_ilp,
+) -> Tuple[Optional[NodePool], GssTrace]:
+    """Algorithm 1 (lines 7–27).  Returns (best pool S*, evaluation trace)."""
+    trace = GssTrace()
+    t0 = time.perf_counter()
+    cache: dict[float, Tuple[Optional[NodePool], float]] = {}
+
+    def evaluate(alpha: float) -> Tuple[Optional[NodePool], float]:
+        key = round(alpha, 12)
+        if key in cache:
+            return cache[key]
+        counts = solver(items, req_pods, alpha)
+        trace.ilp_solves += 1
+        if counts is None:
+            pool, score = None, float("-inf")
+        else:
+            pool = NodePool(items=list(items), counts=counts, alpha=alpha)
+            score = e_total(pool, req_pods)
+        trace.alphas.append(alpha)
+        trace.e_totals.append(score if score != float("-inf") else 0.0)
+        cache[key] = (pool, score)
+        return pool, score
+
+    a, b = alpha_lo, alpha_hi
+    x1 = b - PHI * (b - a)
+    x2 = a + PHI * (b - a)
+    pool1, f1 = evaluate(x1)
+    pool2, f2 = evaluate(x2)
+    best_pool, best_f = (pool1, f1) if f1 >= f2 else (pool2, f2)
+
+    while (b - a) > tolerance:
+        if f1 >= f2:
+            b = x2
+            x2, f2, pool2 = x1, f1, pool1
+            x1 = b - PHI * (b - a)
+            pool1, f1 = evaluate(x1)
+            if f1 > best_f:
+                best_pool, best_f = pool1, f1
+        else:
+            a = x1
+            x1, f1, pool1 = x2, f2, pool2
+            x2 = a + PHI * (b - a)
+            pool2, f2 = evaluate(x2)
+            if f2 > best_f:
+                best_pool, best_f = pool2, f2
+
+    trace.wall_seconds = time.perf_counter() - t0
+    if best_pool is not None:
+        best_pool = best_pool.nonzero()
+    return best_pool, trace
+
+
+def bracketed_gss(
+    items: Sequence[CandidateItem],
+    req_pods: int,
+    tolerance: float = 0.01,
+    prescan: int = 9,
+    solver: Callable[[Sequence[CandidateItem], int, float], Optional[List[int]]] = solve_ilp,
+) -> Tuple[Optional[NodePool], GssTrace]:
+    """Guarded GSS (beyond-paper robustness hardening, DESIGN.md §7).
+
+    The paper's Fig. 6 landscapes are empirically unimodal; a synthetic or
+    adversarial market can produce secondary bumps that trap pure GSS in the
+    wrong bracket.  We first scan ``prescan`` equispaced α (constant extra
+    ILP solves), then run Algorithm 1 inside the grid cell bracketing the
+    best scan point.  Degrades gracefully to pure GSS quality on unimodal
+    landscapes; strictly better on bumpy ones.
+    """
+    grid = [i / (prescan - 1) for i in range(prescan)]
+    best_pool, best_f, best_idx = None, float("-inf"), 0
+    scan_trace = GssTrace()
+    t0 = time.perf_counter()
+    for gi, alpha in enumerate(grid):
+        counts = solver(items, req_pods, alpha)
+        scan_trace.ilp_solves += 1
+        if counts is None:
+            score = float("-inf")
+            pool = None
+        else:
+            pool = NodePool(items=list(items), counts=counts, alpha=alpha)
+            score = e_total(pool, req_pods)
+        scan_trace.alphas.append(alpha)
+        scan_trace.e_totals.append(max(score, 0.0))
+        if score > best_f:
+            best_pool, best_f, best_idx = pool, score, gi
+
+    lo = grid[max(0, best_idx - 1)]
+    hi = grid[min(len(grid) - 1, best_idx + 1)]
+    pool, trace = golden_section_search(items, req_pods, tolerance=tolerance,
+                                        alpha_lo=lo, alpha_hi=hi, solver=solver)
+    # merge traces and keep the global argmax
+    trace.alphas = scan_trace.alphas + trace.alphas
+    trace.e_totals = scan_trace.e_totals + trace.e_totals
+    trace.ilp_solves += scan_trace.ilp_solves
+    trace.wall_seconds = time.perf_counter() - t0
+    inner_f = e_total(pool, req_pods) if pool is not None else float("-inf")
+    if best_pool is not None and best_f > inner_f:
+        return best_pool.nonzero(), trace
+    return pool, trace

@@ -1,0 +1,155 @@
+"""The full KubePACS pipeline (paper §3 + §4): preprocessing → ILP×GSS →
+node pool, plus the reactive spot-interruption handling loop of §4.1.
+
+`KubePACSProvisioner` is the controller-side object the data plane talks to:
+
+    decision = provisioner.provision(request, market.snapshot())
+    ...
+    events = market.interrupts_for_pool(decision.pool.as_dict())
+    replacement = provisioner.handle_interrupts(events, request, market.snapshot())
+
+Interrupted offerings land in the `UnavailableOfferingsCache` (TTL'd) and are
+excluded from the next optimization cycle, mirroring the Karpenter-fork
+implementation in the paper.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import Dict, Iterable, List, Optional, Sequence, Set
+
+from .efficiency import CandidateItem, NodePool, Request, e_over_pods, e_perf_cost, e_total, pods_per_instance
+from .gss import GssTrace, bracketed_gss, golden_section_search
+from .market import InterruptEvent, Offering
+from .scaling import build_base_price_index, scaled_benchmark_score
+
+
+class UnavailableOfferingsCache:
+    """TTL cache of interrupted offerings excluded from re-optimization."""
+
+    def __init__(self, ttl_hours: float = 2.0):
+        self.ttl = ttl_hours
+        self._entries: Dict[str, float] = {}   # offering_id -> expiry time
+
+    def add(self, offering_id: str, now: float) -> None:
+        self._entries[offering_id] = now + self.ttl
+
+    def excluded(self, now: float) -> Set[str]:
+        self._entries = {k: v for k, v in self._entries.items() if v > now}
+        return set(self._entries)
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+
+@dataclasses.dataclass
+class ProvisioningDecision:
+    pool: NodePool
+    trace: Optional[GssTrace]
+    alpha: Optional[float]
+    wall_seconds: float
+    excluded_offerings: Set[str]
+    metrics: Dict[str, float]
+
+
+def preprocess(catalog: Sequence[Offering], request: Request,
+               excluded: Optional[Set[str]] = None) -> List[CandidateItem]:
+    """Stage 1 of Algorithm 1 (DatasetPreProcessing, lines 3–6)."""
+    excluded = excluded or set()
+    base_prices = build_base_price_index(catalog)
+    items: List[CandidateItem] = []
+    for o in catalog:
+        if o.offering_id in excluded or o.spot_price <= 0 or o.t3 <= 0:
+            continue
+        pods = pods_per_instance(o, request)
+        if pods < 1:
+            continue
+        bs = scaled_benchmark_score(o, set(request.workload), base_prices)
+        items.append(CandidateItem(offering=o, pods=pods, bs=bs,
+                                   spot_price=o.spot_price, t3=o.t3))
+    return items
+
+
+class KubePACSProvisioner:
+    """ILP + GSS provisioning with §4.1 interrupt handling."""
+
+    def __init__(self, tolerance: float = 0.01, ttl_hours: float = 2.0,
+                 guarded_gss: bool = True):
+        self.tolerance = tolerance
+        self.guarded_gss = guarded_gss   # bracketed prescan (DESIGN.md §7)
+        self.cache = UnavailableOfferingsCache(ttl_hours)
+        self.event_queue: collections.deque[InterruptEvent] = collections.deque()
+        self.clock = 0.0   # advanced by the caller (simulator hours)
+
+    # -- main optimization cycle -------------------------------------------
+    def provision(self, request: Request, catalog: Sequence[Offering],
+                  ) -> ProvisioningDecision:
+        t0 = time.perf_counter()
+        excluded = self.cache.excluded(self.clock)
+        items = preprocess(catalog, request, excluded)
+        search = bracketed_gss if self.guarded_gss else golden_section_search
+        pool, trace = search(items, request.pods, tolerance=self.tolerance)
+        wall = time.perf_counter() - t0
+        if pool is None:   # demand exceeds bounded capacity: surface it
+            pool = NodePool(items=[], counts=[], request=request)
+            metrics = {"e_total": 0.0, "e_perf_cost": 0.0, "e_over_pods": 0.0}
+            alpha = None
+        else:
+            pool.request = request
+            metrics = {
+                "e_total": e_total(pool, request.pods),
+                "e_perf_cost": e_perf_cost(pool),
+                "e_over_pods": e_over_pods(pool, request.pods),
+                "hourly_cost": pool.hourly_cost,
+                "nodes": float(pool.total_nodes),
+                "pods": float(pool.total_pods),
+            }
+            alpha = pool.alpha
+        return ProvisioningDecision(pool=pool, trace=trace, alpha=alpha,
+                                    wall_seconds=wall,
+                                    excluded_offerings=excluded,
+                                    metrics=metrics)
+
+    # -- §4.1 reactive loop ---------------------------------------------------
+    def enqueue(self, events: Iterable[InterruptEvent]) -> None:
+        """Spot Interrupt Event Messages → Spot Interrupt Event Queue."""
+        self.event_queue.extend(events)
+
+    def handle_interrupts(self, request: Request,
+                          catalog: Sequence[Offering],
+                          surviving_pods: int = 0,
+                          ) -> Optional[ProvisioningDecision]:
+        """Drain the queue, cache interrupted offerings, re-optimize.
+
+        ``surviving_pods`` is the capacity still alive in the cluster; the
+        replacement request covers only the shortfall (rapid recovery, §4.1).
+        Returns None when the queue was empty or nothing is missing.
+        """
+        drained = False
+        while self.event_queue:
+            ev = self.event_queue.popleft()
+            self.cache.add(ev.offering_id, self.clock)
+            drained = True
+        if not drained:
+            return None
+        shortfall = max(0, request.pods - surviving_pods)
+        if shortfall == 0:
+            return None
+        repl_request = dataclasses.replace(request, pods=shortfall)
+        return self.provision(repl_request, catalog)
+
+
+def merge_pools(base: NodePool, extra: NodePool) -> NodePool:
+    """Union of two decisions (replacement capacity joins the survivors)."""
+    counts: Dict[str, int] = collections.Counter()
+    items: Dict[str, CandidateItem] = {}
+    for pool in (base, extra):
+        for it, c in zip(pool.items, pool.counts):
+            counts[it.offering.offering_id] += c
+            items[it.offering.offering_id] = it
+    merged_items = list(items.values())
+    merged_counts = [counts[it.offering.offering_id] for it in merged_items]
+    return NodePool(items=merged_items, counts=merged_counts,
+                    alpha=base.alpha, request=base.request)

@@ -1,0 +1,3 @@
+from .pipeline import DataConfig, make_batch, batch_specs, batch_pspecs
+
+__all__ = ["DataConfig", "make_batch", "batch_specs", "batch_pspecs"]

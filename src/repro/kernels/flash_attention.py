@@ -1,0 +1,126 @@
+"""Pallas TPU flash attention (online softmax, causal, GQA via index_map).
+
+TPU-native design (DESIGN.md §6): q/k/v tiles live in VMEM with MXU-aligned
+block shapes (multiples of 128 on the contracting/lane dims); the kv axis is
+the innermost grid dimension so the (m, l, acc) scratch accumulators persist
+across kv blocks — the canonical TPU flash schedule.  GQA never materializes
+repeated KV heads: the k/v BlockSpec index_map folds the query-head index h
+onto its kv head h // G.
+
+Validated in interpret mode on CPU against ``ref.flash_attention_ref`` /
+``ref.attention_naive`` (tests/test_kernels.py sweeps shapes and dtypes).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = float("-inf")
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  causal: bool, q_offset: int, kv_len: Optional[int],
+                  q_chunk: int, kv_chunk: int, n_kv_blocks: int, scale: float):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)            # (qc, hd)
+    k = k_ref[0, 0].astype(jnp.float32)            # (kc, hd)
+    v = v_ref[0, 0].astype(jnp.float32)            # (kc, hd)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale  # (qc, kc)
+
+    qpos = q_offset + iq * q_chunk + jax.lax.broadcasted_iota(
+        jnp.int32, (q_chunk, kv_chunk), 0)
+    tpos = ik * kv_chunk + jax.lax.broadcasted_iota(
+        jnp.int32, (q_chunk, kv_chunk), 1)
+    mask = jnp.ones((q_chunk, kv_chunk), jnp.bool_)
+    if causal:
+        mask &= tpos <= qpos
+    if kv_len is not None:
+        mask &= tpos < kv_len
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    l_prev = l_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1))
+    safe_m = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+    p = jnp.exp(s - safe_m[:, None])
+    p = jnp.where(jnp.isfinite(s), p, 0.0)
+    corr = jnp.where(jnp.isfinite(m_prev), jnp.exp(m_prev - safe_m), 0.0)
+    l_new = l_prev * corr + p.sum(axis=-1)
+    acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())))
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+    @pl.when(ik == n_kv_blocks - 1)
+    def _finalize():
+        denom = jnp.maximum(l_ref[...], 1e-37)[:, None]
+        o_ref[0, 0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                           causal: bool = True, q_offset: int = 0,
+                           kv_len: Optional[int] = None,
+                           q_chunk: int = 256, kv_chunk: int = 256,
+                           interpret: bool = False) -> jax.Array:
+    """q:(B,Sq,H,hd)  k,v:(B,Skv,KV,hd) -> (B,Sq,H,hd)."""
+    b, sq, h, hd = q.shape
+    skv, kv = k.shape[1], k.shape[2]
+    assert h % kv == 0
+    g = h // kv
+    q_chunk = min(q_chunk, sq)
+    kv_chunk = min(kv_chunk, skv)
+    assert sq % q_chunk == 0 and skv % kv_chunk == 0
+    nq, nk = sq // q_chunk, skv // kv_chunk
+
+    # layout: (B, H, S, hd) — head-major so each grid cell owns one head
+    qt = jnp.moveaxis(q, 2, 1)
+    kt = jnp.moveaxis(k, 2, 1)
+    vt = jnp.moveaxis(v, 2, 1)
+
+    grid = (b, h, nq, nk)
+    kernel = functools.partial(
+        _flash_kernel, causal=causal, q_offset=q_offset, kv_len=kv_len,
+        q_chunk=q_chunk, kv_chunk=kv_chunk, n_kv_blocks=nk,
+        scale=1.0 / (hd ** 0.5))
+
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, q_chunk, hd),
+                         lambda ib, ih, iq, ik: (ib, ih, iq, 0)),
+            pl.BlockSpec((1, 1, kv_chunk, hd),
+                         lambda ib, ih, iq, ik, g=g: (ib, ih // g, ik, 0)),
+            pl.BlockSpec((1, 1, kv_chunk, hd),
+                         lambda ib, ih, iq, ik, g=g: (ib, ih // g, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, q_chunk, hd),
+                               lambda ib, ih, iq, ik: (ib, ih, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, sq, hd), q.dtype),
+        scratch_shapes=[
+            _vmem((q_chunk,), jnp.float32),        # m: running max
+            _vmem((q_chunk,), jnp.float32),        # l: running denominator
+            _vmem((q_chunk, hd), jnp.float32),     # acc: running numerator
+        ],
+        interpret=interpret,
+    )(qt, kt, vt)
+    return jnp.moveaxis(out, 1, 2)
+
+
+def _vmem(shape, dtype):
+    from jax.experimental.pallas import tpu as pltpu
+    return pltpu.VMEM(shape, dtype)

@@ -1,0 +1,164 @@
+"""Jit'd dispatch wrappers: Pallas on TPU, jnp reference elsewhere.
+
+The model layer calls these; ``impl`` resolution:
+  * "auto"     — pallas on TPU backends, chunked jnp reference otherwise
+  * "pallas"   — force pallas (compiled on TPU, interpret=True elsewhere)
+  * "chunked"  — chunked jnp reference (flash-style, bounded memory)
+  * "naive"    — O(S²) reference (tests/small shapes only)
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .flash_attention import flash_attention_pallas
+from .mamba_scan import selective_scan_pallas
+from .. import sharding
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _constrain_qkv(q, k, v):
+    """Apply the active attention parallelism mode (sharding.flash_mode)."""
+    mode = sharding.flash_mode(q.shape[0], q.shape[1])
+    if mode == "ulysses":
+        spec = sharding.ulysses_spec(4)
+        return (sharding.constrain(q, spec), sharding.constrain(k, spec),
+                sharding.constrain(v, spec), mode)
+    if mode == "cp":
+        return (sharding.constrain(q, sharding.cp_q_spec(4)),
+                sharding.constrain(k, sharding.cp_kv_spec(4)),
+                sharding.constrain(v, sharding.cp_kv_spec(4)), mode)
+    return q, k, v, mode
+
+
+def _constrain_out(o, mode):
+    if mode == "ulysses":
+        return sharding.constrain(o, sharding.ulysses_spec(4))
+    if mode == "cp":
+        return sharding.constrain(o, sharding.cp_q_spec(4))
+    return o
+
+
+@functools.lru_cache(maxsize=None)
+def _diff_flash(causal: bool, impl: str, q_chunk: int, kv_chunk: int,
+                causal_skip: bool = False):
+    """custom_vjp flash attention: forward via the chosen impl, backward via
+    the block-recompute flash backward (O(block²) live memory — the inner
+    scans never stash their carries for autodiff)."""
+
+    def _chunks(q):
+        # context parallelism needs q chunks no larger than one seq shard
+        mode = sharding.flash_mode(q.shape[0], q.shape[1])
+        qc = q_chunk
+        if mode == "cp":
+            ctx = sharding.active()
+            msize = ctx[0].shape[ctx[1].model] if ctx else 1
+            qc = min(qc, max(q.shape[1] // msize, 1))
+        return qc, kv_chunk
+
+    def fwd_impl(q, k, v):
+        q, k, v, mode = _constrain_qkv(q, k, v)
+        qc, kc = _chunks(q)
+        skip = causal_skip and q.shape[1] // max(qc, 1) <= 64
+        if impl == "pallas":
+            o = flash_attention_pallas(
+                q, k, v, causal=causal, q_chunk=min(qc, 256),
+                kv_chunk=min(kc, 256), interpret=not _on_tpu())
+            # lse recomputed cheaply in fp32 chunks for the residual
+            _, lse = ref.flash_fwd_chunked(q, k, v, causal=causal,
+                                           q_chunk=qc, kv_chunk=kc)
+        else:
+            o, lse = ref.flash_fwd_chunked(q, k, v, causal=causal,
+                                           q_chunk=qc, kv_chunk=kc,
+                                           causal_skip=skip)
+        return _constrain_out(o, mode), lse
+
+    @jax.custom_vjp
+    def f(q, k, v):
+        return fwd_impl(q, k, v)[0]
+
+    def f_fwd(q, k, v):
+        o, lse = fwd_impl(q, k, v)
+        return o, (q, k, v, o, lse)
+
+    def f_bwd(res, do):
+        q, k, v, o, lse = res
+        q, k, v, mode = _constrain_qkv(q, k, v)
+        do = _constrain_out(do, mode)
+        qc, kc = _chunks(q)
+        dq, dk, dv = ref.flash_bwd_chunked(q, k, v, o, lse, do, causal=causal,
+                                           q_chunk=qc, kv_chunk=kc)
+        dq = _constrain_out(dq, mode)
+        if mode == "cp":
+            # dk/dv are partial over model shards; one reduction here
+            dk = sharding.constrain(dk, sharding.cp_kv_spec(4))
+            dv = sharding.constrain(dv, sharding.cp_kv_spec(4))
+        return dq, dk, dv
+
+    f.defvjp(f_fwd, f_bwd)
+    return f
+
+
+def flash_attention(q, k, v, *, causal=True, q_offset=0, kv_len=None,
+                    impl: str = "auto", q_chunk: int = 512,
+                    kv_chunk: int = 512, causal_skip: bool = False):
+    if impl == "auto":
+        impl = "pallas" if _on_tpu() else "chunked"
+    # Self-attention with static offsets: differentiable custom-vjp path.
+    if kv_len is None and impl in ("pallas", "chunked") and q_offset == 0:
+        return _diff_flash(causal, impl, q_chunk, kv_chunk,
+                           causal_skip)(q, k, v)
+    if impl == "pallas":
+        return flash_attention_pallas(
+            q, k, v, causal=causal, q_offset=q_offset, kv_len=kv_len,
+            q_chunk=min(q_chunk, 256), kv_chunk=min(kv_chunk, 256),
+            interpret=not _on_tpu())
+    if impl == "chunked":
+        return ref.flash_attention_ref(
+            q, k, v, causal=causal, q_offset=q_offset, kv_len=kv_len,
+            q_chunk=q_chunk, kv_chunk=kv_chunk)
+    if impl == "naive":
+        return ref.attention_naive(q, k, v, causal=causal, q_offset=q_offset,
+                                   kv_len=kv_len)
+    raise ValueError(f"unknown attention impl {impl!r}")
+
+
+def selective_scan(x, dt, A, Bmat, Cmat, D, *, h0=None, impl: str = "auto",
+                   chunk: int = 256):
+    """Returns (y, h_final).  The pallas path recomputes h_final cheaply."""
+    if impl == "auto":
+        impl = "pallas" if _on_tpu() else "chunked"
+    if impl == "pallas" and h0 is None:
+        y = selective_scan_pallas(x, dt, A, Bmat, Cmat, D, chunk=min(chunk, 128),
+                                  interpret=not _on_tpu())
+        # final state for cache handoff: one chunked pass over the tail chunk
+        _, h = ref.selective_scan_chunked(x[:, -chunk:], dt[:, -chunk:], A,
+                                          Bmat[:, -chunk:], Cmat[:, -chunk:],
+                                          D, h0=_tail_h0(x, dt, A, Bmat, Cmat, D, chunk),
+                                          chunk=chunk)
+        return y, h
+    if impl in ("pallas", "chunked"):
+        return ref.selective_scan_chunked(x, dt, A, Bmat, Cmat, D, h0=h0,
+                                          chunk=chunk)
+    if impl == "naive":
+        return ref.selective_scan_ref(x, dt, A, Bmat, Cmat, D, h0=h0)
+    raise ValueError(f"unknown scan impl {impl!r}")
+
+
+def _tail_h0(x, dt, A, Bmat, Cmat, D, chunk):
+    """State just before the last chunk (None when sequence is one chunk)."""
+    s = x.shape[1]
+    if s <= chunk:
+        return None
+    _, h = ref.selective_scan_chunked(x[:, :-chunk], dt[:, :-chunk], A,
+                                      Bmat[:, :-chunk], Cmat[:, :-chunk], D,
+                                      chunk=chunk)
+    return h

@@ -1,0 +1,324 @@
+"""Pure-jnp oracles for every Pallas kernel (and the CPU execution path).
+
+* :func:`attention_naive` — O(S²)-memory reference, small shapes only.
+* :func:`flash_attention_ref` — chunked online-softmax attention; numerically
+  the kernel's oracle AND the CPU/dry-run path (never materializes S×S).
+* :func:`selective_scan_ref` — sequential Mamba-1 selective scan oracle.
+* :func:`selective_scan_chunked` — chunked associative-scan formulation used
+  by the model on CPU (bounded memory, same math).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _gqa_fold(q, k):
+    """(B,Sq,H,hd),(B,Skv,KV,hd) -> group count G with H = KV*G."""
+    h, kv = q.shape[2], k.shape[2]
+    assert h % kv == 0, (h, kv)
+    return h // kv
+
+
+def attention_naive(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, q_offset: int = 0,
+                    kv_len: Optional[jax.Array] = None) -> jax.Array:
+    """Reference attention.  q:(B,Sq,H,hd) k,v:(B,Skv,KV,hd) -> (B,Sq,H,hd).
+
+    ``q_offset``: absolute position of q[0] (decode: cache length so far).
+    ``kv_len``: number of valid cache positions (rest masked), scalar.
+    """
+    b, sq, h, hd = q.shape
+    skv, kv = k.shape[1], k.shape[2]
+    g = _gqa_fold(q, k)
+    qg = q.reshape(b, sq, kv, g, hd)
+    scores = jnp.einsum("bqkgh,btkh->bkgqt", qg, k) / jnp.sqrt(
+        jnp.asarray(hd, q.dtype))
+    scores = scores.astype(jnp.float32)
+    qpos = q_offset + jnp.arange(sq)[:, None]
+    tpos = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask &= tpos <= qpos
+    if kv_len is not None:
+        mask &= tpos < kv_len
+    scores = jnp.where(mask, scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqt,btkh->bqkgh", probs.astype(v.dtype), v)
+    return out.reshape(b, sq, h, hd)
+
+
+def flash_attention_ref(q, k, v, *, causal=True, q_offset=0, kv_len=None,
+                        q_chunk: int = 512, kv_chunk: int = 512) -> jax.Array:
+    o, _ = flash_fwd_chunked(q, k, v, causal=causal, q_offset=q_offset,
+                             kv_len=kv_len, q_chunk=q_chunk,
+                             kv_chunk=kv_chunk)
+    return o
+
+
+def flash_fwd_chunked(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                      causal: bool = True, q_offset: int = 0,
+                      kv_len: Optional[jax.Array] = None,
+                      q_chunk: int = 512, kv_chunk: int = 512,
+                      causal_skip: bool = False):
+    """Online-softmax chunked attention; O(q_chunk·kv_chunk) live memory.
+    Returns (o, lse) where lse:(B,Sq,KV,G) is the row logsumexp (needed by
+    the recompute backward).
+
+    ``causal_skip``: unroll the q-block loop so each q block only scans kv
+    blocks at or below its diagonal — halves attention FLOPs for causal
+    self-attention (q_offset==0, aligned chunks) at O(nq) HLO growth."""
+    b, sq, h, hd = q.shape
+    skv, kv = k.shape[1], k.shape[2]
+    g = _gqa_fold(q, k)
+    q_chunk = min(q_chunk, sq)
+    kv_chunk = min(kv_chunk, skv)
+    assert sq % q_chunk == 0 and skv % kv_chunk == 0, (sq, q_chunk, skv, kv_chunk)
+    nq, nk = sq // q_chunk, skv // kv_chunk
+    scale = 1.0 / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+
+    qg = q.reshape(b, nq, q_chunk, kv, g, hd)
+    kb = k.reshape(b, nk, kv_chunk, kv, hd)
+    vb = v.reshape(b, nk, kv_chunk, kv, hd)
+
+    def q_block(iq, q_blk):
+        # q_blk: (b, q_chunk, kv, g, hd)
+        m0 = jnp.full((b, q_chunk, kv, g), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((b, q_chunk, kv, g), jnp.float32)
+        a0 = jnp.zeros((b, q_chunk, kv, g, hd), jnp.float32)
+
+        def kv_step(carry, ik_kv):
+            m, l, acc = carry
+            ik, k_blk, v_blk = ik_kv
+            s = jnp.einsum("bqkgh,btkh->bqkgt", q_blk, k_blk).astype(
+                jnp.float32) * scale
+            qpos = q_offset + iq * q_chunk + jnp.arange(q_chunk)[:, None]
+            tpos = ik * kv_chunk + jnp.arange(kv_chunk)[None, :]
+            mask = jnp.ones((q_chunk, kv_chunk), bool)
+            if causal:
+                mask &= tpos <= qpos
+            if kv_len is not None:
+                mask &= tpos < kv_len
+            s = jnp.where(mask[None, :, None, None, :], s, -jnp.inf)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            # rows with no valid key yet keep m=-inf; guard the exp
+            safe_m = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+            p = jnp.exp(s - safe_m[..., None])
+            p = jnp.where(jnp.isfinite(s), p, 0.0)
+            corr = jnp.where(jnp.isfinite(m), jnp.exp(m - safe_m), 0.0)
+            l = l * corr + p.sum(axis=-1)
+            pv = jnp.einsum("bqkgt,btkh->bqkgh", p.astype(v_blk.dtype), v_blk)
+            acc = acc * corr[..., None] + pv.astype(jnp.float32)
+            return (m_new, l, acc), None
+
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0),
+            (jnp.arange(nk), jnp.moveaxis(kb, 1, 0), jnp.moveaxis(vb, 1, 0)))
+        out = acc / jnp.maximum(l[..., None], 1e-37)
+        lse = jnp.where(jnp.isfinite(m), m + jnp.log(jnp.maximum(l, 1e-37)),
+                        -jnp.inf)
+        return out.astype(q.dtype), lse
+
+    if causal_skip and causal and kv_len is None and q_offset == 0 \
+            and q_chunk == kv_chunk:
+        # unrolled triangular schedule: q block i scans kv blocks 0..i
+        outs, lses = [], []
+        for iq in range(nq):
+            m0 = jnp.full((b, q_chunk, kv, g), -jnp.inf, jnp.float32)
+            l0 = jnp.zeros((b, q_chunk, kv, g), jnp.float32)
+            a0 = jnp.zeros((b, q_chunk, kv, g, hd), jnp.float32)
+            q_blk = qg[:, iq]
+
+            def kv_step(carry, ik_kv, iq=iq, q_blk=q_blk):
+                m, l, acc = carry
+                ik, k_blk, v_blk = ik_kv
+                s = jnp.einsum("bqkgh,btkh->bqkgt", q_blk, k_blk).astype(
+                    jnp.float32) * scale
+                qpos = iq * q_chunk + jnp.arange(q_chunk)[:, None]
+                tpos = ik * kv_chunk + jnp.arange(kv_chunk)[None, :]
+                s = jnp.where((tpos <= qpos)[None, :, None, None, :], s,
+                              -jnp.inf)
+                m_new = jnp.maximum(m, s.max(axis=-1))
+                safe_m = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+                p = jnp.exp(s - safe_m[..., None])
+                p = jnp.where(jnp.isfinite(s), p, 0.0)
+                corr = jnp.where(jnp.isfinite(m), jnp.exp(m - safe_m), 0.0)
+                l = l * corr + p.sum(axis=-1)
+                pv = jnp.einsum("bqkgt,btkh->bqkgh", p.astype(v_blk.dtype),
+                                v_blk)
+                acc = acc * corr[..., None] + pv.astype(jnp.float32)
+                return (m_new, l, acc), None
+
+            (m, l, acc), _ = jax.lax.scan(
+                kv_step, (m0, l0, a0),
+                (jnp.arange(iq + 1), jnp.moveaxis(kb[:, :iq + 1], 1, 0),
+                 jnp.moveaxis(vb[:, :iq + 1], 1, 0)))
+            outs.append((acc / jnp.maximum(l[..., None], 1e-37)
+                         ).astype(q.dtype))
+            lses.append(jnp.where(jnp.isfinite(m),
+                                  m + jnp.log(jnp.maximum(l, 1e-37)),
+                                  -jnp.inf))
+        out = jnp.stack(outs, axis=1).reshape(b, sq, h, hd)
+        lse = jnp.stack(lses, axis=1).reshape(b, sq, kv, g)
+        return out, lse
+
+    out, lse = jax.lax.map(lambda args: q_block(*args),
+                           (jnp.arange(nq), jnp.moveaxis(qg, 1, 0)))
+    out = jnp.moveaxis(out, 0, 1).reshape(b, sq, h, hd)
+    lse = jnp.moveaxis(lse, 0, 1).reshape(b, sq, kv, g)
+    return out, lse
+
+
+def flash_bwd_chunked(q, k, v, o, lse, do, *, causal=True, q_offset=0,
+                      kv_len=None, q_chunk: int = 512, kv_chunk: int = 512):
+    """Flash backward: recompute probabilities per (q, kv) block pair.
+
+    dv = pᵀ·do ;  dp = do·vᵀ ;  ds = p⊙(dp − Δ)·scale with Δ = Σ(do⊙o) ;
+    dq += ds·k ;  dk += dsᵀ·q.   Live memory is one block pair.
+    """
+    b, sq, h, hd = q.shape
+    skv, kv = k.shape[1], k.shape[2]
+    g = h // kv
+    q_chunk = min(q_chunk, sq)
+    kv_chunk = min(kv_chunk, skv)
+    nq, nk = sq // q_chunk, skv // kv_chunk
+    scale = 1.0 / (hd ** 0.5)
+
+    qg = q.reshape(b, nq, q_chunk, kv, g, hd)
+    og = o.reshape(b, nq, q_chunk, kv, g, hd)
+    dog = do.reshape(b, nq, q_chunk, kv, g, hd)
+    lseg = lse.reshape(b, nq, q_chunk, kv, g)
+    kb = k.reshape(b, nk, kv_chunk, kv, hd)
+    vb = v.reshape(b, nk, kv_chunk, kv, hd)
+    delta = jnp.sum(dog.astype(jnp.float32) * og.astype(jnp.float32),
+                    axis=-1)                                   # (b,nq,qc,kv,g)
+
+    def q_step(carry, inp):
+        dk_acc, dv_acc = carry
+        iq, q_blk, do_blk, lse_blk, delta_blk = inp
+
+        def kv_step(c2, inp2):
+            dq_blk, dk_acc, dv_acc = c2
+            ik, k_blk, v_blk = inp2
+            s = jnp.einsum("bqkgh,btkh->bqkgt", q_blk, k_blk).astype(
+                jnp.float32) * scale
+            qpos = q_offset + iq * q_chunk + jnp.arange(q_chunk)[:, None]
+            tpos = ik * kv_chunk + jnp.arange(kv_chunk)[None, :]
+            mask = jnp.ones((q_chunk, kv_chunk), bool)
+            if causal:
+                mask &= tpos <= qpos
+            if kv_len is not None:
+                mask &= tpos < kv_len
+            p = jnp.where(mask[None, :, None, None, :],
+                          jnp.exp(s - lse_blk[..., None]), 0.0)
+            dof = do_blk.astype(jnp.float32)
+            dv_blk = jnp.einsum("bqkgt,bqkgh->btkh", p, dof)
+            dp = jnp.einsum("bqkgh,btkh->bqkgt", dof,
+                            v_blk.astype(jnp.float32))
+            ds = p * (dp - delta_blk[..., None]) * scale
+            dq_blk = dq_blk + jnp.einsum("bqkgt,btkh->bqkgh", ds,
+                                         k_blk.astype(jnp.float32))
+            dk_blk = jnp.einsum("bqkgt,bqkgh->btkh", ds,
+                                q_blk.astype(jnp.float32))
+            dk_acc = jax.lax.dynamic_update_slice(
+                dk_acc, jax.lax.dynamic_slice(
+                    dk_acc, (0, ik * kv_chunk, 0, 0),
+                    (b, kv_chunk, kv, hd)) + dk_blk, (0, ik * kv_chunk, 0, 0))
+            dv_acc = jax.lax.dynamic_update_slice(
+                dv_acc, jax.lax.dynamic_slice(
+                    dv_acc, (0, ik * kv_chunk, 0, 0),
+                    (b, kv_chunk, kv, hd)) + dv_blk, (0, ik * kv_chunk, 0, 0))
+            return (dq_blk, dk_acc, dv_acc), None
+
+        dq0 = jnp.zeros((b, q_chunk, kv, g, hd), jnp.float32)
+        (dq_blk, dk_acc, dv_acc), _ = jax.lax.scan(
+            kv_step, (dq0, dk_acc, dv_acc),
+            (jnp.arange(nk), jnp.moveaxis(kb, 1, 0), jnp.moveaxis(vb, 1, 0)))
+        return (dk_acc, dv_acc), dq_blk
+
+    dk0 = jnp.zeros((b, skv, kv, hd), jnp.float32)
+    dv0 = jnp.zeros((b, skv, kv, hd), jnp.float32)
+    (dk, dv), dq = jax.lax.scan(
+        q_step, (dk0, dv0),
+        (jnp.arange(nq), jnp.moveaxis(qg, 1, 0), jnp.moveaxis(dog, 1, 0),
+         jnp.moveaxis(lseg, 1, 0), jnp.moveaxis(delta, 1, 0)))
+    dq = jnp.moveaxis(dq, 0, 1).reshape(b, sq, h, hd).astype(q.dtype)
+    return dq, dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Mamba-1 selective scan
+# ---------------------------------------------------------------------------
+
+def selective_scan_ref(x: jax.Array, dt: jax.Array, A: jax.Array,
+                       Bmat: jax.Array, Cmat: jax.Array, D: jax.Array,
+                       h0: Optional[jax.Array] = None,
+                       ) -> Tuple[jax.Array, jax.Array]:
+    """Sequential oracle.  x,dt:(B,S,di)  A:(di,N)  Bmat,Cmat:(B,S,N)  D:(di,)
+
+    h_t = exp(dt_t·A)·h_{t-1} + (dt_t·x_t)·B_t ;  y_t = (h_t·C_t).sum + D·x_t
+    Returns (y:(B,S,di), h_final:(B,di,N)).
+    """
+    b, s, di = x.shape
+    n = A.shape[1]
+    h_init = jnp.zeros((b, di, n), jnp.float32) if h0 is None else h0.astype(jnp.float32)
+
+    def step(h, inputs):
+        xt, dtt, bt, ct = inputs      # (B,di), (B,di), (B,N), (B,N)
+        decay = jnp.exp(dtt.astype(jnp.float32)[..., None] * A[None].astype(jnp.float32))
+        h = decay * h + (dtt * xt).astype(jnp.float32)[..., None] * bt.astype(jnp.float32)[:, None, :]
+        y = (h * ct.astype(jnp.float32)[:, None, :]).sum(-1) + D.astype(jnp.float32) * xt.astype(jnp.float32)
+        return h, y
+
+    h, ys = jax.lax.scan(step, h_init,
+                         (jnp.moveaxis(x, 1, 0), jnp.moveaxis(dt, 1, 0),
+                          jnp.moveaxis(Bmat, 1, 0), jnp.moveaxis(Cmat, 1, 0)))
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype), h
+
+
+def selective_scan_chunked(x: jax.Array, dt: jax.Array, A: jax.Array,
+                           Bmat: jax.Array, Cmat: jax.Array, D: jax.Array,
+                           h0: Optional[jax.Array] = None, chunk: int = 256,
+                           ) -> Tuple[jax.Array, jax.Array]:
+    """Chunked associative-scan formulation (bounded memory, parallel in-chunk).
+
+    Composition law for h' = a·h + b:  (a2,b2)∘(a1,b1) = (a1·a2, a2·b1 + b2).
+    """
+    b, s, di = x.shape
+    n = A.shape[1]
+    chunk = min(chunk, s)
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+    h_init = jnp.zeros((b, di, n), jnp.float32) if h0 is None else h0.astype(jnp.float32)
+    Af = A.astype(jnp.float32)
+
+    xs = (jnp.moveaxis(x.reshape(b, nc, chunk, di), 1, 0),
+          jnp.moveaxis(dt.reshape(b, nc, chunk, di), 1, 0),
+          jnp.moveaxis(Bmat.reshape(b, nc, chunk, n), 1, 0),
+          jnp.moveaxis(Cmat.reshape(b, nc, chunk, n), 1, 0))
+
+    def chunk_step(h, inputs):
+        xc, dtc, bc, cc = inputs      # (B,chunk,di), (B,chunk,di), (B,chunk,N) ×2
+        dtf = dtc.astype(jnp.float32)
+        decay = jnp.exp(dtf[..., None] * Af[None, None])             # (B,c,di,N)
+        inc = (dtf * xc.astype(jnp.float32))[..., None] * \
+            bc.astype(jnp.float32)[:, :, None, :]                    # (B,c,di,N)
+
+        def combine(e1, e2):
+            a1, b1 = e1
+            a2, b2 = e2
+            return a1 * a2, a2 * b1 + b2
+
+        a_cum, b_cum = jax.lax.associative_scan(combine, (decay, inc), axis=1)
+        hs = a_cum * h[:, None] + b_cum                              # (B,c,di,N)
+        y = (hs * cc.astype(jnp.float32)[:, :, None, :]).sum(-1) \
+            + D.astype(jnp.float32) * xc.astype(jnp.float32)
+        return hs[:, -1], y
+
+    h, ys = jax.lax.scan(chunk_step, h_init, xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, s, di).astype(x.dtype)
+    return y, h

@@ -1,0 +1,251 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this builds the production mesh (16×16 single-pod, 2×16×16
+multi-pod) from 512 placeholder host devices, lowers the jitted step
+(train_step / prefill / serve_step per the shape's kind) against
+ShapeDtypeStruct stand-ins (zero allocation), compiles it, and records:
+
+  * memory_analysis() / static per-device argument bytes (fits-check)
+  * cost_analysis() FLOPs + bytes accessed (roofline compute/memory terms)
+  * parsed collective wire bytes from the partitioned HLO (collective term)
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen2.5-14b --shape train_4k
+  python -m repro.launch.dryrun --arch all --shape all --multi-pod --out f.jsonl
+Exit code != 0 on any cell failure (sharding mismatch, compile error).
+"""
+
+import argparse
+import dataclasses
+import json
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from .. import optim, roofline, serving, sharding
+from ..configs import SHAPES, get_config, list_archs, shape_applicable
+from ..data.pipeline import batch_pspecs, batch_specs
+from ..models import transformer
+from ..train.loop import make_sharded_train_step
+from .mesh import make_production_mesh
+
+
+def _abstract_opt(cfg):
+    aparams = transformer.abstract_params(cfg)
+    f32 = lambda sds: jax.ShapeDtypeStruct(sds.shape, jnp.float32)
+    return {"m": jax.tree.map(f32, aparams),
+            "v": jax.tree.map(f32, aparams),
+            "step": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+def _tree_device_bytes(tree, pspec_tree, mesh) -> float:
+    """Per-device bytes of a sharded abstract tree."""
+    leaves = jax.tree.leaves(tree)
+    specs = jax.tree.leaves(pspec_tree,
+                            is_leaf=lambda x: isinstance(x, P) or x is None)
+    total = 0.0
+    for leaf, spec in zip(leaves, specs):
+        n = int(np.prod(leaf.shape)) if leaf.shape else 1
+        denom = 1
+        if isinstance(spec, P):
+            for ax in spec:
+                if ax is None:
+                    continue
+                for a in (ax if isinstance(ax, tuple) else (ax,)):
+                    denom *= mesh.shape[a]
+        total += n * jnp.dtype(leaf.dtype).itemsize / denom
+    return total
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+             fsdp: bool = False, seq_act: bool = True, attn_mode: str = "none",
+             ep_shard_map: bool = False, causal_skip: bool = False,
+             attn_chunk: int = None,
+             remat: str = None, capacity_factor: float = None,
+             verbose: bool = True) -> dict:
+    cfg = get_config(arch)
+    overrides = {}
+    if remat is not None:
+        overrides["remat_policy"] = remat
+    if capacity_factor is not None:
+        overrides["capacity_factor"] = capacity_factor
+    if fsdp:
+        overrides["fsdp"] = True
+    if causal_skip:
+        overrides["attn_causal_skip"] = True
+    if attn_chunk:
+        overrides["attn_chunk_q"] = attn_chunk
+        overrides["attn_chunk_kv"] = attn_chunk
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    shape = SHAPES[shape_name]
+    rec = {"arch": arch, "shape": shape_name,
+           "mesh": "2x16x16" if multi_pod else "16x16",
+           "fsdp": fsdp, "seq_act": seq_act, "attn_mode": attn_mode,
+           "ep_shard_map": ep_shard_map,
+           "remat": cfg.remat_policy, "capacity_factor": cfg.capacity_factor}
+
+    if not shape_applicable(cfg, shape):
+        rec["status"] = "skipped"
+        rec["reason"] = ("long_500k requires sub-quadratic token mixing; "
+                         f"{cfg.family} is full-attention (DESIGN.md §4)")
+        return rec
+
+    long_ctx = shape.name == "long_500k"
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mk_rules = (sharding.multi_pod_rules if multi_pod
+                else sharding.single_pod_rules)
+    rules = mk_rules(fsdp=cfg.fsdp, long_context=long_ctx)
+    rules = dataclasses.replace(rules, seq_act=seq_act, attn_mode=attn_mode,
+                                ep_shard_map=ep_shard_map)
+    n_dev = mesh.devices.size
+
+    t0 = time.perf_counter()
+    with sharding.mesh_context(mesh, rules):
+        aparams = transformer.abstract_params(cfg)
+        bspecs = batch_specs(cfg, shape)
+        bpspecs = batch_pspecs(cfg, shape, rules)
+
+        if shape.kind == "train":
+            step = make_sharded_train_step(cfg, optim.OptConfig(), rules,
+                                           bpspecs, donate=False)
+            lowered = step.lower(aparams, _abstract_opt(cfg), bspecs)
+            arg_bytes = (_tree_device_bytes(aparams,
+                                            transformer.param_pspecs(cfg, rules), mesh) * 3.0)
+        elif shape.kind == "prefill":
+            step = serving.make_sharded_prefill(cfg, rules, bpspecs,
+                                                max_len=shape.seq_len)
+            lowered = step.lower(aparams, bspecs)
+            arg_bytes = _tree_device_bytes(
+                aparams, transformer.param_pspecs(cfg, rules), mesh)
+        else:                                     # decode
+            acache = transformer.abstract_cache(cfg, shape.global_batch,
+                                                shape.seq_len)
+            step = serving.make_sharded_decode(cfg, rules, bpspecs,
+                                               long_context=long_ctx,
+                                               donate=False)
+            pos = jax.ShapeDtypeStruct((), jnp.int32)
+            lowered = step.lower(aparams, acache, bspecs, pos)
+            arg_bytes = (_tree_device_bytes(
+                aparams, transformer.param_pspecs(cfg, rules), mesh)
+                + _tree_device_bytes(
+                    acache, transformer.cache_pspecs(cfg, rules, long_ctx),
+                    mesh))
+        t_lower = time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        compiled = lowered.compile()
+        t_compile = time.perf_counter() - t0
+
+    cost = compiled.cost_analysis() or {}
+    try:
+        mem = compiled.memory_analysis()
+        mem_info = {
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+        }
+    except Exception:
+        mem_info = {}
+
+    # loop-aware HLO walk (cost_analysis counts while bodies once — see
+    # roofline.py docstring); cost_analysis kept as a cross-check floor
+    hlo = compiled.as_text()
+    hc = roofline.analyze_hlo(hlo, n_dev)
+
+    from ..models.transformer import active_params
+    rl = roofline.Roofline(
+        flops_per_device=hc.flops,
+        bytes_per_device=hc.bytes,
+        wire_bytes_per_device=hc.wire_bytes,
+        n_devices=n_dev,
+        model_flops_global=roofline.model_flops(cfg, shape,
+                                                active_params(cfg)))
+
+    rec.update({
+        "status": "ok",
+        "n_devices": n_dev,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "arg_bytes_per_device": arg_bytes,
+        "memory_analysis": mem_info,
+        "collectives": {k: round(v) for k, v in hc.wire_by_op.items()},
+        "n_collectives": hc.n_collectives,
+        "unknown_trip_counts": hc.unknown_trip_counts,
+        "xla_cost_flops": float(cost.get("flops", 0.0)),
+        "xla_cost_bytes": float(cost.get("bytes accessed", 0.0)),
+        **rl.as_dict(),
+    })
+    if verbose:
+        fits = arg_bytes + (mem_info.get("temp_bytes") or 0)
+        print(f"[dryrun] {arch} × {shape_name} × {rec['mesh']}: "
+              f"compile {t_compile:.1f}s  "
+              f"flops/dev {rl.flops_per_device:.3e}  "
+              f"bytes/dev {rl.bytes_per_device:.3e}  "
+              f"wire/dev {rl.wire_bytes_per_device:.3e}  "
+              f"bound={rl.bound}  frac={rl.roofline_fraction:.3f}  "
+              f"args+temp/dev {fits/1e9:.2f} GB "
+              f"({'fits' if fits <= roofline.HBM_BYTES else 'EXCEEDS'} 16GB)")
+        print(f"[dryrun]   memory_analysis: {mem_info}")
+        print(f"[dryrun]   cost_analysis: flops={cost.get('flops')}, "
+              f"bytes accessed={cost.get('bytes accessed')}")
+    return rec
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--fsdp", action="store_true")
+    ap.add_argument("--attn-mode", default="none",
+                    choices=["none", "auto", "ulysses", "cp"])
+    ap.add_argument("--ep-shard-map", action="store_true")
+    ap.add_argument("--causal-skip", action="store_true")
+    ap.add_argument("--attn-chunk", type=int, default=None)
+    ap.add_argument("--no-seq-act", action="store_true")
+    ap.add_argument("--remat", default=None)
+    ap.add_argument("--capacity-factor", type=float, default=None)
+    ap.add_argument("--out", default=None, help="append JSONL records here")
+    args = ap.parse_args(argv)
+
+    archs = list_archs() if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    failures = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                try:
+                    rec = run_cell(arch, shape, multi_pod=mp, fsdp=args.fsdp,
+                                   seq_act=not args.no_seq_act,
+                                   attn_mode=args.attn_mode,
+                                   ep_shard_map=args.ep_shard_map,
+                                   causal_skip=args.causal_skip,
+                                   attn_chunk=args.attn_chunk,
+                                   remat=args.remat,
+                                   capacity_factor=args.capacity_factor)
+                except Exception as e:   # noqa: BLE001 — cell failure is a bug
+                    traceback.print_exc()
+                    rec = {"arch": arch, "shape": shape,
+                           "mesh": "2x16x16" if mp else "16x16",
+                           "status": "failed", "error": repr(e)}
+                    failures += 1
+                if args.out:
+                    with open(args.out, "a") as f:
+                        f.write(json.dumps(rec) + "\n")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

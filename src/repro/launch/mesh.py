@@ -1,0 +1,22 @@
+"""Production meshes.  Functions, not module constants: importing this module
+never touches jax device state (the dry-run sets XLA_FLAGS first)."""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: 256 chips (16,16) over ("data","model").
+    Multi-pod: 2 pods = 512 chips (2,16,16) over ("pod","data","model")."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh(model_parallel: int = 1):
+    """Mesh over whatever devices exist locally (examples/tests)."""
+    n = jax.device_count()
+    assert n % model_parallel == 0
+    return jax.make_mesh((n // model_parallel, model_parallel),
+                         ("data", "model"))

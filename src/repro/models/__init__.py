@@ -1,0 +1,10 @@
+"""Pure-JAX model zoo: heterogeneous attention/Mamba/MoE decoder stacks."""
+
+from .transformer import (init_params, abstract_params, param_pspecs,
+                          loss_fn, forward, prefill, decode_step,
+                          init_cache, abstract_cache, cache_pspecs,
+                          count_params, active_params)
+
+__all__ = ["init_params", "abstract_params", "param_pspecs", "loss_fn",
+           "forward", "prefill", "decode_step", "init_cache",
+           "abstract_cache", "cache_pspecs", "count_params", "active_params"]

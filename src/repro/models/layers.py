@@ -1,0 +1,176 @@
+"""Shared layers: norms, rotary embeddings, GQA attention, SwiGLU MLP.
+
+Parameters are plain dicts; each module exposes ``*_schema(cfg)`` (shapes +
+logical sharding axes + init spec) and ``*_apply(params, ...)``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .. import sharding
+from ..configs.base import ModelConfig
+from ..kernels import ops
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    init: Tuple = ("normal", 0.02)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def norm_schema(cfg: ModelConfig) -> Dict[str, ParamDef]:
+    d = {"scale": ParamDef((cfg.d_model,), (None,), ("ones",))}
+    if cfg.norm == "layernorm":
+        d["bias"] = ParamDef((cfg.d_model,), (None,), ("zeros",))
+    return d
+
+
+def norm_apply(p, x, kind: str, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        xf = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+        return (xf * p["scale"].astype(jnp.float32)).astype(x.dtype)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    xf = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (xf * p["scale"] + p["bias"]).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings (partial rotary supported — stablelm)
+# ---------------------------------------------------------------------------
+
+def rope(x: jax.Array, positions: jax.Array, theta: float, pct: float) -> jax.Array:
+    """x: (B,S,H,hd); positions: (S,) absolute positions."""
+    hd = x.shape[-1]
+    rot = int(hd * pct)
+    rot -= rot % 2
+    if rot == 0:
+        return x
+    xr, xp = x[..., :rot], x[..., rot:]
+    half = rot // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[:, None] * freqs[None, :]   # (S, half)
+    cos = jnp.cos(ang)[None, :, None, :]
+    sin = jnp.sin(ang)[None, :, None, :]
+    x1, x2 = xr[..., :half], xr[..., half:]
+    xr = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return jnp.concatenate([xr.astype(x.dtype), xp], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention
+# ---------------------------------------------------------------------------
+
+def attn_schema(cfg: ModelConfig) -> Dict[str, ParamDef]:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    qd, kvd = cfg.n_heads * hd, cfg.n_kv_heads * hd
+    wscale = 0.02 / (2 * cfg.n_layers) ** 0.5
+    s = {
+        "wq": ParamDef((d, qd), ("embed", "q")),
+        "wk": ParamDef((d, kvd), ("embed", "kv")),
+        "wv": ParamDef((d, kvd), ("embed", "kv")),
+        "wo": ParamDef((qd, d), ("q", "embed"), ("normal", wscale)),
+    }
+    if cfg.qkv_bias:
+        s["bq"] = ParamDef((qd,), ("q",), ("zeros",))
+        s["bk"] = ParamDef((kvd,), ("kv",), ("zeros",))
+        s["bv"] = ParamDef((kvd,), ("kv",), ("zeros",))
+    return s
+
+
+def attn_apply(p, x: jax.Array, cfg: ModelConfig, *,
+               cache: Optional[Dict[str, jax.Array]] = None,
+               pos: Optional[jax.Array] = None,
+               make_cache: bool = False):
+    """Pre-normed input -> attention output.
+
+    Modes: train/no-cache (causal self-attn), prefill (make_cache=True,
+    returns populated cache), decode (cache given, x is the new token(s),
+    pos is the current cache length).
+    """
+    b, s, d = x.shape
+    hd = cfg.resolved_head_dim
+    h, kv = cfg.n_heads, cfg.n_kv_heads
+    dt = x.dtype
+
+    q = (x @ p["wq"].astype(dt)).reshape(b, s, h, hd)
+    k = (x @ p["wk"].astype(dt)).reshape(b, s, kv, hd)
+    v = (x @ p["wv"].astype(dt)).reshape(b, s, kv, hd)
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(dt).reshape(h, hd)
+        k = k + p["bk"].astype(dt).reshape(kv, hd)
+        v = v + p["bv"].astype(dt).reshape(kv, hd)
+
+    offset = jnp.asarray(0, jnp.int32) if pos is None else pos
+    positions = offset + jnp.arange(s)
+    q = rope(q, positions, cfg.rope_theta, cfg.rope_pct)
+    k = rope(k, positions, cfg.rope_theta, cfg.rope_pct)
+
+    new_cache = None
+    if cache is not None:           # decode: append to cache, attend over it
+        kc = jax.lax.dynamic_update_slice(
+            cache["k"], k.astype(cache["k"].dtype), (0, offset, 0, 0))
+        vc = jax.lax.dynamic_update_slice(
+            cache["v"], v.astype(cache["v"].dtype), (0, offset, 0, 0))
+        new_cache = {"k": kc, "v": vc}
+        out = ops.flash_attention(
+            q, kc.astype(dt), vc.astype(dt), causal=True, q_offset=offset,
+            kv_len=offset + s,
+            impl="naive" if s == 1 else _impl(cfg),
+            q_chunk=cfg.attn_chunk_q, kv_chunk=cfg.attn_chunk_kv)
+    else:                           # train / prefill: causal self-attention
+        out = ops.flash_attention(
+            q, k, v, causal=True, impl=_impl(cfg),
+            q_chunk=cfg.attn_chunk_q, kv_chunk=cfg.attn_chunk_kv,
+            causal_skip=cfg.attn_causal_skip)
+        if make_cache:
+            new_cache = {"k": k, "v": v}
+
+    out = out.reshape(b, s, h * hd)
+    return out @ p["wo"].astype(dt), new_cache
+
+
+def _impl(cfg: ModelConfig) -> str:
+    if cfg.attention_impl != "auto":
+        return cfg.attention_impl
+    return "auto"
+
+
+def attn_cache_def(cfg: ModelConfig, batch: int, max_len: int):
+    hd = cfg.resolved_head_dim
+    shape = (batch, max_len, cfg.n_kv_heads, hd)
+    axes = ("batch", "seq", "kv_heads", "head_dim")
+    return {"k": ParamDef(shape, axes, ("zeros",)),
+            "v": ParamDef(shape, axes, ("zeros",))}
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP
+# ---------------------------------------------------------------------------
+
+def mlp_schema(cfg: ModelConfig) -> Dict[str, ParamDef]:
+    d, f = cfg.d_model, cfg.d_ff
+    wscale = 0.02 / (2 * cfg.n_layers) ** 0.5
+    return {
+        "wg": ParamDef((d, f), ("embed", "ff")),
+        "wu": ParamDef((d, f), ("embed", "ff")),
+        "wd": ParamDef((f, d), ("ff", "embed"), ("normal", wscale)),
+    }
+
+
+def mlp_apply(p, x: jax.Array) -> jax.Array:
+    dt = x.dtype
+    gate = jax.nn.silu(x @ p["wg"].astype(dt))
+    up = x @ p["wu"].astype(dt)
+    return (gate * up) @ p["wd"].astype(dt)

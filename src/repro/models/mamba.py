@@ -1,0 +1,124 @@
+"""Mamba-1 block: causal depthwise conv + selective scan (+ decode state).
+
+Parallel (train/prefill) path runs the chunked selective scan through
+``kernels.ops.selective_scan`` (Pallas on TPU, chunked associative scan on
+CPU).  Decode is a single recurrence step on (h, conv) state.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .. import sharding
+from ..configs.base import ModelConfig
+from ..kernels import ops
+from .layers import ParamDef
+
+
+def mamba_schema(cfg: ModelConfig) -> Dict[str, ParamDef]:
+    d, di, n = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    rank, kc = cfg.dt_rank, cfg.ssm_conv
+    wscale = 0.02 / (2 * cfg.n_layers) ** 0.5
+    return {
+        "in_proj": ParamDef((d, 2 * di), ("embed", "inner")),
+        "conv_w": ParamDef((kc, di), (None, "inner"), ("normal", 0.1)),
+        "conv_b": ParamDef((di,), ("inner",), ("zeros",)),
+        "x_proj": ParamDef((di, rank + 2 * n), ("inner", None)),
+        "dt_w": ParamDef((rank, di), (None, "inner")),
+        "dt_b": ParamDef((di,), ("inner",), ("dt_bias",)),
+        "a_log": ParamDef((di, n), ("inner", None), ("a_log",)),
+        "d_skip": ParamDef((di,), ("inner",), ("ones",)),
+        "out_proj": ParamDef((di, d), ("inner", "embed"), ("normal", wscale)),
+    }
+
+
+def _split_xz(p, x, cfg):
+    dt = x.dtype
+    xz = x @ p["in_proj"].astype(dt)                      # (B,S,2*di)
+    return jnp.split(xz, 2, axis=-1)
+
+
+def _ssm_params(p, xh, cfg):
+    dt_ = xh.dtype
+    n, rank = cfg.ssm_state, cfg.dt_rank
+    bcdt = xh @ p["x_proj"].astype(dt_)                   # (B,S,rank+2N)
+    dt_raw, bmat, cmat = jnp.split(bcdt, [rank, rank + n], axis=-1)
+    dt = jax.nn.softplus(
+        dt_raw @ p["dt_w"].astype(dt_) + p["dt_b"].astype(dt_))
+    A = -jnp.exp(p["a_log"].astype(jnp.float32))
+    return dt, A, bmat, cmat
+
+
+def mamba_apply(p, x: jax.Array, cfg: ModelConfig, *,
+                state: Optional[Dict[str, jax.Array]] = None,
+                make_cache: bool = False):
+    """x: (B,S,d).  state: {"h": (B,di,N), "conv": (B,kc-1,di)} for decode."""
+    if state is not None and x.shape[1] == 1:
+        return _mamba_decode(p, x, cfg, state)
+
+    b, s, d = x.shape
+    dt_ = x.dtype
+    kc = cfg.ssm_conv
+    xh, z = _split_xz(p, x, cfg)
+    xh = sharding.constrain(xh, sharding.mamba_conv_state_spec())
+
+    # causal depthwise conv over S (kernel kc)
+    pad = jnp.zeros((b, kc - 1, cfg.d_inner), dt_)
+    xp = jnp.concatenate([pad, xh], axis=1)               # (B,S+kc-1,di)
+    conv_w = p["conv_w"].astype(dt_)
+    xc = sum(xp[:, i:i + s] * conv_w[i] for i in range(kc)) \
+        + p["conv_b"].astype(dt_)
+    xc = jax.nn.silu(xc)
+
+    dt, A, bmat, cmat = _ssm_params(p, xc, cfg)
+    y, h = ops.selective_scan(xc, dt, A, bmat, cmat,
+                              p["d_skip"].astype(jnp.float32),
+                              impl=cfg.attention_impl if cfg.attention_impl
+                              in ("naive",) else "auto",
+                              chunk=cfg.mamba_chunk)
+    y = (y * jax.nn.silu(z)).astype(dt_)
+    out = y @ p["out_proj"].astype(dt_)
+
+    new_state = None
+    if make_cache:
+        new_state = {"h": h.astype(jnp.float32),
+                     "conv": xp[:, -(kc - 1):, :] if kc > 1 else
+                     jnp.zeros((b, 0, cfg.d_inner), dt_)}
+    return out, new_state
+
+
+def _mamba_decode(p, x, cfg, state):
+    """Single-token recurrence step."""
+    b, _, d = x.shape
+    dt_ = x.dtype
+    kc = cfg.ssm_conv
+    xh, z = _split_xz(p, x, cfg)                          # (B,1,di) each
+    conv_in = jnp.concatenate([state["conv"].astype(dt_), xh], axis=1)
+    conv_w = p["conv_w"].astype(dt_)
+    xc = sum(conv_in[:, i:i + 1] * conv_w[i] for i in range(kc)) \
+        + p["conv_b"].astype(dt_)
+    xc = jax.nn.silu(xc)                                  # (B,1,di)
+
+    dt, A, bmat, cmat = _ssm_params(p, xc, cfg)
+    dtf = dt[:, 0].astype(jnp.float32)                    # (B,di)
+    xf = xc[:, 0].astype(jnp.float32)
+    h = state["h"].astype(jnp.float32)                    # (B,di,N)
+    decay = jnp.exp(dtf[..., None] * A[None])
+    h = decay * h + (dtf * xf)[..., None] * bmat[:, 0].astype(jnp.float32)[:, None, :]
+    y = (h * cmat[:, 0].astype(jnp.float32)[:, None, :]).sum(-1) \
+        + p["d_skip"].astype(jnp.float32) * xf            # (B,di)
+    y = (y[:, None, :] * jax.nn.silu(z).astype(jnp.float32)).astype(dt_)
+    out = y @ p["out_proj"].astype(dt_)
+    new_state = {"h": h, "conv": conv_in[:, 1:, :]}
+    return out, new_state
+
+
+def mamba_state_def(cfg: ModelConfig, batch: int):
+    di, n, kc = cfg.d_inner, cfg.ssm_state, cfg.ssm_conv
+    return {"h": ParamDef((batch, di, n), ("batch", "inner", "state"),
+                          ("zeros",)),
+            "conv": ParamDef((batch, kc - 1, di), ("batch", "convk", "inner"),
+                             ("zeros",))}

@@ -1,0 +1,417 @@
+"""Heterogeneous decoder stacks: schema → params/pspecs, forward/loss/decode.
+
+Layer stacking: ``cfg.prefix_layers`` unrolled layers, then a repeating
+period of ``cfg.scan_period`` layers scanned ``cfg.n_periods`` times with
+per-position stacked parameters — HLO size is O(period), independent of
+depth (jamba-72L and kimi-61L compile as 8- and 1-layer bodies).
+
+Three execution modes share one code path:
+  * train   — causal LM loss, optional remat, no caches
+  * prefill — same forward, emits decode caches preallocated to ``max_len``
+  * decode  — single-token step against the caches (KV or SSM state)
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .. import sharding
+from ..configs.base import LayerSpec, ModelConfig
+from . import layers, mamba, moe
+from .layers import ParamDef
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# Schema
+# ---------------------------------------------------------------------------
+
+def _layer_schema(cfg: ModelConfig, spec: LayerSpec) -> Dict[str, Any]:
+    s: Dict[str, Any] = {"mixer_norm": layers.norm_schema(cfg)}
+    s["mixer"] = (layers.attn_schema(cfg) if spec.mixer == "attn"
+                  else mamba.mamba_schema(cfg))
+    if spec.ffn != "none":
+        s["ffn_norm"] = layers.norm_schema(cfg)
+        s["ffn"] = (layers.mlp_schema(cfg) if spec.ffn == "mlp"
+                    else moe.moe_schema(cfg))
+    return s
+
+
+def _stack(defn: ParamDef, n: int) -> ParamDef:
+    return ParamDef((n,) + defn.shape, ("layers",) + defn.axes, defn.init)
+
+
+def model_schema(cfg: ModelConfig) -> Dict[str, Any]:
+    d, v = cfg.d_model, cfg.vocab_size
+    s: Dict[str, Any] = {}
+    if cfg.input_mode == "audio_codes":
+        s["embed"] = {"tok": ParamDef((cfg.n_codebooks, v, d),
+                                      (None, "vocab", "embed"))}
+    else:
+        s["embed"] = {"tok": ParamDef((v, d), ("vocab", "embed"))}
+    s["prefix"] = {str(i): _layer_schema(cfg, cfg.layout[i])
+                   for i in range(cfg.prefix_layers)}
+    period = cfg.period_layout()
+    s["body"] = {str(j): jax.tree.map(
+        lambda pd: _stack(pd, cfg.n_periods), _layer_schema(cfg, spec),
+        is_leaf=lambda x: isinstance(x, ParamDef))
+        for j, spec in enumerate(period)}
+    s["final_norm"] = layers.norm_schema(cfg)
+    if not cfg.tie_embeddings:
+        out_v = v * cfg.n_codebooks if cfg.input_mode == "audio_codes" else v
+        s["unembed"] = {"w": ParamDef((d, out_v), ("embed", "vocab"))}
+    return s
+
+
+def _is_def(x) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def abstract_params(cfg: ModelConfig) -> PyTree:
+    return jax.tree.map(
+        lambda pd: jax.ShapeDtypeStruct(pd.shape, jnp.dtype(cfg.param_dtype)),
+        model_schema(cfg), is_leaf=_is_def)
+
+
+def param_pspecs(cfg: ModelConfig, rules: sharding.MeshRules) -> PyTree:
+    return jax.tree.map(
+        lambda pd: sharding.logical_to_pspec(pd.axes, rules,
+                                             cfg.expert_parallel),
+        model_schema(cfg), is_leaf=_is_def)
+
+
+def _init_leaf(pd: ParamDef, key, dtype):
+    kind = pd.init[0]
+    if kind == "zeros":
+        return jnp.zeros(pd.shape, dtype)
+    if kind == "ones":
+        return jnp.ones(pd.shape, dtype)
+    if kind == "normal":
+        return (jax.random.normal(key, pd.shape, jnp.float32)
+                * pd.init[1]).astype(dtype)
+    if kind == "a_log":       # mamba: A_log = log(1..N) per state column
+        n = pd.shape[-1]
+        base = jnp.log(jnp.arange(1, n + 1, dtype=jnp.float32))
+        return jnp.broadcast_to(base, pd.shape).astype(dtype)
+    if kind == "dt_bias":     # softplus^-1 of dt0 ~ 0.01
+        return jnp.full(pd.shape, -4.6, dtype)
+    raise ValueError(kind)
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> PyTree:
+    schema = model_schema(cfg)
+    flat, treedef = jax.tree.flatten(schema, is_leaf=_is_def)
+    keys = jax.random.split(key, len(flat))
+    dtype = jnp.dtype(cfg.param_dtype)
+    leaves = [_init_leaf(pd, k, dtype) for pd, k in zip(flat, keys)]
+    return jax.tree.unflatten(treedef, leaves)
+
+
+def count_params(cfg: ModelConfig) -> int:
+    flat, _ = jax.tree.flatten(model_schema(cfg), is_leaf=_is_def)
+    return int(sum(int(np.prod(pd.shape)) for pd in flat))
+
+
+def active_params(cfg: ModelConfig) -> int:
+    """Parameters touched per token (MoE: top-k + shared experts only)."""
+    if cfg.n_experts == 0:
+        return count_params(cfg)
+    total = 0
+    flat_with_path = jax.tree_util.tree_flatten_with_path(
+        model_schema(cfg), is_leaf=_is_def)[0]
+    frac = cfg.n_experts_active / cfg.n_experts
+    for path, pd in flat_with_path:
+        n = int(np.prod(pd.shape))
+        is_expert = "experts" in pd.axes
+        total += int(n * frac) if is_expert else n
+    return total
+
+
+# ---------------------------------------------------------------------------
+# Caches
+# ---------------------------------------------------------------------------
+
+def _layer_cache_def(cfg: ModelConfig, spec: LayerSpec, batch: int,
+                     max_len: int):
+    if spec.mixer == "attn":
+        return layers.attn_cache_def(cfg, batch, max_len)
+    return mamba.mamba_state_def(cfg, batch)
+
+
+def cache_schema(cfg: ModelConfig, batch: int, max_len: int) -> Dict[str, Any]:
+    s: Dict[str, Any] = {}
+    s["prefix"] = {str(i): _layer_cache_def(cfg, cfg.layout[i], batch, max_len)
+                   for i in range(cfg.prefix_layers)}
+    period = cfg.period_layout()
+    s["body"] = {str(j): jax.tree.map(
+        lambda pd: _stack(pd, cfg.n_periods),
+        _layer_cache_def(cfg, spec, batch, max_len), is_leaf=_is_def)
+        for j, spec in enumerate(period)}
+    return s
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> PyTree:
+    dt = jnp.dtype(cfg.dtype)
+    return jax.tree.map(lambda pd: jnp.zeros(pd.shape, dt),
+                        cache_schema(cfg, batch, max_len), is_leaf=_is_def)
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, max_len: int) -> PyTree:
+    dt = jnp.dtype(cfg.dtype)
+    return jax.tree.map(lambda pd: jax.ShapeDtypeStruct(pd.shape, dt),
+                        cache_schema(cfg, batch, max_len), is_leaf=_is_def)
+
+
+def cache_pspecs(cfg: ModelConfig, rules: sharding.MeshRules,
+                 long_context: bool = False) -> PyTree:
+    """PartitionSpecs matching cache_schema's structure."""
+    hd = cfg.resolved_head_dim
+
+    def leaf_spec(pd: ParamDef, stacked: bool):
+        if "seq" in pd.axes:            # (B, T, KV, hd) attention cache
+            base = _kv_spec(cfg, rules, long_context)
+        elif "state" in pd.axes:        # (B, di, N) mamba h state
+            base = jax.sharding.PartitionSpec(
+                _batch(rules, long_context), rules.model, None)
+        else:                           # (B, kc-1, di) conv state
+            base = jax.sharding.PartitionSpec(
+                _batch(rules, long_context), None, rules.model)
+        if stacked:
+            return jax.sharding.PartitionSpec(None, *base)
+        return base
+
+    schema = cache_schema(cfg, batch=1, max_len=1)   # structure only
+    out: Dict[str, Any] = {"prefix": {}, "body": {}}
+    for i, sub in schema["prefix"].items():
+        out["prefix"][i] = jax.tree.map(lambda pd: leaf_spec(pd, False), sub,
+                                        is_leaf=_is_def)
+    for j, sub in schema["body"].items():
+        out["body"][j] = jax.tree.map(lambda pd: leaf_spec(pd, True), sub,
+                                      is_leaf=_is_def)
+    return out
+
+
+def _batch(rules: sharding.MeshRules, long_context: bool):
+    if long_context:
+        return None          # batch=1: replicate batch, shard sequence
+    return rules.batch if rules.batch else None
+
+
+def _kv_spec(cfg, rules, long_context):
+    from jax.sharding import PartitionSpec as P
+    msize = 1
+    ctx = sharding.active()
+    if ctx is not None and rules.model is not None:
+        msize = ctx[0].shape[rules.model]
+    h_ax = d_ax = None
+    if msize > 1:
+        if cfg.n_kv_heads % msize == 0:
+            h_ax = rules.model
+        elif cfg.resolved_head_dim % msize == 0:
+            d_ax = rules.model
+    if long_context and rules.seq:
+        return P(None, rules.seq, h_ax, d_ax)
+    return P(_batch(rules, long_context), None, h_ax, d_ax)
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+def _embed_inputs(params, cfg: ModelConfig, batch: Dict[str, jax.Array]):
+    dt = jnp.dtype(cfg.dtype)
+    emb = params["embed"]["tok"]
+    if cfg.input_mode == "audio_codes":
+        codes = batch["codes"]                       # (B, K, S)
+        x = sum(jnp.take(emb[k], codes[:, k], axis=0)
+                for k in range(cfg.n_codebooks))
+    elif cfg.input_mode == "vlm" and "vision_embeds" in batch:
+        tok = jnp.take(emb, batch["tokens"], axis=0)
+        x = jnp.concatenate([batch["vision_embeds"].astype(tok.dtype), tok],
+                            axis=1)
+    else:
+        x = jnp.take(emb, batch["tokens"], axis=0)
+    return sharding.constrain(x.astype(dt),
+                              sharding.act_spec_btd(x.shape[1]))
+
+
+def _apply_layer(p, spec: LayerSpec, x, cfg: ModelConfig, *,
+                 cache=None, pos=None, make_cache=False):
+    aux = jnp.zeros((), jnp.float32)
+    h = layers.norm_apply(p["mixer_norm"], x, cfg.norm)
+    if spec.mixer == "attn":
+        mix, new_cache = layers.attn_apply(p["mixer"], h, cfg, cache=cache,
+                                           pos=pos, make_cache=make_cache)
+    else:
+        mix, new_cache = mamba.mamba_apply(p["mixer"], h, cfg,
+                                           state=cache, make_cache=make_cache)
+    x = x + mix
+    if spec.ffn != "none":
+        h = layers.norm_apply(p["ffn_norm"], x, cfg.norm)
+        if spec.ffn == "mlp":
+            x = x + layers.mlp_apply(p["ffn"], h)
+        else:
+            y, aux = moe.moe_apply(p["ffn"], h, cfg)
+            x = x + y
+    x = sharding.constrain(x, sharding.act_spec_btd(x.shape[1]))
+    return x, new_cache, aux
+
+
+def _remat(fn, cfg: ModelConfig):
+    if cfg.remat_policy == "none":
+        return fn
+    if cfg.remat_policy == "full":
+        return jax.checkpoint(fn, prevent_cse=False)
+    if cfg.remat_policy == "dots":
+        return jax.checkpoint(
+            fn, prevent_cse=False,
+            policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    raise ValueError(cfg.remat_policy)
+
+
+def _make_cache_holder(cfg, spec, make_cache):
+    """Attention prefill caches are written into max_len buffers later."""
+    return None
+
+
+def forward(params, cfg: ModelConfig, batch: Dict[str, jax.Array], *,
+            mode: str = "train", caches: Optional[PyTree] = None,
+            pos: Optional[jax.Array] = None, max_len: Optional[int] = None,
+            ) -> Tuple[jax.Array, jax.Array, Optional[PyTree]]:
+    """Returns (logits, moe_aux_mean, caches_out or None)."""
+    assert mode in ("train", "prefill", "decode")
+    make_cache = mode == "prefill"
+    x = _embed_inputs(params, cfg, batch)
+    period = cfg.period_layout()
+    aux_total = jnp.zeros((), jnp.float32)
+    n_moe = max(1, sum(1 for l in cfg.layout if l.ffn == "moe"))
+
+    # ---- prefix (unrolled) ----
+    new_prefix_caches: Dict[str, Any] = {}
+    for i in range(cfg.prefix_layers):
+        c = caches["prefix"][str(i)] if caches is not None else None
+        x, nc, aux = _apply_layer(params["prefix"][str(i)], cfg.layout[i], x,
+                                  cfg, cache=c, pos=pos, make_cache=make_cache)
+        aux_total += aux
+        if nc is not None:
+            new_prefix_caches[str(i)] = nc
+
+    # ---- scanned body ----
+    def body(carry, xs):
+        x, aux_total = carry
+        bparams, bcaches = xs
+        new_caches = {}
+        for j, spec in enumerate(period):
+            c = bcaches[str(j)] if bcaches is not None else None
+            x, nc, aux = _apply_layer(bparams[str(j)], spec, x, cfg,
+                                      cache=c, pos=pos, make_cache=make_cache)
+            aux_total += aux
+            new_caches[str(j)] = nc if nc is not None else jnp.zeros((),
+                                                                     x.dtype)
+        return (x, aux_total), new_caches
+
+    body_caches = caches["body"] if caches is not None else None
+    xs = (params["body"], body_caches)
+    if body_caches is None:
+        # scan needs a concrete pytree; use a per-period dummy
+        xs = (params["body"],
+              {str(j): jnp.zeros((cfg.n_periods,), jnp.float32)
+               for j in range(len(period))})
+
+        def body_nocache(carry, xs):
+            bparams, _ = xs
+            return body(carry, (bparams, None))
+        scan_fn = _remat(body_nocache, cfg) if mode == "train" else body_nocache
+    else:
+        scan_fn = body
+
+    (x, aux_total), ys = jax.lax.scan(scan_fn, (x, aux_total), xs)
+    new_body_caches = ys if caches is not None or make_cache else None
+
+    # ---- head ----
+    x = layers.norm_apply(params["final_norm"], x, cfg.norm)
+    dt = x.dtype
+    if cfg.tie_embeddings:
+        emb = params["embed"]["tok"].astype(dt)
+        logits = jnp.einsum("bsd,vd->bsv", x, emb)
+    else:
+        logits = x @ params["unembed"]["w"].astype(dt)
+    if cfg.input_mode == "audio_codes":
+        b, s, _ = logits.shape
+        logits = logits.reshape(b, s, cfg.n_codebooks, cfg.vocab_size)
+    logits = sharding.constrain(
+        logits, sharding.logits_spec() if cfg.input_mode != "audio_codes"
+        else jax.sharding.PartitionSpec(sharding.batch_axes(), None, None,
+                                        sharding.rules_or_default().model))
+
+    caches_out = None
+    if make_cache or caches is not None:
+        caches_out = {"prefix": new_prefix_caches, "body": new_body_caches}
+        if make_cache and max_len is not None:
+            caches_out = _pad_caches(caches_out, cfg, max_len)
+    return logits, aux_total / n_moe, caches_out
+
+
+def _pad_caches(caches, cfg: ModelConfig, max_len: int):
+    """Grow prefill KV buffers (B,S,kv,hd) to (B,max_len,kv,hd)."""
+    def pad(leaf):
+        if leaf.ndim >= 4 and leaf.shape[-1] == cfg.resolved_head_dim:
+            t_axis = leaf.ndim - 3
+            pad_len = max_len - leaf.shape[t_axis]
+            if pad_len > 0:
+                widths = [(0, 0)] * leaf.ndim
+                widths[t_axis] = (0, pad_len)
+                return jnp.pad(leaf, widths)
+        return leaf
+    return jax.tree.map(pad, caches)
+
+
+# ---------------------------------------------------------------------------
+# Losses and steps
+# ---------------------------------------------------------------------------
+
+def loss_fn(params, cfg: ModelConfig, batch: Dict[str, jax.Array],
+            z_loss_weight: float = 1e-4):
+    logits, aux, _ = forward(params, cfg, batch, mode="train")
+    logits = logits.astype(jnp.float32)
+    targets = batch["targets"]
+    if cfg.input_mode == "audio_codes":
+        targets = jnp.moveaxis(targets, 1, 2)        # (B,K,S) -> (B,S,K)
+    if cfg.input_mode == "vlm":
+        pad = -jnp.ones(targets.shape[:1] + (cfg.vision_prefix,), targets.dtype)
+        targets = jnp.concatenate([pad, targets], axis=1)
+    mask = (targets >= 0).astype(jnp.float32)
+    safe_t = jnp.maximum(targets, 0)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    true_logit = jnp.take_along_axis(logits, safe_t[..., None],
+                                     axis=-1)[..., 0]
+    ce = (lse - true_logit) * mask
+    denom = jnp.maximum(mask.sum(), 1.0)
+    loss = ce.sum() / denom
+    zl = z_loss_weight * ((lse * mask) ** 2).sum() / denom
+    total = loss + zl + cfg.router_aux_weight * aux
+    metrics = {"loss": loss, "z_loss": zl, "moe_aux": aux, "tokens": denom}
+    return total, metrics
+
+
+def prefill(params, cfg: ModelConfig, batch: Dict[str, jax.Array],
+            max_len: int):
+    """Causal forward that also returns decode caches sized to max_len."""
+    logits, aux, caches = forward(params, cfg, batch, mode="prefill",
+                                  max_len=max_len,
+                                  pos=jnp.zeros((), jnp.int32))
+    return logits, caches
+
+
+def decode_step(params, cfg: ModelConfig, caches: PyTree,
+                tokens: Dict[str, jax.Array], pos: jax.Array):
+    """One new token against the caches.  pos = current cache length."""
+    logits, _, caches = forward(params, cfg, tokens, mode="decode",
+                                caches=caches, pos=pos)
+    return logits, caches

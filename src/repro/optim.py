@@ -1,0 +1,89 @@
+"""AdamW + warmup-cosine schedule + global-norm clipping, pure JAX.
+
+Optimizer moments are fp32 trees with the *same structure and sharding* as
+the parameters (ZeRO-style: whatever shards the weight shards its moments —
+the pspec tree for (m, v) is the param pspec tree).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+
+def schedule(step: jax.Array, cfg: OptConfig) -> jax.Array:
+    warm = cfg.lr * (step + 1) / max(cfg.warmup_steps, 1)
+    t = jnp.clip((step - cfg.warmup_steps)
+                 / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (
+        1 + jnp.cos(jnp.pi * t))
+    return jnp.where(step < cfg.warmup_steps, warm, cfg.lr * cos)
+
+
+def init_opt_state(params: PyTree) -> Dict[str, Any]:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {"m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def global_norm(tree: PyTree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree.leaves(tree)))
+
+
+def adamw_update(params: PyTree, grads: PyTree, state: Dict[str, Any],
+                 cfg: OptConfig) -> Tuple[PyTree, Dict[str, Any], Dict[str, jax.Array]]:
+    step = state["step"]
+    lr = schedule(step, cfg)
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gn, 1e-9))
+
+    b1, b2 = cfg.b1, cfg.b2
+    c1 = 1.0 - b1 ** (step.astype(jnp.float32) + 1)
+    c2 = 1.0 - b2 ** (step.astype(jnp.float32) + 1)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        mh = m / c1
+        vh = v / c2
+        delta = mh / (jnp.sqrt(vh) + cfg.eps)
+        if p.ndim >= 2:                       # decoupled wd, matrices only
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state["m"])
+    flat_v = jax.tree.leaves(state["v"])
+    new_p, new_m, new_v = [], [], []
+    for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v):
+        np_, nm, nv = upd(p, g, m, v)
+        new_p.append(np_)
+        new_m.append(nm)
+        new_v.append(nv)
+    new_state = {"m": jax.tree.unflatten(treedef, new_m),
+                 "v": jax.tree.unflatten(treedef, new_v),
+                 "step": step + 1}
+    metrics = {"lr": lr, "grad_norm": gn}
+    return jax.tree.unflatten(treedef, new_p), new_state, metrics

@@ -1,0 +1,3 @@
+from .elastic import ElasticSpotTrainer, ElasticConfig
+
+__all__ = ["ElasticSpotTrainer", "ElasticConfig"]

@@ -1,0 +1,60 @@
+"""Serving step factories: batched prefill and decode under explicit shardings.
+
+``decode_32k`` / ``long_500k`` dry-run cells lower these (one new token
+against a seq_len-sized KV/SSM cache), per the assignment: decode shapes
+exercise ``serve_step``, not ``train_step``.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from . import sharding
+from .configs.base import ModelConfig
+from .models import transformer
+
+
+def prefill_fn(params, batch, *, cfg: ModelConfig, max_len: int):
+    return transformer.prefill(params, cfg, batch, max_len=max_len)
+
+
+def decode_fn(params, caches, tokens, pos, *, cfg: ModelConfig):
+    return transformer.decode_step(params, cfg, caches, tokens, pos)
+
+
+def make_sharded_prefill(cfg: ModelConfig, rules: sharding.MeshRules,
+                         batch_pspecs, max_len: int):
+    pspecs = transformer.param_pspecs(cfg, rules)
+    cache_specs = transformer.cache_pspecs(cfg, rules, long_context=False)
+    logits_spec = (P(rules.batch or None, None, rules.model)
+                   if cfg.input_mode != "audio_codes"
+                   else P(rules.batch or None, None, None, rules.model))
+    fn = functools.partial(prefill_fn, cfg=cfg, max_len=max_len)
+    return jax.jit(fn,
+                   in_shardings=sharding.as_shardings((pspecs, batch_pspecs)),
+                   out_shardings=sharding.as_shardings(
+                       (logits_spec, cache_specs)))
+
+
+def make_sharded_decode(cfg: ModelConfig, rules: sharding.MeshRules,
+                        batch_pspecs, long_context: bool = False,
+                        donate: bool = True):
+    pspecs = transformer.param_pspecs(cfg, rules)
+    cache_specs = transformer.cache_pspecs(cfg, rules,
+                                           long_context=long_context)
+    b_ax = None if long_context else (rules.batch or None)
+    logits_spec = (P(b_ax, None, rules.model)
+                   if cfg.input_mode != "audio_codes"
+                   else P(b_ax, None, None, rules.model))
+    fn = functools.partial(decode_fn, cfg=cfg)
+    return jax.jit(fn,
+                   in_shardings=sharding.as_shardings(
+                       (pspecs, cache_specs, batch_pspecs, P())),
+                   out_shardings=sharding.as_shardings(
+                       (logits_spec, cache_specs)),
+                   donate_argnums=(1,) if donate else ())

@@ -1,0 +1,259 @@
+"""Logical-axis sharding rules (MaxText-style) for all assigned archs.
+
+Weights carry *logical* axis names; :func:`logical_to_pspec` maps them to
+mesh axes under a :class:`MeshRules`.  Activation/cache constraints are
+config-aware (GQA head counts are not always divisible by the model axis, so
+we shard heads when divisible and head_dim otherwise).
+
+A contextvar holds the active (mesh, rules) so model code can call
+:func:`constrain` unconditionally: it is a no-op outside a mesh context
+(CPU smoke tests), and a `with_sharding_constraint` inside one (dry-run,
+production lowering).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import dataclasses
+from typing import Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshRules:
+    """How logical axes map onto mesh axes."""
+
+    batch: Tuple[str, ...]                   # data-parallel axes
+    model: Optional[str] = "model"           # tensor/expert-parallel axis
+    fsdp: Optional[Tuple[str, ...]] = None   # weight-shard axes (ZeRO-3 style)
+    seq: Optional[Tuple[str, ...]] = None    # context-parallel axes (long decode)
+    seq_act: bool = True                     # Megatron-SP: shard the sequence
+    #                                          dim of inter-block activations
+    #                                          over the model axis
+    attn_mode: str = "none"                  # "none" | "auto" | "ulysses" | "cp"
+    #                                          how self-attention internals are
+    #                                          parallelized (see flash_mode)
+    ep_shard_map: bool = False               # explicit shard_map expert
+    #                                          parallelism: local-rows x
+    #                                          local-experts + one psum/layer
+    #                                          (vs GSPMD gather/scatter)
+
+
+def single_pod_rules(fsdp: bool = False, long_context: bool = False) -> MeshRules:
+    return MeshRules(batch=("data",),
+                     fsdp=("data",) if fsdp else None,
+                     seq=("data",) if long_context else None)
+
+
+def multi_pod_rules(fsdp: bool = False, long_context: bool = False) -> MeshRules:
+    return MeshRules(batch=("pod", "data"),
+                     fsdp=("pod", "data") if fsdp else None,
+                     seq=("pod", "data") if long_context else None)
+
+
+# -- logical weight axes -> PartitionSpec -----------------------------------
+
+#: logical axis names that live on the model (tensor-parallel) axis
+_MODEL_AXES = {"vocab", "q", "kv", "ff", "inner"}
+#: logical axis names that live on the fsdp axes when fsdp is enabled
+_FSDP_AXES = {"embed", "expert_in"}
+
+
+def logical_to_pspec(axes: Sequence[Optional[str]], rules: MeshRules,
+                     expert_parallel: bool = True) -> P:
+    out = []
+    for ax in axes:
+        if ax in _MODEL_AXES:
+            out.append(rules.model)
+        elif ax == "experts":
+            out.append(rules.model if expert_parallel else None)
+        elif ax == "expert_ff":
+            out.append(None if expert_parallel else rules.model)
+        elif ax in _FSDP_AXES:
+            out.append(rules.fsdp)
+        else:                       # None, "layers", "state", "convk", ...
+            out.append(None)
+    return P(*out)
+
+
+# -- ambient mesh context -----------------------------------------------------
+
+_ACTIVE: contextvars.ContextVar = contextvars.ContextVar(
+    "repro_mesh", default=None)
+
+
+@contextlib.contextmanager
+def mesh_context(mesh: Mesh, rules: MeshRules):
+    """Install (mesh, rules) for `constrain` + enter the jax mesh context."""
+    token = _ACTIVE.set((mesh, rules))
+    try:
+        with mesh:
+            yield
+    finally:
+        _ACTIVE.reset(token)
+
+
+def active() -> Optional[Tuple[Mesh, MeshRules]]:
+    return _ACTIVE.get()
+
+
+def constrain(x, spec: P):
+    """with_sharding_constraint when a mesh is active, else identity."""
+    ctx = _ACTIVE.get()
+    if ctx is None:
+        return x
+    mesh, _ = ctx
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def rules_or_default() -> MeshRules:
+    ctx = _ACTIVE.get()
+    return ctx[1] if ctx is not None else MeshRules(batch=())
+
+
+def as_shardings(pspec_tree):
+    """PartitionSpec tree -> NamedSharding tree on the active mesh (jit's
+    in/out_shardings want concrete Shardings in recent JAX)."""
+    ctx = _ACTIVE.get()
+    if ctx is None:
+        return pspec_tree
+    mesh, _ = ctx
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s) if isinstance(s, P) else s,
+        pspec_tree, is_leaf=lambda s: isinstance(s, P))
+
+
+# -- config-aware activation / cache specs -----------------------------------
+
+def _axis_size(name: Optional[str]) -> int:
+    ctx = _ACTIVE.get()
+    if ctx is None or name is None:
+        return 1
+    mesh, _ = ctx
+    if isinstance(name, tuple):
+        size = 1
+        for n in name:
+            size *= mesh.shape[n]
+        return size
+    return mesh.shape[name]
+
+
+def batch_axes() -> Optional[Tuple[str, ...]]:
+    r = rules_or_default()
+    return r.batch if r.batch else None
+
+
+def act_spec_btd(seq_len: Optional[int] = None) -> P:
+    """(batch, seq, d_model) activations: batch over data axes; with
+    Megatron-style sequence parallelism the *inter-block* sequence dim also
+    shards over the model axis (cuts the scan-carried remat residuals by the
+    model-axis size) whenever it divides evenly."""
+    r = rules_or_default()
+    seq_ax = None
+    if (r.seq_act and seq_len is not None and r.model is not None
+            and _axis_size(r.model) > 1 and seq_len % _axis_size(r.model) == 0
+            and seq_len > 1):
+        seq_ax = r.model
+    return P(batch_axes(), seq_ax, None)
+
+
+def head_axis_spec(n_heads: int, head_dim: int) -> Tuple[Optional[str], Optional[str]]:
+    """Which of (heads, head_dim) goes on the model axis for (B,S,H,hd)."""
+    r = rules_or_default()
+    m = r.model
+    msize = _axis_size(m)
+    if msize <= 1:
+        return None, None
+    if n_heads % msize == 0:
+        return m, None
+    if head_dim % msize == 0:
+        return None, m
+    return None, None
+
+
+def attn_act_spec(n_heads: int, head_dim: int) -> P:
+    h_ax, d_ax = head_axis_spec(n_heads, head_dim)
+    return P(batch_axes(), None, h_ax, d_ax)
+
+
+def kv_cache_spec(n_kv_heads: int, head_dim: int, long_context: bool) -> P:
+    """(B, T, KV, hd) cache: batch over data unless long-context (then the
+    sequence axis takes the data axes and batch stays replicated)."""
+    r = rules_or_default()
+    h_ax, d_ax = head_axis_spec(n_kv_heads, head_dim)
+    if long_context and r.seq:
+        return P(None, r.seq, h_ax, d_ax)
+    return P(batch_axes(), None, h_ax, d_ax)
+
+
+def mamba_state_spec() -> P:
+    """(B, d_inner, state): d_inner on the model axis."""
+    r = rules_or_default()
+    return P(batch_axes(), r.model, None)
+
+
+def mamba_conv_state_spec() -> P:
+    """(B, convk-1, d_inner)."""
+    r = rules_or_default()
+    return P(batch_axes(), None, r.model)
+
+
+def flash_mode(batch_size: int, seq_len: int) -> str:
+    """How to parallelize flash self-attention on the active mesh.
+
+    * "ulysses" — reshard batch over (data × model); attention is then fully
+      device-local (no per-block collectives).  Needs B divisible by the
+      whole mesh.
+    * "cp" — context parallelism: shard the q sequence dim over the model
+      axis; k/v are gathered once per layer, dk/dv partial-summed once after
+      the block loop.  Needs S divisible by the model axis.
+    * "none" — leave layout to GSPMD propagation (baseline).
+    """
+    ctx = _ACTIVE.get()
+    if ctx is None:
+        return "none"
+    mesh, r = ctx
+    if r.attn_mode == "none" or r.model is None:
+        return "none"
+    dm = _axis_size(r.batch) * _axis_size(r.model)
+    msize = _axis_size(r.model)
+    if (r.attn_mode in ("auto", "ulysses") and dm > 1
+            and batch_size % dm == 0):
+        return "ulysses"
+    if (r.attn_mode in ("auto", "cp") and msize > 1
+            and seq_len % msize == 0 and seq_len > msize):
+        return "cp"
+    return "none"
+
+
+def ulysses_spec(rank: int) -> P:
+    """(B, ...) with batch sharded over every mesh axis."""
+    r = rules_or_default()
+    axes = tuple(r.batch) + ((r.model,) if r.model else ())
+    return P(axes, *([None] * (rank - 1)))
+
+
+def cp_q_spec(rank: int) -> P:
+    """(B, S, ...) with the q sequence dim on the model axis."""
+    r = rules_or_default()
+    return P(batch_axes(), r.model, *([None] * (rank - 2)))
+
+
+def cp_kv_spec(rank: int) -> P:
+    """(B, S, KV, hd) k/v replicated over model (gathered once per layer)."""
+    return P(batch_axes(), *([None] * (rank - 1)))
+
+
+def moe_group_spec() -> P:
+    """(G, E, C, d) expert buffers: groups on data, experts on model."""
+    r = rules_or_default()
+    return P(batch_axes(), r.model, None, None)
+
+
+def logits_spec() -> P:
+    """(B, S, vocab) with vocab on the model axis."""
+    r = rules_or_default()
+    return P(batch_axes(), None, r.model)

@@ -1,0 +1,5 @@
+from .checkpoint import save_checkpoint, restore_checkpoint, latest_step
+from .loop import make_train_step, TrainState
+
+__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step",
+           "make_train_step", "TrainState"]

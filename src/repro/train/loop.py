@@ -1,0 +1,61 @@
+"""Jitted train step factory + a minimal state container.
+
+``make_train_step`` builds a single jitted function computing loss, grads,
+clipping, and the AdamW update; with a mesh context active it is given
+explicit in/out shardings (params/opt sharded per the logical rules, batch
+sharded over the data axes) — the same function the multi-pod dry-run lowers.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .. import optim, sharding
+from ..configs.base import ModelConfig
+from ..models import transformer
+
+PyTree = Any
+
+
+@dataclasses.dataclass
+class TrainState:
+    params: PyTree
+    opt_state: PyTree
+    step: int = 0
+
+
+def train_step_fn(params, opt_state, batch, *, cfg: ModelConfig,
+                  opt_cfg: optim.OptConfig):
+    (loss, metrics), grads = jax.value_and_grad(
+        transformer.loss_fn, has_aux=True)(params, cfg, batch)
+    params, opt_state, opt_metrics = optim.adamw_update(
+        params, grads, opt_state, opt_cfg)
+    metrics = {**metrics, **opt_metrics, "total_loss": loss}
+    return params, opt_state, metrics
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: optim.OptConfig,
+                    donate: bool = True) -> Callable:
+    fn = functools.partial(train_step_fn, cfg=cfg, opt_cfg=opt_cfg)
+    return jax.jit(fn, donate_argnums=(0, 1) if donate else ())
+
+
+def make_sharded_train_step(cfg: ModelConfig, opt_cfg: optim.OptConfig,
+                            rules: sharding.MeshRules, batch_pspecs,
+                            donate: bool = True):
+    """Explicit in/out shardings — what dryrun.py lowers and compiles."""
+    pspecs = transformer.param_pspecs(cfg, rules)
+    opt_pspecs = {"m": pspecs, "v": pspecs,
+                  "step": jax.sharding.PartitionSpec()}
+    out_metrics = jax.sharding.PartitionSpec()
+    fn = functools.partial(train_step_fn, cfg=cfg, opt_cfg=opt_cfg)
+    return jax.jit(
+        fn,
+        in_shardings=sharding.as_shardings((pspecs, opt_pspecs, batch_pspecs)),
+        out_shardings=sharding.as_shardings((pspecs, opt_pspecs, out_metrics)),
+        donate_argnums=(0, 1) if donate else ())

@@ -1,0 +1,27 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — tests must see 1 CPU device
+(the 512-device override belongs exclusively to launch/dryrun.py)."""
+
+import numpy as np
+import pytest
+
+from repro.core import Request, generate_catalog, preprocess
+
+
+@pytest.fixture(scope="session")
+def catalog():
+    return generate_catalog(seed=0, max_offerings=600)
+
+
+@pytest.fixture(scope="session")
+def small_catalog():
+    return generate_catalog(seed=1, max_offerings=120)
+
+
+@pytest.fixture()
+def request_100(catalog):
+    return Request(pods=100, cpu_per_pod=2, mem_per_pod=2)
+
+
+@pytest.fixture()
+def items_100(catalog, request_100):
+    return preprocess(catalog, request_100)

@@ -1,0 +1,106 @@
+"""ILP solver: exactness (vs PuLP/CBC and brute force), invariants."""
+
+import itertools
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import CandidateItem, Offering, objective_coefficients, solve_ilp
+from repro.core.ilp import solve_ilp_pulp
+
+
+def _mk_item(i, pods, bs, sp, t3):
+    o = Offering(offering_id=f"t{i}@az", instance_type=f"t{i}", family="m",
+                 generation=6, vendor="i", specialization="general",
+                 size="large", region="r", az="az", vcpus=2, mem_gib=8.0,
+                 od_price=sp * 3, spot_price=sp, bs_core=bs, sps_single=3,
+                 t3=t3, interruption_freq=1)
+    return CandidateItem(offering=o, pods=pods, bs=bs, spot_price=sp, t3=t3)
+
+
+item_strategy = st.builds(
+    lambda i, pods, bs, sp, t3: _mk_item(i, pods, bs, sp, t3),
+    st.integers(0, 10_000), st.integers(1, 8),
+    st.floats(1e3, 1e5), st.floats(0.01, 3.0), st.integers(0, 6))
+
+
+def _brute_force(items, req, alpha):
+    coef = objective_coefficients(items, alpha)
+    best, best_x = None, None
+    ranges = [range(it.t3 + 1) for it in items]
+    for xs in itertools.product(*ranges):
+        if sum(x * it.pods for x, it in zip(xs, items)) < req:
+            continue
+        c = float(np.dot(coef, xs))
+        if best is None or c < best - 1e-12:
+            best, best_x = c, xs
+    return best
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(item_strategy, min_size=1, max_size=4),
+       st.integers(0, 12), st.floats(0.0, 1.0))
+def test_dp_matches_brute_force(items, req, alpha):
+    counts = solve_ilp(items, req, alpha)
+    expected = _brute_force(items, req, alpha)
+    if expected is None:
+        assert counts is None
+        return
+    assert counts is not None
+    coef = objective_coefficients(items, alpha)
+    got = float(np.dot(coef, counts))
+    assert got <= expected + 1e-9
+    assert sum(c * it.pods for c, it in zip(counts, items)) >= req
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.lists(item_strategy, min_size=2, max_size=12),
+       st.integers(1, 60), st.floats(0.0, 1.0))
+def test_dp_matches_pulp(items, req, alpha):
+    counts = solve_ilp(items, req, alpha)
+    pulp_counts = solve_ilp_pulp(items, req, alpha)
+    coef = objective_coefficients(items, alpha)
+    if counts is None:
+        # CBC reports infeasible too (no feasible integral point)
+        cap = sum(it.pods * it.t3 for it in items)
+        assert cap < req
+        return
+    assert pulp_counts is not None
+    assert float(np.dot(coef, counts)) == pytest.approx(
+        float(np.dot(coef, pulp_counts)), abs=1e-6)
+
+
+def test_bounds_respected(items_100):
+    counts = solve_ilp(items_100[:200], 500, 0.4)
+    for c, it in zip(counts, items_100[:200]):
+        assert 0 <= c <= it.t3
+
+
+def test_alpha_one_saturates(items_100):
+    """α=1: every positive-perf item has a negative coefficient and is taken
+    at its T3 bound — the Table 2 over-provisioning collapse."""
+    items = items_100[:100]
+    counts = solve_ilp(items, 10, 1.0)
+    for c, it in zip(counts, items):
+        if it.perf > 0 and it.t3 > 0:
+            assert c == it.t3
+
+
+def test_alpha_zero_minimizes_cost(items_100):
+    items = items_100[:60]
+    counts = solve_ilp(items, 40, 0.0)
+    cost = sum(c * it.spot_price for c, it in zip(counts, items))
+    pulp_counts = solve_ilp_pulp(items, 40, 0.0)
+    pulp_cost = sum(c * it.spot_price for c, it in zip(pulp_counts, items))
+    assert cost == pytest.approx(pulp_cost, rel=1e-6)
+
+
+def test_infeasible_returns_none():
+    items = [_mk_item(0, pods=1, bs=1e4, sp=0.1, t3=3)]
+    assert solve_ilp(items, 10, 0.5) is None
+
+
+def test_empty_items():
+    assert solve_ilp([], 5, 0.5) is None
+    assert solve_ilp([], 0, 0.5) == []

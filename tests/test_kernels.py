@@ -1,0 +1,160 @@
+"""Per-kernel validation: Pallas (interpret=True) and chunked refs vs the
+pure-jnp oracles, swept over shapes and dtypes; gradients vs naive autodiff."""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.mamba_scan import selective_scan_pallas
+
+
+def _qkv(rng, b, sq, skv, h, kv, hd, dtype):
+    q = jnp.asarray(rng.normal(size=(b, sq, h, hd)), dtype)
+    k = jnp.asarray(rng.normal(size=(b, skv, kv, hd)), dtype)
+    v = jnp.asarray(rng.normal(size=(b, skv, kv, hd)), dtype)
+    return q, k, v
+
+
+ATTN_SHAPES = [
+    # (b, sq, skv, h, kv, hd, qc, kc)
+    (1, 32, 32, 4, 4, 16, 8, 8),        # MHA
+    (2, 64, 64, 8, 2, 32, 16, 32),      # GQA 4:1
+    (1, 128, 128, 6, 6, 64, 64, 32),    # wider head
+    (2, 48, 48, 4, 1, 16, 16, 16),      # MQA
+]
+
+
+@pytest.mark.parametrize("shape", ATTN_SHAPES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_ref_vs_naive(shape, dtype):
+    b, sq, skv, h, kv, hd, qc, kc = shape
+    rng = np.random.default_rng(0)
+    q, k, v = _qkv(rng, b, sq, skv, h, kv, hd, dtype)
+    ref_o = ref.attention_naive(q, k, v, causal=True)
+    got = ref.flash_attention_ref(q, k, v, causal=True, q_chunk=qc,
+                                  kv_chunk=kc)
+    tol = 2e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(ref_o, np.float32), atol=tol)
+
+
+@pytest.mark.parametrize("shape", ATTN_SHAPES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_pallas_vs_naive(shape, dtype):
+    b, sq, skv, h, kv, hd, qc, kc = shape
+    rng = np.random.default_rng(1)
+    q, k, v = _qkv(rng, b, sq, skv, h, kv, hd, dtype)
+    ref_o = ref.attention_naive(q, k, v, causal=True)
+    got = flash_attention_pallas(q, k, v, causal=True, q_chunk=qc,
+                                 kv_chunk=kc, interpret=True)
+    tol = 2e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(ref_o, np.float32), atol=tol)
+
+
+def test_flash_pallas_noncausal_and_kvlen():
+    rng = np.random.default_rng(2)
+    q, k, v = _qkv(rng, 2, 32, 64, 4, 2, 16, jnp.float32)
+    for kwargs in ({"causal": False}, {"causal": True, "q_offset": 32},
+                   {"causal": False, "kv_len": 40}):
+        a = ref.attention_naive(q, k, v, **kwargs)
+        b = flash_attention_pallas(q, k, v, q_chunk=16, kv_chunk=16,
+                                   interpret=True, **kwargs)
+        np.testing.assert_allclose(np.asarray(b), np.asarray(a), atol=2e-5)
+
+
+def test_flash_backward_matches_naive_grad():
+    rng = np.random.default_rng(3)
+    q, k, v = _qkv(rng, 2, 64, 64, 8, 4, 16, jnp.float32)
+
+    def loss_flash(q, k, v):
+        o = ops.flash_attention(q, k, v, causal=True, impl="chunked",
+                                q_chunk=16, kv_chunk=16)
+        return jnp.sum(jnp.sin(o))
+
+    def loss_naive(q, k, v):
+        return jnp.sum(jnp.sin(ref.attention_naive(q, k, v, causal=True)))
+
+    g1 = jax.grad(loss_flash, argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(loss_naive, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 3), st.sampled_from([16, 32, 48]),
+       st.sampled_from([1, 2, 4]), st.sampled_from([8, 16]))
+def test_flash_ref_property(b, s, kvh, hd):
+    h = kvh * 2
+    rng = np.random.default_rng(s + b)
+    q, k, v = _qkv(rng, b, s, s, h, kvh, hd, jnp.float32)
+    a = ref.attention_naive(q, k, v, causal=True)
+    o = ref.flash_attention_ref(q, k, v, causal=True, q_chunk=16, kv_chunk=16)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(a), atol=3e-5)
+
+
+# ------------------------------------------------------------- mamba ----
+
+MAMBA_SHAPES = [
+    (1, 32, 16, 4, 16, 16),     # (b, s, di, n, chunk, di_block)
+    (2, 64, 32, 8, 16, 32),
+    (2, 128, 64, 16, 32, 32),
+]
+
+
+@pytest.mark.parametrize("shape", MAMBA_SHAPES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_mamba_pallas_vs_ref(shape, dtype):
+    b, s, di, n, chunk, dib = shape
+    rng = np.random.default_rng(4)
+    x = jnp.asarray(rng.normal(size=(b, s, di)), dtype)
+    dt = jnp.asarray(rng.uniform(0.001, 0.1, size=(b, s, di)), dtype)
+    A = -jnp.asarray(rng.uniform(0.5, 2.0, size=(di, n)), jnp.float32)
+    B = jnp.asarray(rng.normal(size=(b, s, n)), dtype)
+    C = jnp.asarray(rng.normal(size=(b, s, n)), dtype)
+    D = jnp.asarray(rng.normal(size=(di,)), jnp.float32)
+    y_ref, _ = ref.selective_scan_ref(x, dt, A, B, C, D)
+    y_pl = selective_scan_pallas(x, dt, A, B, C, D, chunk=chunk,
+                                 di_block=dib, interpret=True)
+    tol = 1e-4 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(y_pl, np.float32),
+                               np.asarray(y_ref, np.float32), atol=tol)
+
+
+@pytest.mark.parametrize("chunk", [8, 16, 64])
+def test_mamba_chunked_vs_ref(chunk):
+    rng = np.random.default_rng(5)
+    b, s, di, n = 2, 64, 24, 8
+    x = jnp.asarray(rng.normal(size=(b, s, di)), jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.001, 0.1, size=(b, s, di)), jnp.float32)
+    A = -jnp.asarray(rng.uniform(0.5, 2.0, size=(di, n)), jnp.float32)
+    B = jnp.asarray(rng.normal(size=(b, s, n)), jnp.float32)
+    C = jnp.asarray(rng.normal(size=(b, s, n)), jnp.float32)
+    D = jnp.asarray(rng.normal(size=(di,)), jnp.float32)
+    y_ref, h_ref = ref.selective_scan_ref(x, dt, A, B, C, D)
+    y, h = ref.selective_scan_chunked(x, dt, A, B, C, D, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(h_ref), atol=1e-4)
+
+
+def test_mamba_chunked_with_initial_state():
+    rng = np.random.default_rng(6)
+    b, s, di, n = 1, 32, 16, 4
+    mk = lambda *sh: jnp.asarray(rng.normal(size=sh), jnp.float32)
+    x, B, C = mk(b, s, di), mk(b, s, n), mk(b, s, n)
+    dt = jnp.asarray(rng.uniform(0.001, 0.1, size=(b, s, di)), jnp.float32)
+    A = -jnp.asarray(rng.uniform(0.5, 2.0, size=(di, n)), jnp.float32)
+    D = mk(di)
+    # split the sequence: scanning halves with state handoff == full scan
+    y_full, h_full = ref.selective_scan_chunked(x, dt, A, B, C, D, chunk=8)
+    y1, h1 = ref.selective_scan_chunked(x[:, :16], dt[:, :16], A, B[:, :16],
+                                        C[:, :16], D, chunk=8)
+    y2, h2 = ref.selective_scan_chunked(x[:, 16:], dt[:, 16:], A, B[:, 16:],
+                                        C[:, 16:], D, h0=h1, chunk=8)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([y1, y2], 1)),
+                               np.asarray(y_full), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(h2), np.asarray(h_full), atol=1e-5)

@@ -1,0 +1,122 @@
+"""Market simulator properties (Fig. 2/9 shapes) + §4.1 interrupt loop."""
+
+import numpy as np
+import pytest
+
+from repro.core import (InterruptEvent, KubePACSProvisioner, Request,
+                        SpotMarketSimulator, e_total, generate_catalog,
+                        kubepacs_greedy, spotverse, spotkube, karpenter_like,
+                        preprocess)
+
+
+def test_catalog_deterministic():
+    a = generate_catalog(seed=7, max_offerings=100)
+    b = generate_catalog(seed=7, max_offerings=100)
+    assert [o.offering_id for o in a] == [o.offering_id for o in b]
+    assert [o.spot_price for o in a] == [o.spot_price for o in b]
+
+
+def test_catalog_marginals(catalog):
+    """Fig. 1 qualitative shapes baked into the generator."""
+    by_gen = {}
+    for o in catalog:
+        by_gen.setdefault(o.generation, []).append(o.bs_core)
+    gens = sorted(by_gen)
+    means = [np.mean(by_gen[g]) for g in gens]
+    assert all(a < b for a, b in zip(means, means[1:]))   # newer = faster
+    # specialization raises od price, not benchmark score
+    base = [o for o in catalog if o.specialization == "general"]
+    net = [o for o in catalog if o.specialization == "network"]
+    assert np.mean([o.od_price / o.vcpus for o in net]) > \
+        np.mean([o.od_price / o.vcpus for o in base])
+    assert abs(np.mean([o.bs_core for o in net])
+               - np.mean([o.bs_core for o in base])) / \
+        np.mean([o.bs_core for o in base]) < 0.05
+
+
+def test_fulfillment_tracks_t3(small_catalog):
+    """Fig. 9: higher T3 → more of a 50-node request fulfilled."""
+    sim = SpotMarketSimulator(small_catalog, seed=0)
+    snap = sim.snapshot()
+    lo = [o for o in snap if o.t3 <= 3]
+    hi = [o for o in snap if o.t3 >= 20]
+    assert lo and hi
+    f_lo = np.mean([sim.fulfill(o.offering_id, 50) for o in lo[:20]])
+    f_hi = np.mean([sim.fulfill(o.offering_id, 50) for o in hi[:20]])
+    assert f_hi > f_lo + 5
+
+
+def test_single_node_sps_misleading(small_catalog):
+    """Fig. 2: high single-node SPS does not imply multi-node fulfillment."""
+    sim = SpotMarketSimulator(small_catalog, seed=0)
+    trap = [o for o in sim.snapshot() if o.sps_single == 3 and o.t3 <= 3]
+    if not trap:
+        pytest.skip("no trap offerings in this catalog draw")
+    got = np.mean([sim.fulfill(o.offering_id, 50) for o in trap])
+    assert got < 15
+
+
+def test_interrupt_pressure(small_catalog):
+    sim = SpotMarketSimulator(small_catalog, seed=0)
+    snap = sim.snapshot()
+    o = max(snap, key=lambda o: o.t3)
+    calm = sim.interrupts_for_pool({o.offering_id: max(1, o.t3 // 4)}, hours=1)
+    rng_events = [sim.interrupts_for_pool({o.offering_id: o.t3 * 4}, hours=4)
+                  for _ in range(20)]
+    stressed = sum(sum(e.count for e in evs) for evs in rng_events)
+    assert stressed > sum(e.count for e in calm)
+
+
+def test_provisioner_excludes_interrupted(catalog):
+    prov = KubePACSProvisioner()
+    req = Request(pods=60, cpu_per_pod=2, mem_per_pod=2)
+    d1 = prov.provision(req, catalog)
+    assert d1.pool.total_pods >= req.pods
+    victim = d1.pool.items[0].offering.offering_id
+    prov.enqueue([InterruptEvent(time=0.0, offering_id=victim, count=1)])
+    d2 = prov.handle_interrupts(req, catalog, surviving_pods=0)
+    assert d2 is not None
+    assert victim in d2.excluded_offerings
+    assert victim not in {it.offering.offering_id for it in d2.pool.items}
+    assert d2.pool.total_pods >= req.pods
+
+
+def test_cache_ttl(catalog):
+    prov = KubePACSProvisioner(ttl_hours=1.0)
+    prov.cache.add("x@y", now=0.0)
+    assert "x@y" in prov.cache.excluded(0.5)
+    assert "x@y" not in prov.cache.excluded(2.0)
+
+
+def test_kubepacs_wins_scenarios(catalog):
+    """RQ-1 (Fig. 5a): KubePACS ≥ every baseline on E_Total."""
+    prov = KubePACSProvisioner()
+    for pods, cpu, mem in [(10, 1, 2), (100, 2, 2), (400, 1, 4), (75, 3, 5)]:
+        req = Request(pods=pods, cpu_per_pod=cpu, mem_per_pod=mem)
+        items = preprocess(catalog, req)
+        d = prov.provision(req, catalog)
+        ours = d.metrics["e_total"]
+        for fn in (kubepacs_greedy,
+                   lambda it, r: spotverse(it, r, "node"),
+                   lambda it, r: spotverse(it, r, "pod"),
+                   karpenter_like):
+            assert ours >= e_total(fn(items, pods), pods) - 1e-9
+
+
+def test_spotkube_small_scale(catalog):
+    """Fig. 5c setup: restricted pool, 4-per-type SpotKube vs KubePACS."""
+    from repro.core import restrict
+    types = sorted({o.instance_type for o in catalog})[:4]
+    small = restrict(catalog, instance_types=types)
+    req = Request(pods=20, cpu_per_pod=1, mem_per_pod=1)
+    items = preprocess(small, req)
+    if not items:
+        pytest.skip("restricted pool infeasible for this draw")
+    sk = spotkube(items, req.pods, seed=0, generations=30, population=24)
+    prov = KubePACSProvisioner()
+    d = prov.provision(req, small)
+    if sk.total_pods >= req.pods:
+        assert d.metrics["e_total"] >= e_total(sk, req.pods) - 1e-9
+    # SpotKube's rigidity: every selected type has exactly 4 nodes
+    for c in sk.counts:
+        assert c == 4

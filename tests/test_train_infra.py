@@ -1,0 +1,168 @@
+"""Optimizer, checkpointing, data pipeline, elastic runtime integration."""
+
+import dataclasses
+import os
+import tempfile
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro import optim
+from repro.configs import get_config, SHAPES
+from repro.core import Request, SpotMarketSimulator, generate_catalog
+from repro.data.pipeline import DataConfig, batch_specs, make_batch
+from repro.models import init_params
+from repro.runtime import ElasticConfig, ElasticSpotTrainer
+from repro.train import checkpoint as ckpt
+from repro.train.loop import make_train_step
+
+
+# ---------------------------------------------------------------- optim ----
+
+def test_adamw_minimizes_quadratic():
+    params = {"w": jnp.asarray([5.0, -3.0])}
+    state = optim.init_opt_state(params)
+    cfg = optim.OptConfig(lr=0.2, warmup_steps=0, total_steps=200,
+                          weight_decay=0.0, clip_norm=10.0)
+    for _ in range(150):
+        grads = {"w": 2 * params["w"]}
+        params, state, _ = optim.adamw_update(params, grads, state, cfg)
+    assert float(jnp.abs(params["w"]).max()) < 0.05
+
+
+def test_grad_clipping():
+    params = {"w": jnp.ones((4,))}
+    state = optim.init_opt_state(params)
+    cfg = optim.OptConfig(clip_norm=1.0, warmup_steps=0)
+    _, _, m = optim.adamw_update(params, {"w": jnp.full((4,), 100.0)},
+                                 state, cfg)
+    assert float(m["grad_norm"]) == pytest.approx(200.0)
+
+
+def test_schedule_shape():
+    cfg = optim.OptConfig(lr=1e-3, warmup_steps=10, total_steps=100,
+                          min_lr_ratio=0.1)
+    lrs = [float(optim.schedule(jnp.asarray(s), cfg)) for s in range(100)]
+    assert lrs[0] < lrs[9] <= cfg.lr * 1.0001          # warmup rises
+    assert max(lrs) <= cfg.lr * 1.0001
+    assert lrs[-1] >= cfg.lr * cfg.min_lr_ratio * 0.99  # cosine floor
+
+
+# ----------------------------------------------------------- checkpoint ----
+
+def test_checkpoint_roundtrip_and_retention():
+    cfg = get_config("internlm2-1.8b", smoke=True)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    opt_state = optim.init_opt_state(params)
+    with tempfile.TemporaryDirectory() as d:
+        for step in (1, 2, 3, 4, 5):
+            ckpt.save_checkpoint(d, step, params, opt_state, keep=2)
+        assert ckpt.latest_step(d) == 5
+        assert len([n for n in os.listdir(d) if n.startswith("step_")]) == 2
+        p2, o2, meta = ckpt.restore_checkpoint(d, params, opt_state)
+        assert meta["step"] == 5
+        for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(p2)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert not any(n.startswith(".tmp") for n in os.listdir(d))
+
+
+def test_checkpoint_no_partial_publish():
+    with tempfile.TemporaryDirectory() as d:
+        assert ckpt.latest_step(d) is None
+        with pytest.raises(FileNotFoundError):
+            ckpt.restore_checkpoint(d, {})
+
+
+# ------------------------------------------------------------------ data ----
+
+def test_data_determinism_and_resume():
+    cfg = get_config("internlm2-1.8b", smoke=True)
+    dcfg = DataConfig(seed=11)
+    a = make_batch(cfg, dcfg, step=7, shard=2, world=4, batch=4, seq=32)
+    b = make_batch(cfg, dcfg, step=7, shard=2, world=4, batch=4, seq=32)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])   # resumable
+    c = make_batch(cfg, dcfg, step=8, shard=2, world=4, batch=4, seq=32)
+    assert not np.array_equal(a["tokens"], c["tokens"])
+    d = make_batch(cfg, dcfg, step=7, shard=3, world=4, batch=4, seq=32)
+    assert not np.array_equal(a["tokens"], d["tokens"])       # shard-disjoint
+    assert a["targets"].shape == a["tokens"].shape
+    np.testing.assert_array_equal(a["targets"][:, :-1], a["tokens"][:, 1:])
+
+
+@pytest.mark.parametrize("arch", ["musicgen-large", "internvl2-1b",
+                                  "qwen2.5-14b"])
+@pytest.mark.parametrize("shape_name", ["train_4k", "prefill_32k",
+                                        "decode_32k"])
+def test_batch_specs_structure(arch, shape_name):
+    """Dry-run stand-ins mirror the runtime batch structure."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    specs = batch_specs(cfg, shape)
+    smoke = get_config(arch, smoke=True)
+    if shape.kind != "decode":
+        runtime = make_batch(smoke, DataConfig(), step=0, batch=2,
+                             seq=64 if smoke.input_mode != "vlm" else 64)
+        assert set(specs) == set(runtime)
+    for v in specs.values():
+        assert 0 not in v.shape
+
+
+# --------------------------------------------------------------- elastic ----
+
+def test_elastic_trainer_survives_interrupts():
+    cfg = get_config("internlm2-1.8b", smoke=True)
+    market = SpotMarketSimulator(generate_catalog(seed=3, max_offerings=300),
+                                 seed=3)
+    req = Request(pods=40, cpu_per_pod=2, mem_per_pod=4)
+    with tempfile.TemporaryDirectory() as d:
+        tr = ElasticSpotTrainer(cfg, req, market, d, ElasticConfig(
+            total_steps=24, ckpt_every=6, market_check_every=3,
+            market_hours_per_check=8.0, batch_rows=4, seq_len=64))
+        out = tr.run()
+    assert out["steps"] == 24
+    assert np.isfinite(out["losses"]).all()
+    assert np.mean(out["losses"][-6:]) < np.mean(out["losses"][:6])
+    # pool recovered to cover the request after every event
+    assert tr.pool.total_pods >= req.pods
+    if out["interrupts_handled"]:
+        assert out["recovery_times"] and max(out["recovery_times"]) < 30
+
+
+def test_elastic_trainer_restart_resumes():
+    cfg = get_config("internlm2-1.8b", smoke=True)
+    req = Request(pods=20, cpu_per_pod=2, mem_per_pod=4)
+    with tempfile.TemporaryDirectory() as d:
+        market = SpotMarketSimulator(
+            generate_catalog(seed=4, max_offerings=200), seed=4)
+        tr1 = ElasticSpotTrainer(cfg, req, market, d, ElasticConfig(
+            total_steps=10, ckpt_every=5, market_check_every=100,
+            batch_rows=2, seq_len=32))
+        tr1.run()
+        # process "dies"; a fresh trainer on the same dir resumes at step 10
+        tr2 = ElasticSpotTrainer(cfg, req, market, d, ElasticConfig(
+            total_steps=14, ckpt_every=5, market_check_every=100,
+            batch_rows=2, seq_len=32))
+        out = tr2.run()
+        assert any(e["event"] == "resume" and e["detail"]["from"] == 10
+                   for e in out["events"])
+        assert out["steps"] == 14
+
+
+# ----------------------------------------------------------- train step ----
+
+def test_train_step_improves_loss():
+    cfg = get_config("internlm2-1.8b", smoke=True)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    opt_state = optim.init_opt_state(params)
+    step = make_train_step(cfg, optim.OptConfig(lr=3e-3, warmup_steps=2,
+                                                total_steps=100),
+                           donate=False)
+    dcfg = DataConfig(seed=0)
+    losses = []
+    for s in range(20):
+        batch = make_batch(cfg, dcfg, step=s, batch=4, seq=64)
+        params, opt_state, metrics = step(params, opt_state, batch)
+        losses.append(float(metrics["loss"]))
+    assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.1
