@@ -1,0 +1,22 @@
+# Developer entry points.  PYTHONPATH=src is the only environment the repo
+# needs (ROADMAP.md "Tier-1 verify").
+
+PY := PYTHONPATH=src python
+
+.PHONY: verify test bench bench-solver
+
+## tier-1 gate: full test suite + a smoke pass of the solver microbenchmark
+verify:
+	$(PY) -m pytest -x -q
+	$(PY) -m benchmarks.bench_solver --smoke --json ""
+
+test:
+	$(PY) -m pytest -q
+
+## full paper figure/table sweep (slow; compiles dry-run cells)
+bench:
+	$(PY) -m benchmarks.run
+
+## solver microbenchmark at all market sizes; refreshes BENCH_solver.json
+bench-solver:
+	$(PY) -m benchmarks.bench_solver --json BENCH_solver.json

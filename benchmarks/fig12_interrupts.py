@@ -38,9 +38,10 @@ def run(cat=None, rounds: int = 6):
         lost_pods = sum(e.count for e in events) * 2
         survivors = max(0, pool.total_pods - lost_pods)
         prov.enqueue(events)
+        # one snapshot per round: both provisioners see the same market
+        snap = sim.snapshot()
         t0 = time.perf_counter()
-        repl = prov.handle_interrupts(req, sim.snapshot(),
-                                      surviving_pods=survivors)
+        repl = prov.handle_interrupts(req, snap, surviving_pods=survivors)
         ours_rec.append(time.perf_counter() - t0)
         # Fig. 12a/b compare the recommended instance TYPES: per-node spot
         # price (box plot) and per-node benchmark score
@@ -49,7 +50,7 @@ def run(cat=None, rounds: int = 6):
             ours_cost.append(repl.pool.hourly_cost / n)
             ours_perf.append(sum(it.bs * c for it, c in
                                  zip(repl.pool.items, repl.pool.counts)) / n)
-        items = preprocess(sim.snapshot(), req)
+        items = preprocess(snap, req)
         kp = karpenter_like(items, max(1, req.pods - survivors))
         if kp.total_nodes:
             karp_cost.append(kp.hourly_cost / kp.total_nodes)

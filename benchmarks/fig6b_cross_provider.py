@@ -5,9 +5,8 @@ reports only 17.9% of Azure candidates kept consistently-valid SPS and
 
 import numpy as np
 
-from repro.core import (Request, e_total, generate_catalog, preprocess,
-                        solve_ilp)
-from repro.core.efficiency import NodePool
+from repro.core import (Request, compile_market, e_total, generate_catalog,
+                        preprocess, score_counts_batch, solve_ilp_batch)
 from repro.core.gss import bracketed_gss
 from repro.core.market import FAMILY_SPECS
 
@@ -33,13 +32,13 @@ def run():
     for name, cat in (("aws", generate_catalog(seed=42)),
                       ("azure", azure_like_catalog(seed=42))):
         items = preprocess(cat, req)
-        pool, trace = bracketed_gss(items, req.pods, tolerance=0.01)
+        market = compile_market(items)
+        pool, trace = bracketed_gss(items, req.pods, tolerance=0.01,
+                                    market=market)
         grid = [i / 10 for i in range(11)]
-        curve = []
-        for a in grid:
-            counts = solve_ilp(items, req.pods, a)
-            curve.append(e_total(NodePool(items=items, counts=counts),
-                                 req.pods) if counts else 0.0)
+        batch = solve_ilp_batch(items, req.pods, grid, market=market)
+        curve = score_counts_batch(items, batch, req.pods,
+                                   arrays=market.metric_arrays)
         peak = int(np.argmax(curve))
         results[name] = {
             "e_total": e_total(pool, req.pods),

@@ -3,10 +3,14 @@
 from .market import (Offering, InterruptEvent, SpotMarketSimulator,
                      generate_catalog, restrict)
 from .efficiency import (Request, CandidateItem, NodePool, pods_per_instance,
-                         e_perf_cost, e_over_pods, e_total)
+                         e_perf_cost, e_over_pods, e_total, e_total_batch,
+                         pool_metric_arrays, score_counts_batch)
 from .scaling import scaled_benchmark_score, build_base_price_index, matches_intent
-from .ilp import solve_ilp, solve_ilp_pulp, objective_coefficients
-from .gss import golden_section_search, expected_iterations, GssTrace, PHI
+from .ilp import (solve_ilp, solve_ilp_batch, solve_ilp_pulp,
+                  solve_ilp_reference, objective_coefficients,
+                  CompiledMarket, compile_market)
+from .gss import (golden_section_search, bracketed_gss, expected_iterations,
+                  GssTrace, PHI)
 from .baselines import kubepacs_greedy, spotverse, spotkube, karpenter_like
 from .provisioner import (KubePACSProvisioner, ProvisioningDecision,
                           UnavailableOfferingsCache, preprocess, merge_pools)
@@ -14,9 +18,12 @@ from .provisioner import (KubePACSProvisioner, ProvisioningDecision,
 __all__ = [
     "Offering", "InterruptEvent", "SpotMarketSimulator", "generate_catalog",
     "restrict", "Request", "CandidateItem", "NodePool", "pods_per_instance",
-    "e_perf_cost", "e_over_pods", "e_total", "scaled_benchmark_score",
-    "build_base_price_index", "matches_intent", "solve_ilp", "solve_ilp_pulp",
-    "objective_coefficients", "golden_section_search", "expected_iterations",
+    "e_perf_cost", "e_over_pods", "e_total", "e_total_batch",
+    "pool_metric_arrays", "score_counts_batch", "scaled_benchmark_score",
+    "build_base_price_index", "matches_intent", "solve_ilp",
+    "solve_ilp_batch", "solve_ilp_pulp", "solve_ilp_reference",
+    "objective_coefficients", "CompiledMarket", "compile_market",
+    "golden_section_search", "bracketed_gss", "expected_iterations",
     "GssTrace", "PHI", "kubepacs_greedy", "spotverse", "spotkube",
     "karpenter_like", "KubePACSProvisioner", "ProvisioningDecision",
     "UnavailableOfferingsCache", "preprocess", "merge_pools",

@@ -30,18 +30,20 @@ def _empty(items: Sequence[CandidateItem]) -> NodePool:
 def kubepacs_greedy(items: Sequence[CandidateItem], req_pods: int) -> NodePool:
     """Rank by per-node performance-per-dollar Perf_i/SP_i; fill under T3."""
     pool = _empty(items)
-    order = sorted(range(len(items)),
-                   key=lambda i: items[i].perf / items[i].spot_price,
-                   reverse=True)
+    if not items:
+        return pool.nonzero()
+    perf = np.array([it.perf for it in items], dtype=np.float64)
+    price = np.array([it.spot_price for it in items], dtype=np.float64)
+    order = np.argsort(-perf / price, kind="stable")
     remaining = req_pods
     for i in order:
         if remaining <= 0:
             break
-        it = items[i]
+        it = items[int(i)]
         if it.pods <= 0 or it.t3 <= 0:
             continue
         take = min(it.t3, math.ceil(remaining / it.pods))
-        pool.counts[i] = take
+        pool.counts[int(i)] = take
         remaining -= take * it.pods
     return pool.nonzero()
 

@@ -5,6 +5,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, List, Optional, Sequence
 
+import numpy as np
+
 from .market import Offering
 
 
@@ -108,3 +110,59 @@ def e_total(pool: NodePool, req_pods: int) -> float:
     if pool.total_pods < req_pods:
         return 0.0   # unmet demand: not a valid provisioning decision
     return e_perf_cost(pool) * e_over_pods(pool, req_pods)
+
+
+def pool_metric_arrays(items: Sequence[CandidateItem],
+                       ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """(Perf_i, SP_i, Pod_i) as float64 vectors for batch scoring."""
+    perf = np.array([it.perf for it in items], dtype=np.float64)
+    price = np.array([it.spot_price for it in items], dtype=np.float64)
+    pods = np.array([it.pods for it in items], dtype=np.float64)
+    return perf, price, pods
+
+
+def e_total_batch(perf: np.ndarray, price: np.ndarray, pods: np.ndarray,
+                  counts: np.ndarray, req_pods: int) -> np.ndarray:
+    """Eq. 3 over a batch of count-vectors: counts is (n_pools, n_items).
+
+    Vectorized equivalent of scoring each row with :func:`e_total`; rows
+    that underfill the demand (or cost nothing) score 0, matching the
+    scalar path.  Used by the batched GSS prescan and the benchmarks.
+    """
+    counts = np.asarray(counts, dtype=np.float64)
+    perf_sum = counts @ perf
+    cost_sum = counts @ price
+    pods_sum = counts @ pods
+    with np.errstate(divide="ignore", invalid="ignore"):
+        score = (perf_sum / cost_sum) * (req_pods / pods_sum)
+    score[(pods_sum < req_pods) | (cost_sum <= 0) | (pods_sum <= 0)] = 0.0
+    return score
+
+
+def score_counts_batch(items: Sequence[CandidateItem],
+                       counts_list: Sequence[Optional[Sequence[int]]],
+                       req_pods: int, none_score: float = 0.0,
+                       arrays: Optional[tuple] = None) -> List[float]:
+    """Score per-α solver outputs (``None`` = infeasible) in one batch.
+
+    The canonical consumer of :func:`solve_ilp_batch` results: feasible
+    rows are scored with one :func:`e_total_batch` call and reassembled in
+    order; infeasible rows get ``none_score``.  ``arrays`` accepts a
+    precomputed (perf, price, pods) triple (e.g. from a CompiledMarket) to
+    skip the per-item rebuild.
+    """
+    feasible = [c for c in counts_list if c is not None]
+    if not feasible:
+        return [none_score] * len(counts_list)
+    perf, price, pods = (arrays if arrays is not None
+                         else pool_metric_arrays(items))
+    scores = e_total_batch(perf, price, pods, np.array(feasible), req_pods)
+    out: List[float] = []
+    fi = 0
+    for c in counts_list:
+        if c is None:
+            out.append(none_score)
+        else:
+            out.append(float(scores[fi]))
+            fi += 1
+    return out

@@ -6,6 +6,13 @@ reusing one interior evaluation per iteration (one ILP solve per iteration
 after the two initial solves; ≈ 5n+1 iterations for tolerance ε = 10⁻ⁿ,
 Eq. 6–7).  The best pool over *all* evaluated α is returned (Alg. 1's S*),
 which also guards against mild non-unimodality of the empirical E_Total(α).
+
+Engine wiring (DESIGN.md §8): when running with the default solver, both
+searches evaluate against a :class:`~repro.core.ilp.CompiledMarket` built
+once per call (or passed in by the provisioner), and ``bracketed_gss``'s
+prescan is a single :func:`~repro.core.ilp.solve_ilp_batch` vectorized DP
+over the whole α grid instead of ``prescan`` sequential solves.  A custom
+``solver`` callable falls back to the seed per-α path unchanged.
 """
 
 from __future__ import annotations
@@ -15,8 +22,10 @@ import math
 import time
 from typing import Callable, List, Optional, Sequence, Tuple
 
-from .efficiency import CandidateItem, NodePool, e_total
-from .ilp import solve_ilp
+import numpy as np
+
+from .efficiency import (CandidateItem, NodePool, e_total, score_counts_batch)
+from .ilp import CompiledMarket, compile_market, solve_ilp, solve_ilp_batch
 
 PHI = (math.sqrt(5.0) - 1.0) / 2.0     # ≈ 0.618
 
@@ -36,24 +45,32 @@ def expected_iterations(tolerance: float, a: float = 0.0, b: float = 1.0) -> int
     return int(math.ceil(math.log(tolerance / (b - a)) / math.log(PHI))) + 1
 
 
-def golden_section_search(
-    items: Sequence[CandidateItem],
-    req_pods: int,
-    tolerance: float = 0.01,
-    alpha_lo: float = 0.0,
-    alpha_hi: float = 1.0,
-    solver: Callable[[Sequence[CandidateItem], int, float], Optional[List[int]]] = solve_ilp,
-) -> Tuple[Optional[NodePool], GssTrace]:
-    """Algorithm 1 (lines 7–27).  Returns (best pool S*, evaluation trace)."""
-    trace = GssTrace()
-    t0 = time.perf_counter()
-    cache: dict[float, Tuple[Optional[NodePool], float]] = {}
+def _make_evaluator(items: Sequence[CandidateItem], req_pods: int,
+                    solver: Callable, market: Optional[CompiledMarket],
+                    exclude: Optional[np.ndarray], trace: GssTrace,
+                    cache: dict) -> Callable:
+    """One (α → (pool, E_Total)) evaluator shared by both searches.
+
+    The engine path solves against the compiled market (memory-flat DP,
+    preprocessing already hoisted); a custom ``solver`` keeps the seed
+    calling convention for tests and alternative backends.
+    """
+    use_engine = solver is solve_ilp
+    if not use_engine and exclude is not None:
+        raise ValueError("exclude masks require the default solve_ilp solver "
+                         "(custom solvers have no exclusion channel)")
+    if use_engine and market is None:
+        market = compile_market(items)
 
     def evaluate(alpha: float) -> Tuple[Optional[NodePool], float]:
         key = round(alpha, 12)
         if key in cache:
             return cache[key]
-        counts = solver(items, req_pods, alpha)
+        if use_engine:
+            counts = solve_ilp(items, req_pods, alpha, market=market,
+                               exclude=exclude)
+        else:
+            counts = solver(items, req_pods, alpha)
         trace.ilp_solves += 1
         if counts is None:
             pool, score = None, float("-inf")
@@ -64,6 +81,26 @@ def golden_section_search(
         trace.e_totals.append(score if score != float("-inf") else 0.0)
         cache[key] = (pool, score)
         return pool, score
+
+    return evaluate
+
+
+def golden_section_search(
+    items: Sequence[CandidateItem],
+    req_pods: int,
+    tolerance: float = 0.01,
+    alpha_lo: float = 0.0,
+    alpha_hi: float = 1.0,
+    solver: Callable[[Sequence[CandidateItem], int, float], Optional[List[int]]] = solve_ilp,
+    market: Optional[CompiledMarket] = None,
+    exclude: Optional[np.ndarray] = None,
+) -> Tuple[Optional[NodePool], GssTrace]:
+    """Algorithm 1 (lines 7–27).  Returns (best pool S*, evaluation trace)."""
+    trace = GssTrace()
+    t0 = time.perf_counter()
+    cache: dict[float, Tuple[Optional[NodePool], float]] = {}
+    evaluate = _make_evaluator(items, req_pods, solver, market, exclude,
+                               trace, cache)
 
     a, b = alpha_lo, alpha_hi
     x1 = b - PHI * (b - a)
@@ -100,29 +137,57 @@ def bracketed_gss(
     tolerance: float = 0.01,
     prescan: int = 9,
     solver: Callable[[Sequence[CandidateItem], int, float], Optional[List[int]]] = solve_ilp,
+    market: Optional[CompiledMarket] = None,
+    exclude: Optional[np.ndarray] = None,
 ) -> Tuple[Optional[NodePool], GssTrace]:
     """Guarded GSS (beyond-paper robustness hardening, DESIGN.md §7).
 
     The paper's Fig. 6 landscapes are empirically unimodal; a synthetic or
     adversarial market can produce secondary bumps that trap pure GSS in the
-    wrong bracket.  We first scan ``prescan`` equispaced α (constant extra
-    ILP solves), then run Algorithm 1 inside the grid cell bracketing the
-    best scan point.  Degrades gracefully to pure GSS quality on unimodal
-    landscapes; strictly better on bumpy ones.
+    wrong bracket.  We first scan ``prescan`` equispaced α (one *batched*
+    vectorized DP with the default solver — constant extra ILP solves, a
+    single numpy pass), then run Algorithm 1 inside the grid cell bracketing
+    the best scan point.  Degrades gracefully to pure GSS quality on
+    unimodal landscapes; strictly better on bumpy ones.
     """
     grid = [i / (prescan - 1) for i in range(prescan)]
-    best_pool, best_f, best_idx = None, float("-inf"), 0
+    use_engine = solver is solve_ilp
     scan_trace = GssTrace()
     t0 = time.perf_counter()
-    for gi, alpha in enumerate(grid):
-        counts = solver(items, req_pods, alpha)
-        scan_trace.ilp_solves += 1
-        if counts is None:
-            score = float("-inf")
-            pool = None
-        else:
-            pool = NodePool(items=list(items), counts=counts, alpha=alpha)
-            score = e_total(pool, req_pods)
+
+    if use_engine:
+        if market is None:
+            market = compile_market(items)
+        all_counts = solve_ilp_batch(items, req_pods, grid, market=market,
+                                     exclude=exclude)
+        scan_trace.ilp_solves += len(grid)
+        scores = score_counts_batch(
+            items, all_counts, req_pods, none_score=float("-inf"),
+            arrays=market.metric_arrays)
+        pools = [None if counts is None
+                 else NodePool(items=list(items), counts=counts)
+                 for counts in all_counts]
+    else:
+        if exclude is not None:
+            raise ValueError("exclude masks require the default solve_ilp "
+                             "solver (custom solvers have no exclusion "
+                             "channel)")
+        scores, pools = [], []
+        for alpha in grid:
+            counts = solver(items, req_pods, alpha)
+            scan_trace.ilp_solves += 1
+            if counts is None:
+                scores.append(float("-inf"))
+                pools.append(None)
+            else:
+                pool = NodePool(items=list(items), counts=counts, alpha=alpha)
+                scores.append(e_total(pool, req_pods))
+                pools.append(pool)
+
+    best_pool, best_f, best_idx = None, float("-inf"), 0
+    for gi, (alpha, score, pool) in enumerate(zip(grid, scores, pools)):
+        if pool is not None:
+            pool.alpha = alpha
         scan_trace.alphas.append(alpha)
         scan_trace.e_totals.append(max(score, 0.0))
         if score > best_f:
@@ -131,7 +196,9 @@ def bracketed_gss(
     lo = grid[max(0, best_idx - 1)]
     hi = grid[min(len(grid) - 1, best_idx + 1)]
     pool, trace = golden_section_search(items, req_pods, tolerance=tolerance,
-                                        alpha_lo=lo, alpha_hi=hi, solver=solver)
+                                        alpha_lo=lo, alpha_hi=hi,
+                                        solver=solver, market=market,
+                                        exclude=exclude)
     # merge traces and keep the global argmax
     trace.alphas = scan_trace.alphas + trace.alphas
     trace.e_totals = scan_trace.e_totals + trace.e_totals

@@ -1,22 +1,39 @@
-"""The ILP node-selection solver (paper §3.1, Eq. 4–5).
+"""The ILP node-selection solver (paper §3.1, Eq. 4–5) — batched engine.
 
     minimize   Σ_i ( -α·Perf_i/Perf_min + (1-α)·SP_i/SP_min ) · x_i
     subject to Σ_i Pod_i·x_i ≥ Req_pod,   0 ≤ x_i ≤ T3_i,   x_i ∈ ℤ
 
-Two interchangeable solvers:
+Three interchangeable solvers (all exact):
 
-* :func:`solve_ilp` — exact, dependency-free.  Items with negative objective
+* :func:`solve_ilp` — the production path.  Items with negative objective
   coefficient are saturated at their T3 bound (any ILP optimum does this; it
   is exactly the high-α over-provisioning collapse of Table 2), and the
   residual min-cost covering problem over non-negative items is a bounded
-  knapsack solved exactly by DP with binary bundle splitting.  Runs in
-  O(Σ_i log T3_i · Req_pod) with vectorized numpy updates.
+  knapsack solved exactly by a memory-flat DP: LP-bound bundle pruning, a
+  forward value pass, and min-plus divide-and-conquer backtracking that
+  reconstructs the optimal counts in O(bundles + residual) peak memory
+  (the seed implementation materialised an O(bundles × residual) float64
+  history matrix — ≈80 MB at 500 bundles × 20k pods).  See DESIGN.md §8.
+* :func:`solve_ilp_batch` — one vectorized (n_α × R+1) numpy DP evaluating
+  *all* α of a GSS prescan at once.  Bundle structure (pods, bounds, binary
+  splits) is α-independent; only the objective coefficients vary, so the DP
+  shift pattern is shared across the α axis and per-α saturation masks are
+  computed by broadcasting :func:`objective_coefficients` over the α grid.
 * :func:`solve_ilp_pulp` — the paper's actual tool (PuLP/CBC), used to
   cross-validate the DP in tests and available as a drop-in backend.
 
-Both return per-item integer counts, or ``None`` when demand exceeds the
-total bounded capacity (the paper assumes the cloud always has capacity;
-the provisioner surfaces this explicitly instead).
+:func:`solve_ilp_reference` preserves the seed history-matrix solver
+verbatim for cross-validation tests and as the benchmark baseline.
+
+All count-returning entry points return per-item integers, or ``None`` when
+demand exceeds the total bounded capacity (the paper assumes the cloud
+always has capacity; the provisioner surfaces this explicitly instead).
+
+Preprocessing (bundle splitting, pod/bound arrays, normalised objective
+terms) is hoisted into :class:`CompiledMarket`, built once per candidate
+set and reused across every α evaluated by a provisioning cycle — and
+across the re-optimisation cycles of §4.1 interrupt handling via the
+provisioner-level cache.
 """
 
 from __future__ import annotations
@@ -29,6 +46,12 @@ import numpy as np
 from .efficiency import CandidateItem
 
 _INF = float("inf")
+
+#: below this many bundles (or this small a target) the D&C backtracker
+#: switches to a dense history DP — the matrix is tiny there and the switch
+#: caps recursion overhead.
+_DENSE_BUNDLES = 16
+_DENSE_TARGET = 512
 
 
 @dataclasses.dataclass(frozen=True)
@@ -67,10 +90,441 @@ def _binary_bundles(count: int) -> List[int]:
     return out
 
 
+# ---------------------------------------------------------------------------
+# CompiledMarket: α-independent preprocessing, built once per candidate set
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class CompiledMarket:
+    """Everything about a candidate set that does not depend on α or demand.
+
+    The ILP objective at any α is a linear reweighting of two fixed vectors
+    (``perf_norm`` and ``price_norm``); the bounded-knapsack structure
+    (per-item pods, T3 bounds, binary bundle splits) never changes.  Building
+    this once per provisioning cycle and once per §4.1 re-optimisation is
+    what lets GSS evaluate ~20 α values without re-running preprocessing.
+    """
+
+    items: Tuple[CandidateItem, ...]
+    pods: np.ndarray          # (n,) int64   Pod_i
+    bound: np.ndarray         # (n,) int64   T3_i
+    perf: np.ndarray          # (n,) float64 Perf_i = BS_i·Pod_i
+    price: np.ndarray         # (n,) float64 SP_i
+    perf_min: float
+    sp_min: float
+    perf_norm: np.ndarray     # (n,) Perf_i / Perf_min
+    price_norm: np.ndarray    # (n,) SP_i / SP_min
+    structural: np.ndarray    # (n,) bool — pods > 0 and bound > 0
+    b_item: np.ndarray        # (B,) int64  bundle -> item index
+    b_pods: np.ndarray        # (B,) int64  bundle pod size
+    b_copies: np.ndarray      # (B,) int64  bundle node count
+
+    @property
+    def n(self) -> int:
+        return len(self.items)
+
+    @property
+    def n_bundles(self) -> int:
+        return len(self.b_item)
+
+    @property
+    def metric_arrays(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """(Perf_i, SP_i, Pod_i) float64 triple for ``score_counts_batch``."""
+        return self.perf, self.price, self.pods.astype(np.float64)
+
+    def coefficients(self, alphas: np.ndarray,
+                     exclude: Optional[np.ndarray] = None) -> np.ndarray:
+        """Broadcast Eq. 4–5 over an α grid: (n_alpha, n_items).
+
+        With an ``exclude`` mask the Perf_min/SP_min normalisation is taken
+        over the surviving candidates only — identical to rebuilding the
+        candidate set without the excluded offerings (§4.1 cache semantics).
+        """
+        a = np.asarray(alphas, dtype=np.float64).reshape(-1, 1)
+        if exclude is None or not np.any(exclude):
+            return -a * self.perf_norm + (1.0 - a) * self.price_norm
+        m = ~exclude
+        perf_pos = self.perf[m & (self.perf > 0)]
+        perf_min = float(perf_pos.min()) if perf_pos.size else 1.0
+        prices = self.price[m]
+        sp_min = float(prices.min()) if prices.size else 1.0
+        if sp_min <= 0:
+            raise ValueError("spot prices must be positive")
+        return -a * (self.perf / perf_min) + (1.0 - a) * (self.price / sp_min)
+
+
+def compile_market(items: Sequence[CandidateItem]) -> CompiledMarket:
+    """Hoist all α-independent solver preprocessing out of the hot path."""
+    items = tuple(items)
+    n = len(items)
+    pods = np.array([it.pods for it in items], dtype=np.int64)
+    bound = np.array([it.t3 for it in items], dtype=np.int64)
+    perf = np.array([it.perf for it in items], dtype=np.float64)
+    price = np.array([it.spot_price for it in items], dtype=np.float64)
+    if n:
+        positive_perf = perf[perf > 0]
+        perf_min = float(positive_perf.min()) if positive_perf.size else 1.0
+        sp_min = float(price.min())
+        if sp_min <= 0:
+            raise ValueError("spot prices must be positive")
+    else:
+        perf_min, sp_min = 1.0, 1.0
+    structural = (pods > 0) & (bound > 0)
+
+    b_item: List[int] = []
+    b_copies: List[int] = []
+    for i in np.nonzero(structural)[0]:
+        for copies in _binary_bundles(int(bound[i])):
+            b_item.append(int(i))
+            b_copies.append(copies)
+    b_item_arr = np.array(b_item, dtype=np.int64)
+    b_copies_arr = np.array(b_copies, dtype=np.int64)
+    b_pods_arr = (pods[b_item_arr] * b_copies_arr if len(b_item)
+                  else np.zeros(0, dtype=np.int64))
+    return CompiledMarket(
+        items=items, pods=pods, bound=bound, perf=perf, price=price,
+        perf_min=perf_min, sp_min=sp_min,
+        perf_norm=perf / perf_min, price_norm=price / sp_min,
+        structural=structural,
+        b_item=b_item_arr, b_pods=b_pods_arr, b_copies=b_copies_arr)
+
+
+# ---------------------------------------------------------------------------
+# Memory-flat covering knapsack: value pass, LP pruning, D&C backtracking
+# ---------------------------------------------------------------------------
+
+def _cover_dp(bpods: np.ndarray, bcosts: np.ndarray, target: int,
+              ) -> np.ndarray:
+    """Forward value pass: dp[j] = min cost of a bundle subset with ≥ j pods.
+
+    O(target) memory; the 0/1 semantics hold because ``dp[:-pb] + cb`` is
+    materialised before the in-place minimum writes back.
+    """
+    dp = np.full(target + 1, _INF)
+    dp[0] = 0.0
+    for b in range(len(bpods)):
+        pb = int(bpods[b])
+        cb = bcosts[b]
+        if pb > target:
+            np.minimum(dp, cb, out=dp)
+            continue
+        np.minimum(dp[pb:], dp[:-pb] + cb, out=dp[pb:])
+        if pb > 1:
+            np.minimum(dp[1:pb], dp[0] + cb, out=dp[1:pb])
+    return dp
+
+
+def _cover_dp_batch(bpods: np.ndarray, costs: np.ndarray, target: int,
+                    ) -> np.ndarray:
+    """Vectorized (n_alpha × target+1) value pass over a shared bundle set.
+
+    The shift pattern (``bpods``) is α-independent, so a single pass over
+    the bundle axis updates every α row at once; rows where a bundle is
+    masked out carry +inf cost and never win the minimum.
+    """
+    n_rows = costs.shape[0]
+    dp = np.full((n_rows, target + 1), _INF)
+    dp[:, 0] = 0.0
+    col = np.empty((n_rows, 1))
+    for b in range(len(bpods)):
+        pb = int(bpods[b])
+        col[:, 0] = costs[:, b]
+        if pb > target:
+            np.minimum(dp, col, out=dp)
+            continue
+        np.minimum(dp[:, pb:], dp[:, :-pb] + col, out=dp[:, pb:])
+        if pb > 1:
+            np.minimum(dp[:, 1:pb], dp[:, :1] + col, out=dp[:, 1:pb])
+    return dp
+
+
+def _lp_prune(bpods: np.ndarray, bcosts: np.ndarray, target: int,
+              ) -> np.ndarray:
+    """Exact LP-bound pruning: drop bundles no optimal solution can use.
+
+    Sort by unit cost; the fractional greedy gives a lower bound LP(j) for
+    covering j pods and the integral greedy a feasible upper bound UB.  Any
+    solution containing bundle b costs ≥ c_b + LP(target − p_b), so bundles
+    with c_b + LP(target − p_b) > UB are provably absent from *every*
+    optimum and can be removed before the DP.  All optimal solutions
+    survive, hence the pruned instance stays feasible and exact.
+    """
+    B = len(bpods)
+    if B == 0 or target <= 0:
+        return np.ones(B, dtype=bool)
+    rate = bcosts / bpods
+    order = np.argsort(rate, kind="stable")
+    p_sorted = bpods[order].astype(np.float64)
+    c_sorted = bcosts[order]
+    cum_p = np.cumsum(p_sorted)
+    cum_c = np.cumsum(c_sorted)
+    if cum_p[-1] < target:                      # infeasible: caller handles
+        return np.ones(B, dtype=bool)
+
+    # integral greedy upper bound: first prefix that covers the target
+    k_ub = int(np.searchsorted(cum_p, target))
+    ub = float(cum_c[k_ub])
+
+    # fractional lower bound LP(j), evaluated at j = target − p_b for all b
+    resid = np.maximum(target - bpods, 0).astype(np.float64)
+    k = np.searchsorted(cum_p, resid)
+    prev_p = np.where(k > 0, cum_p[np.maximum(k - 1, 0)], 0.0)
+    prev_c = np.where(k > 0, cum_c[np.maximum(k - 1, 0)], 0.0)
+    lp = prev_c + (resid - prev_p) * (c_sorted[k] / p_sorted[k])
+    lp[resid <= 0] = 0.0
+    keep = bcosts + lp <= ub * (1.0 + 1e-12) + 1e-9
+    return keep
+
+
+def _dense_backtrack(bpods: np.ndarray, bcosts: np.ndarray, target: int,
+                     ) -> np.ndarray:
+    """Seed-style history DP for small sub-problems (bounded matrix size)."""
+    B = len(bpods)
+    take = np.zeros(B, dtype=bool)
+    if target <= 0:
+        return take
+    dp = np.full(target + 1, _INF)
+    dp[0] = 0.0
+    history = np.empty((B + 1, target + 1))
+    history[0] = dp
+    for b in range(B):
+        pb = int(bpods[b])
+        cut = min(pb, target + 1)
+        shifted = np.empty(target + 1)
+        shifted[:cut] = dp[0]
+        if cut <= target:
+            shifted[cut:] = dp[: target + 1 - pb]
+        dp = np.minimum(dp, shifted + bcosts[b])
+        history[b + 1] = dp
+    j = target
+    for b in range(B - 1, -1, -1):
+        if j == 0:
+            break
+        if history[b + 1][j] < history[b][j] - 1e-12:
+            take[b] = True
+            j = max(0, j - int(bpods[b]))
+    return take
+
+
+def _dc_backtrack(bpods: np.ndarray, bcosts: np.ndarray, target: int,
+                  ) -> np.ndarray:
+    """Min-plus divide-and-conquer backtracking in O(B + target) memory.
+
+    dp over a disjoint union L ⊎ R satisfies
+        dp[t] = min_j dp_L[j] + dp_R[t − j],
+    so the split of the target between the two halves is recoverable from
+    two value passes and an O(t) min-convolution — no history matrix.  Work
+    telescopes to ≈2 full value passes (targets shrink geometrically).
+    """
+    B = len(bpods)
+    if target <= 0:
+        return np.zeros(B, dtype=bool)
+    if B <= _DENSE_BUNDLES or target <= _DENSE_TARGET:
+        return _dense_backtrack(bpods, bcosts, target)
+    mid = B // 2
+    dp_l = _cover_dp(bpods[:mid], bcosts[:mid], target)
+    dp_r = _cover_dp(bpods[mid:], bcosts[mid:], target)
+    tot = dp_l + dp_r[::-1]
+    j1 = int(np.argmin(tot))
+    if not np.isfinite(tot[j1]):
+        raise RuntimeError("D&C backtracking hit an infeasible split")
+    take = np.empty(B, dtype=bool)
+    take[:mid] = _dc_backtrack(bpods[:mid], bcosts[:mid], j1)
+    take[mid:] = _dc_backtrack(bpods[mid:], bcosts[mid:], target - j1)
+    return take
+
+
+def _solve_residual(bpods: np.ndarray, bcosts: np.ndarray, target: int,
+                    ) -> Tuple[np.ndarray, int]:
+    """Exact counts (bundle take-mask) for the residual covering knapsack.
+
+    Returns (take mask over the given bundles, number of bundles that
+    survived LP pruning).  Assumes feasibility was checked by the caller.
+    """
+    keep = _lp_prune(bpods, bcosts, target)
+    kept_idx = np.flatnonzero(keep)
+    take = np.zeros(len(bpods), dtype=bool)
+    take[kept_idx] = _dc_backtrack(bpods[kept_idx], bcosts[kept_idx], target)
+    return take, len(kept_idx)
+
+
+# ---------------------------------------------------------------------------
+# Public solvers
+# ---------------------------------------------------------------------------
+
+def _empty_market_result(req_pods: int, return_stats: bool):
+    result = None if req_pods > 0 else []
+    stats = IlpStats(0, 0, req_pods, _INF if req_pods > 0 else 0.0)
+    return (result, stats) if return_stats else result
+
+
 def solve_ilp(items: Sequence[CandidateItem], req_pods: int, alpha: float,
               return_stats: bool = False,
+              market: Optional[CompiledMarket] = None,
+              exclude: Optional[np.ndarray] = None,
               ) -> Optional[List[int]] | Tuple[Optional[List[int]], IlpStats]:
-    """Exact solver for Eq. 5.  Returns x_i per item (None if infeasible)."""
+    """Exact solver for Eq. 5.  Returns x_i per item (None if infeasible).
+
+    ``market`` reuses a :class:`CompiledMarket` (skips preprocessing);
+    ``exclude`` is a per-item boolean mask of offerings barred from the
+    solution (the §4.1 interrupted-offerings cache), applied at solve time
+    so the compiled market survives interrupt churn.
+    """
+    if market is None:
+        market = compile_market(items)
+    elif market.n != len(items):
+        raise ValueError(f"market was compiled from {market.n} items but "
+                         f"{len(items)} were passed — stale CompiledMarket?")
+    if market.n == 0:
+        return _empty_market_result(req_pods, return_stats)
+
+    coef = market.coefficients(np.array([alpha]), exclude)[0]
+    counts, stats = _solve_compiled(market, req_pods, coef, exclude)
+    return (counts, stats) if return_stats else counts
+
+
+def _solve_compiled(market: CompiledMarket, req_pods: int, coef: np.ndarray,
+                    exclude: Optional[np.ndarray],
+                    ) -> Tuple[Optional[List[int]], IlpStats]:
+    """Single-α solve against a compiled market (saturate → prune → DP)."""
+    n = market.n
+    active = market.structural if exclude is None else (
+        market.structural & ~exclude)
+
+    counts = np.zeros(n, dtype=np.int64)
+    neg = (coef < 0) & active
+    counts[neg] = market.bound[neg]
+    covered = int(np.sum(market.pods[neg] * market.bound[neg]))
+    objective = float(np.sum(coef[neg] * market.bound[neg]))
+
+    residual = max(0, req_pods - covered)
+    if residual == 0:
+        return list(map(int, counts)), IlpStats(n, 0, 0, objective)
+
+    in_dp = active & ~neg
+    if int(np.sum(market.pods[in_dp] * market.bound[in_dp])) < residual:
+        return None, IlpStats(n, 0, residual, _INF)
+
+    b_mask = in_dp[market.b_item]
+    bidx = np.flatnonzero(b_mask)
+    bpods = market.b_pods[bidx]
+    bcosts = coef[market.b_item[bidx]] * market.b_copies[bidx]
+    take, n_bundles = _solve_residual(bpods, bcosts, residual)
+    taken = bidx[take]
+    np.add.at(counts, market.b_item[taken], market.b_copies[taken])
+    objective += float(np.sum(coef[market.b_item[taken]]
+                              * market.b_copies[taken]))
+    return list(map(int, counts)), IlpStats(n, n_bundles, residual, objective)
+
+
+def solve_ilp_batch(items: Sequence[CandidateItem], req_pods: int,
+                    alphas: Sequence[float],
+                    market: Optional[CompiledMarket] = None,
+                    exclude: Optional[np.ndarray] = None,
+                    return_stats: bool = False,
+                    ) -> List[Optional[List[int]]] | Tuple[
+                        List[Optional[List[int]]], List[IlpStats]]:
+    """Solve Eq. 5 for every α of a prescan grid in one vectorized pass.
+
+    The bundle structure is α-independent; only objective coefficients vary.
+    Per-α saturation masks come from broadcasting the coefficient formula
+    over the α grid; feasibility is a shared capacity comparison; counts
+    are decoded per α with the memory-flat D&C backtracker on the LP-pruned
+    union bundle set.  With ``return_stats`` the per-α objectives come from
+    a single vectorized (n_alpha × R_max+1) numpy DP whose shift pattern is
+    the common bundle pod-size vector — the test suite cross-checks those
+    objectives against the decoded counts.
+    """
+    alphas = np.asarray(list(alphas), dtype=np.float64)
+    if market is None:
+        market = compile_market(items)
+    elif market.n != len(items):
+        raise ValueError(f"market was compiled from {market.n} items but "
+                         f"{len(items)} were passed — stale CompiledMarket?")
+    n_alpha = len(alphas)
+    if market.n == 0:
+        single = _empty_market_result(req_pods, True)
+        results = [single[0] for _ in range(n_alpha)]
+        stats = [single[1] for _ in range(n_alpha)]
+        return (results, stats) if return_stats else results
+
+    active = market.structural if exclude is None else (
+        market.structural & ~exclude)
+    coef2d = market.coefficients(alphas, exclude)            # (A, n)
+    neg2d = (coef2d < 0) & active                            # saturation masks
+    pods_x_bound = (market.pods * market.bound).astype(np.float64)
+    covered = neg2d @ pods_x_bound                           # (A,)
+    sat_obj = np.sum(np.where(neg2d, coef2d * market.bound, 0.0), axis=1)
+    residual = np.maximum(0, req_pods - covered).astype(np.int64)
+    in_dp = active & ~neg2d
+    capacity = in_dp @ pods_x_bound
+    feasible = capacity >= residual
+
+    need_dp = feasible & (residual > 0)
+    results: List[Optional[List[int]]] = [None] * n_alpha
+    stats: List[IlpStats] = [IlpStats(market.n, 0, int(residual[a]), _INF)
+                             for a in range(n_alpha)]
+
+    # rows solved by saturation alone
+    for a in np.flatnonzero(feasible & (residual == 0)):
+        counts = np.zeros(market.n, dtype=np.int64)
+        counts[neg2d[a]] = market.bound[neg2d[a]]
+        results[a] = list(map(int, counts))
+        stats[a] = IlpStats(market.n, 0, 0, float(sat_obj[a]))
+
+    rows = np.flatnonzero(need_dp)
+    if rows.size:
+        r_max = int(residual[rows].max())
+        # per-row bundle costs over the shared bundle set; masked rows -> inf
+        b_coef = coef2d[np.ix_(rows, market.b_item)]         # (rows, B)
+        b_costs = b_coef * market.b_copies
+        b_costs[~in_dp[np.ix_(rows, market.b_item)]] = _INF
+        # union LP prune across rows: keep a bundle if any row keeps it
+        keep_union = np.zeros(market.n_bundles, dtype=bool)
+        keeps = []
+        for ri, a in enumerate(rows):
+            keep = np.zeros(market.n_bundles, dtype=bool)
+            row_ok = np.isfinite(b_costs[ri])
+            ok_idx = np.flatnonzero(row_ok)
+            keep[ok_idx] = _lp_prune(market.b_pods[ok_idx],
+                                     b_costs[ri, ok_idx], int(residual[a]))
+            keeps.append(keep)
+            keep_union |= keep
+        dp = None
+        if return_stats:    # objectives ride one vectorized (A × R+1) DP
+            union_idx = np.flatnonzero(keep_union)
+            dp = _cover_dp_batch(market.b_pods[union_idx],
+                                 b_costs[:, union_idx], r_max)
+
+        for ri, a in enumerate(rows):
+            r = int(residual[a])
+            counts = np.zeros(market.n, dtype=np.int64)
+            counts[neg2d[a]] = market.bound[neg2d[a]]
+            row_idx = np.flatnonzero(keeps[ri])
+            take = _dc_backtrack(market.b_pods[row_idx],
+                                 b_costs[ri, row_idx], r)
+            taken = row_idx[take]
+            np.add.at(counts, market.b_item[taken], market.b_copies[taken])
+            results[a] = list(map(int, counts))
+            if dp is not None:
+                obj = float(sat_obj[a]) + float(dp[ri, r])
+                stats[a] = IlpStats(market.n, len(row_idx), r, obj)
+
+    return (results, stats) if return_stats else results
+
+
+# ---------------------------------------------------------------------------
+# Reference backends
+# ---------------------------------------------------------------------------
+
+def solve_ilp_reference(items: Sequence[CandidateItem], req_pods: int,
+                        alpha: float, return_stats: bool = False,
+                        ) -> Optional[List[int]] | Tuple[Optional[List[int]],
+                                                         IlpStats]:
+    """The seed history-matrix solver, retained verbatim as the baseline for
+    cross-validation tests and ``benchmarks/bench_solver.py``.  Peak memory
+    is O(bundles × residual): the ``history`` matrix below is exactly what
+    the production engine eliminates."""
     n = len(items)
     counts = [0] * n
     if n == 0:
@@ -81,8 +535,6 @@ def solve_ilp(items: Sequence[CandidateItem], req_pods: int, alpha: float,
     pods = np.array([it.pods for it in items], dtype=np.int64)
     bound = np.array([it.t3 for it in items], dtype=np.int64)
 
-    # Saturate strictly-negative-coefficient items (always optimal for an
-    # unpenalized minimization; this is what makes α→1 over-provision).
     neg = (coef < 0) & (bound > 0)
     covered = 0
     for i in np.nonzero(neg)[0]:
@@ -96,7 +548,6 @@ def solve_ilp(items: Sequence[CandidateItem], req_pods: int, alpha: float,
         stats = IlpStats(n, 0, 0, objective)
         return (counts, stats) if return_stats else counts
 
-    # Residual min-cost covering knapsack over non-negative items.
     idx = [i for i in range(n)
            if not neg[i] and bound[i] > 0 and pods[i] > 0]
     if int(np.sum(pods[idx] * bound[idx])) < residual:
@@ -125,7 +576,6 @@ def solve_ilp(items: Sequence[CandidateItem], req_pods: int, alpha: float,
     if not np.isfinite(dp[R]):
         return (None, IlpStats(n, len(bundles), residual, _INF)) if return_stats else None
 
-    # Backtrack through DP history (exact; ties resolve to "skip").
     j = R
     for b in range(len(bundles) - 1, -1, -1):
         if j == 0:

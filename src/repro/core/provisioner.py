@@ -18,10 +18,13 @@ from __future__ import annotations
 import collections
 import dataclasses
 import time
-from typing import Dict, Iterable, List, Optional, Sequence, Set
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+import numpy as np
 
 from .efficiency import CandidateItem, NodePool, Request, e_over_pods, e_perf_cost, e_total, pods_per_instance
 from .gss import GssTrace, bracketed_gss, golden_section_search
+from .ilp import CompiledMarket, compile_market
 from .market import InterruptEvent, Offering
 from .scaling import build_base_price_index, scaled_benchmark_score
 
@@ -82,15 +85,42 @@ class KubePACSProvisioner:
         self.cache = UnavailableOfferingsCache(ttl_hours)
         self.event_queue: collections.deque[InterruptEvent] = collections.deque()
         self.clock = 0.0   # advanced by the caller (simulator hours)
+        # compiled-market cache (DESIGN.md §8): bundle splits / pod / bound
+        # arrays depend only on the catalog snapshot and the request's
+        # per-pod shape, so re-optimisation against the *same* snapshot
+        # object (§4.1 interrupt handling within a market step, demand
+        # resizing) skips preprocessing; a fresh snapshot (prices moved)
+        # correctly rebuilds.
+        self._market_catalog: Optional[Sequence[Offering]] = None
+        self._market_shape: Optional[Tuple] = None
+        self._market_items: List[CandidateItem] = []
+        self._market: Optional[CompiledMarket] = None
+
+    def _compiled(self, request: Request, catalog: Sequence[Offering],
+                  ) -> Tuple[List[CandidateItem], CompiledMarket]:
+        # the held reference keeps the snapshot alive, so the identity check
+        # cannot alias a recycled object id
+        shape = (request.cpu_per_pod, request.mem_per_pod, request.workload)
+        if catalog is not self._market_catalog or shape != self._market_shape:
+            items = preprocess(catalog, request)
+            self._market_catalog = catalog
+            self._market_shape = shape
+            self._market_items = items
+            self._market = compile_market(items)
+        return self._market_items, self._market
 
     # -- main optimization cycle -------------------------------------------
     def provision(self, request: Request, catalog: Sequence[Offering],
                   ) -> ProvisioningDecision:
         t0 = time.perf_counter()
         excluded = self.cache.excluded(self.clock)
-        items = preprocess(catalog, request, excluded)
+        items, market = self._compiled(request, catalog)
+        exclude = (np.array([it.offering.offering_id in excluded
+                             for it in items], dtype=bool)
+                   if excluded else None)
         search = bracketed_gss if self.guarded_gss else golden_section_search
-        pool, trace = search(items, request.pods, tolerance=self.tolerance)
+        pool, trace = search(items, request.pods, tolerance=self.tolerance,
+                             market=market, exclude=exclude)
         wall = time.perf_counter() - t0
         if pool is None:   # demand exceeds bounded capacity: surface it
             pool = NodePool(items=[], counts=[], request=request)

@@ -145,7 +145,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
         compiled = lowered.compile()
         t_compile = time.perf_counter() - t0
 
-    cost = compiled.cost_analysis() or {}
+    cost = roofline.xla_cost_analysis(compiled)
     try:
         mem = compiled.memory_analysis()
         mem_info = {

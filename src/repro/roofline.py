@@ -353,6 +353,19 @@ def parse_collectives(hlo_text: str, n_devices: int) -> CollectiveStats:
                            count=cost.n_collectives)
 
 
+def xla_cost_analysis(compiled) -> Dict[str, float]:
+    """``compiled.cost_analysis()`` normalised across JAX versions.
+
+    Older JAX returns a dict; newer versions return a per-partition list of
+    dicts (one per SPMD program — identical for our single-program modules).
+    Always returns a plain dict so callers can ``.get("flops")`` safely.
+    """
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return dict(cost) if cost else {}
+
+
 @dataclasses.dataclass
 class Roofline:
     flops_per_device: float

@@ -1,0 +1,3 @@
+# Makes tests/ a package so `from tests.test_ilp import ...` and
+# `from tests._optional import ...` resolve under a bare `pytest`
+# invocation (pytest then puts the repo root, not tests/, on sys.path).

@@ -1,0 +1,39 @@
+"""Optional test dependencies: a drop-in shim for ``hypothesis``.
+
+The property-based tests are a bonus layer on top of the deterministic
+suite; when ``hypothesis`` is missing they should *skip*, not take their
+whole module down at collection time.  Importing ``given``/``settings``/
+``st`` from here instead of from ``hypothesis`` makes each ``@given`` test
+an individual skip while every deterministic test in the module still runs.
+"""
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                    # pragma: no cover
+    import pytest
+
+    HAVE_HYPOTHESIS = False
+
+    def given(*_args, **_kwargs):
+        def deco(fn):
+            return pytest.mark.skip(
+                reason="hypothesis not installed")(fn)
+        return deco
+
+    def settings(*_args, **_kwargs):
+        def deco(fn):
+            return fn
+        return deco
+
+    class _StrategyStub:
+        """Accepts any strategy-building call at module import time."""
+
+        def __getattr__(self, _name):
+            def strategy(*_args, **_kwargs):
+                return None
+            return strategy
+
+    st = _StrategyStub()
+
+__all__ = ["HAVE_HYPOTHESIS", "given", "settings", "st"]

@@ -7,6 +7,11 @@ import pytest
 from repro.core import Request, generate_catalog, preprocess
 
 
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers", "slow: long-running end-to-end test (compiles XLA cells)")
+
+
 @pytest.fixture(scope="session")
 def catalog():
     return generate_catalog(seed=0, max_offerings=600)

@@ -4,7 +4,8 @@ import math
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from tests._optional import given, settings, st
 
 from repro.core import (CandidateItem, NodePool, Offering, Request,
                         build_base_price_index, e_over_pods, e_perf_cost,

@@ -4,7 +4,8 @@ import itertools
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from tests._optional import given, settings, st
 
 from repro.core import CandidateItem, Offering, objective_coefficients, solve_ilp
 from repro.core.ilp import solve_ilp_pulp
@@ -58,6 +59,7 @@ def test_dp_matches_brute_force(items, req, alpha):
 @given(st.lists(item_strategy, min_size=2, max_size=12),
        st.integers(1, 60), st.floats(0.0, 1.0))
 def test_dp_matches_pulp(items, req, alpha):
+    pytest.importorskip("pulp")
     counts = solve_ilp(items, req, alpha)
     pulp_counts = solve_ilp_pulp(items, req, alpha)
     coef = objective_coefficients(items, alpha)
@@ -88,6 +90,7 @@ def test_alpha_one_saturates(items_100):
 
 
 def test_alpha_zero_minimizes_cost(items_100):
+    pytest.importorskip("pulp")
     items = items_100[:60]
     counts = solve_ilp(items, 40, 0.0)
     cost = sum(c * it.spot_price for c, it in zip(counts, items))

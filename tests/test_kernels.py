@@ -5,7 +5,8 @@ import numpy as np
 import pytest
 import jax
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+
+from tests._optional import given, settings, st
 
 from repro.kernels import ops, ref
 from repro.kernels.flash_attention import flash_attention_pallas

@@ -7,7 +7,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.roofline import (HBM_BW, LINK_BW, PEAK_FLOPS, Roofline,
-                            analyze_hlo, model_flops, parse_collectives)
+                            analyze_hlo, model_flops, parse_collectives,
+                            xla_cost_analysis)
 from repro.configs import SHAPES, get_config
 from repro.models.transformer import active_params
 
@@ -18,7 +19,7 @@ def test_loop_free_matches_cost_analysis():
     c = analyze_hlo(comp.as_text(), 1)
     assert c.flops == pytest.approx(2 * 256 * 512 * 128, rel=0.05)
     assert c.bytes == pytest.approx(
-        float(comp.cost_analysis()["bytes accessed"]), rel=0.2)
+        float(xla_cost_analysis(comp)["bytes accessed"]), rel=0.2)
 
 
 def test_scan_trip_counts_multiplied():
@@ -31,7 +32,7 @@ def test_scan_trip_counts_multiplied():
     c = analyze_hlo(comp.as_text(), 1)
     assert c.flops == pytest.approx(9 * 2 * 8 * 64 * 64, rel=0.05)
     # cost_analysis counts the body once — document the gap this fixes
-    xla = float(comp.cost_analysis()["flops"])
+    xla = float(xla_cost_analysis(comp)["flops"])
     assert xla < c.flops / 4
 
 
