@@ -3,12 +3,18 @@
 
 PY := PYTHONPATH=src python
 
-.PHONY: verify test bench bench-solver
+.PHONY: verify test bench bench-solver docs-check
 
 ## tier-1 gate: full test suite + a smoke pass of the solver microbenchmark
+## + the docs gate (README quickstart runs, DESIGN.md refs resolve)
 verify:
 	$(PY) -m pytest -x -q
 	$(PY) -m benchmarks.bench_solver --smoke --json ""
+	$(PY) tools/docs_check.py
+
+## smoke-run README quickstart code blocks; fail on dangling DESIGN.md §refs
+docs-check:
+	$(PY) tools/docs_check.py
 
 test:
 	$(PY) -m pytest -q

@@ -1,6 +1,10 @@
 """Framework benchmark: elastic spot training under injected interruptions —
 steps/s, recovery latency, and provisioning overhead of the integrated
-KubePACS control plane (the paper's <2 s / <194 MB overhead claim, §5.3)."""
+KubePACS control plane (the paper's <2 s / <194 MB overhead claim, §5.3).
+
+The trainer is driven by the scenario engine's event stream: the market,
+interruption sampling, and the replayable trace all live in a
+``ClusterSim`` wrapped around the seeded market."""
 
 import tempfile
 import time
@@ -10,17 +14,19 @@ import numpy as np
 from repro.configs import get_config
 from repro.core import Request, SpotMarketSimulator, generate_catalog
 from repro.runtime import ElasticConfig, ElasticSpotTrainer
-
-from . import common
+from repro.sim import ClusterSim
 
 
 def run():
     cfg = get_config("internlm2-1.8b", smoke=True)
     market = SpotMarketSimulator(generate_catalog(seed=3, max_offerings=400),
                                  seed=3)
+    cluster = ClusterSim.from_market(market, interrupt_model="pressure",
+                                     interrupt_seed=3,
+                                     name="elastic_training")
     req = Request(pods=40, cpu_per_pod=2, mem_per_pod=4)
     with tempfile.TemporaryDirectory() as d:
-        tr = ElasticSpotTrainer(cfg, req, market, d, ElasticConfig(
+        tr = ElasticSpotTrainer(cfg, req, cluster, d, ElasticConfig(
             total_steps=40, ckpt_every=10, market_check_every=4,
             market_hours_per_check=6.0, batch_rows=8, seq_len=128))
         t0 = time.perf_counter()
@@ -36,6 +42,7 @@ def run():
         "mean_recovery_s": float(np.mean(out["recovery_times"]))
         if out["recovery_times"] else 0.0,
         "provision_wall_s": float(np.mean(prov_wall)) if prov_wall else 0.0,
+        "trace_records": out["trace_records"],
         "us_per_call": wall / out["steps"] * 1e6,
     }
 
@@ -47,7 +54,8 @@ def main():
           f"loss_drop={out['loss_drop']:.3f};"
           f"interrupts={out['interrupts_handled']};"
           f"recovery={out['mean_recovery_s']:.2f}s;"
-          f"provision={out['provision_wall_s']:.2f}s")
+          f"provision={out['provision_wall_s']:.2f}s;"
+          f"trace={out['trace_records']}rec")
     return out
 
 

@@ -1,29 +1,40 @@
 """Fig. 7: GSS tolerance ε vs solver latency/ILP-solve count vs E_Total.
 
-Claims: iterations ≈ 5n+1 for ε=10⁻ⁿ (Eq. 7); ε=0.01 is the sweet spot."""
+Claims: iterations ≈ 5n+1 for ε=10⁻ⁿ (Eq. 7); ε=0.01 is the sweet spot.
 
-import numpy as np
+Re-derived as scenarios: one zero-duration scenario per ε running the
+unguarded Algorithm-1 GSS (the paper's configuration) through the engine;
+each row is the scenario's initial ProvisioningDecision."""
 
-from repro.core import Request, e_total, expected_iterations, preprocess
-from repro.core.gss import golden_section_search
+from repro.core import expected_iterations
+from repro.sim import ClusterSim, Scenario
 
 from . import common
 
 
+def scenario(eps: float, max_offerings: int = 2000) -> Scenario:
+    return Scenario(
+        name=f"fig7_eps{eps:g}", duration_hours=0.0,
+        pods=100, cpu_per_pod=2, mem_per_pod=2,
+        policy="kubepacs_unguarded", tolerance=eps,
+        interrupt_model="none", catalog_seed=0, max_offerings=max_offerings,
+    )
+
+
 def run(cat=None):
     cat = cat or common.catalog()
-    req = Request(pods=100, cpu_per_pod=2, mem_per_pod=2)
-    items = preprocess(cat, req)
     rows = []
     for n in (1, 2, 3, 4):
         eps = 10.0 ** -n
-        pool, trace = golden_section_search(items, req.pods, tolerance=eps)
+        res = ClusterSim(scenario(eps, max_offerings=len(cat)),
+                         catalog=cat).run()
+        _, decision = res.decisions[0]
         rows.append({
             "eps": eps,
-            "ilp_solves": trace.ilp_solves,
+            "ilp_solves": decision.trace.ilp_solves,
             "predicted_iters": expected_iterations(eps),
-            "wall_s": trace.wall_seconds,
-            "e_total": e_total(pool, req.pods) if pool else 0.0,
+            "wall_s": decision.trace.wall_seconds,
+            "e_total": decision.metrics["e_total"],
         })
     base = max(r["e_total"] for r in rows)
     for r in rows:

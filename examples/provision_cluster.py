@@ -1,14 +1,14 @@
 """Long-horizon provisioning session: a KubePACS-managed pool tracked over a
-simulated 48-hour spot market with interruptions, re-optimizations, and the
-workload-intent heuristic — prints an hour-by-hour operations log.
+simulated spot market with interruptions, re-optimizations, and the
+workload-intent heuristic — an hour-by-hour operations log, driven by the
+scenario engine (one declarative Scenario instead of a hand-rolled loop).
 
     PYTHONPATH=src python examples/provision_cluster.py --hours 48
 """
 
 import argparse
 
-from repro.core import (KubePACSProvisioner, Request, SpotMarketSimulator,
-                        generate_catalog, merge_pools)
+from repro.sim import ClusterSim, Scenario
 
 
 def main():
@@ -19,48 +19,39 @@ def main():
                     choices=["none", "network", "disk", "both"])
     args = ap.parse_args()
 
-    intent = {"none": frozenset(), "network": frozenset({"network"}),
-              "disk": frozenset({"disk"}),
-              "both": frozenset({"network", "disk"})}[args.intent]
-    request = Request(pods=args.pods, cpu_per_pod=2, mem_per_pod=4,
-                      workload=intent)
-    sim = SpotMarketSimulator(generate_catalog(seed=11), seed=11)
-    prov = KubePACSProvisioner(ttl_hours=3.0)
+    intent = {"none": (), "network": ("network",), "disk": ("disk",),
+              "both": ("network", "disk")}[args.intent]
+    scenario = Scenario(
+        name="provision_cluster",
+        duration_hours=float(args.hours), step_hours=1.0,
+        pods=args.pods, cpu_per_pod=2, mem_per_pod=4, workload=intent,
+        interrupt_model="pressure", policy="kubepacs", ttl_hours=3.0,
+        catalog_seed=11, max_offerings=2000,
+        market_seed=11, interrupt_seed=11,
+    )
+    sim = ClusterSim(scenario)
+    res = sim.run()
 
-    d = prov.provision(request, sim.snapshot())
-    pool = d.pool
-    print(f"t=0h  provisioned {pool.total_nodes} nodes / {pool.total_pods} "
-          f"pods @ ${pool.hourly_cost:.2f}/h  (alpha*={d.alpha:.3f}, "
-          f"{d.wall_seconds:.2f}s)")
-
-    total_cost, interrupts = 0.0, 0
-    for h in range(1, args.hours + 1):
-        sim.step(1.0)
-        prov.clock = sim.time
-        total_cost += pool.hourly_cost
-        events = sim.interrupts_for_pool(pool.as_dict(), hours=1.0)
-        if not events:
+    _, d0 = res.decisions[0]
+    print(f"t=0h  provisioned {d0.pool.total_nodes} nodes / "
+          f"{d0.pool.total_pods} pods @ ${d0.pool.hourly_cost:.2f}/h  "
+          f"(alpha*={d0.alpha:.3f}, {d0.wall_seconds:.2f}s)")
+    for rd in res.rounds:
+        if not rd.effective:
             continue
-        lost = sum(e.count for e in events)
-        interrupts += lost
-        prov.enqueue(events)
-        lost_pods = sum(
-            e.count * next((it.pods for it in pool.items
-                            if it.offering.offering_id == e.offering_id), 1)
-            for e in events)
-        survivors = max(0, pool.total_pods - lost_pods)
-        repl = prov.handle_interrupts(request, sim.snapshot(),
-                                      surviving_pods=survivors)
+        repl = rd.decision
         if repl is not None and repl.pool.total_nodes:
-            pool = merge_pools(pool, repl.pool)  # survivors + replacements
-            print(f"t={h}h  lost {lost} nodes ({lost_pods} pods) -> "
-                  f"replaced with {repl.pool.total_nodes} nodes in "
-                  f"{repl.wall_seconds:.2f}s; cache={len(prov.cache)} "
-                  f"excluded offerings")
+            print(f"t={rd.time:.0f}h  lost {rd.lost_nodes} nodes "
+                  f"({rd.lost_pods} pods) -> replaced with "
+                  f"{repl.pool.total_nodes} nodes in "
+                  f"{repl.wall_seconds:.2f}s; "
+                  f"{len(repl.excluded_offerings)} excluded offerings")
 
-    print(f"\n{args.hours}h summary: ${total_cost:.2f} spent, "
-          f"{interrupts} node interruptions absorbed, "
-          f"final pool {pool.total_nodes} nodes / {pool.total_pods} pods")
+    print(f"\n{args.hours}h summary: ${res.total_cost:.2f} spent, "
+          f"{res.interrupted_nodes} node interruptions absorbed, "
+          f"final pool {res.pool.total_nodes} nodes / "
+          f"{res.pool.total_pods} pods "
+          f"({len(res.records)} trace records)")
 
 
 if __name__ == "__main__":

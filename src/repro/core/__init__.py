@@ -1,10 +1,12 @@
 """KubePACS control plane: the paper's contribution as a composable library."""
 
 from .market import (Offering, InterruptEvent, SpotMarketSimulator,
-                     generate_catalog, restrict)
+                     generate_catalog, restrict, snapshot_with,
+                     pressure_interrupt_probability)
 from .efficiency import (Request, CandidateItem, NodePool, pods_per_instance,
                          e_perf_cost, e_over_pods, e_total, e_total_batch,
-                         pool_metric_arrays, score_counts_batch)
+                         decision_metrics, pool_metric_arrays,
+                         score_counts_batch)
 from .scaling import scaled_benchmark_score, build_base_price_index, matches_intent
 from .ilp import (solve_ilp, solve_ilp_batch, solve_ilp_pulp,
                   solve_ilp_reference, objective_coefficients,
@@ -27,4 +29,5 @@ __all__ = [
     "GssTrace", "PHI", "kubepacs_greedy", "spotverse", "spotkube",
     "karpenter_like", "KubePACSProvisioner", "ProvisioningDecision",
     "UnavailableOfferingsCache", "preprocess", "merge_pools",
+    "snapshot_with", "pressure_interrupt_probability", "decision_metrics",
 ]

@@ -1,4 +1,30 @@
-"""Request/candidate data types and the paper's efficiency metrics (Eq. 1–3)."""
+"""Request/candidate data types and the paper's efficiency metrics (Eq. 1–3).
+
+Implements, with the symbol names used throughout DESIGN.md and Table 1:
+
+* **Eq. 1** — :func:`pods_per_instance`:
+  ``Pod_i = min(⌊CPU_i/Req_cpu⌋, ⌊Mem_i/Req_mem⌋)``, the per-instance pod
+  capacity that converts a node-selection problem into pod coverage.
+* **Eq. 2 (left), E_PerfCost** — :func:`e_perf_cost`: cumulative
+  performance-per-dollar of the selected pool,
+  ``Σ_i Perf_i·x_i / Σ_i SP_i·x_i`` with ``Perf_i = BS_i·Pod_i``
+  (aggregate/aggregate — see the interpretation note on the function and
+  DESIGN.md §7 for why the literal per-node-ratio reading is rejected).
+* **Eq. 2 (right), E_OverPods** — :func:`e_over_pods`:
+  ``Req_pod / Σ_i Pod_i·x_i``, the over-provisioning penalty that
+  normalizes performance-per-dollar by how much capacity exceeds demand.
+* **Eq. 3, E_Total** — :func:`e_total`: ``E_PerfCost × E_OverPods``,
+  0 for pools that underfill the demand — the objective GSS maximizes
+  over α (Alg. 1) and the metric every figure/table reports.
+
+The E_perf/E_cost *normalization* of the ILP objective itself
+(``-α·Perf_i/Perf_min + (1−α)·SP_i/SP_min``, Eq. 4–5) lives in
+:func:`repro.core.ilp.objective_coefficients`; this module only scores
+completed pools.  Batch variants (:func:`e_total_batch`,
+:func:`score_counts_batch`) score (n_pools × n_items) count matrices in
+one vectorized pass for the batched GSS prescan (DESIGN.md §8) and the
+scenario engine's sweeps (DESIGN.md §9).
+"""
 
 from __future__ import annotations
 
@@ -110,6 +136,21 @@ def e_total(pool: NodePool, req_pods: int) -> float:
     if pool.total_pods < req_pods:
         return 0.0   # unmet demand: not a valid provisioning decision
     return e_perf_cost(pool) * e_over_pods(pool, req_pods)
+
+
+def decision_metrics(pool: NodePool, req_pods: int) -> Dict[str, float]:
+    """The canonical metric dict attached to every ProvisioningDecision —
+    one schema across the KubePACS provisioner and every scenario-engine
+    policy (trace consumers index these keys unconditionally).  An empty
+    (infeasible) pool scores 0 everywhere rather than dropping keys."""
+    return {
+        "e_total": e_total(pool, req_pods),
+        "e_perf_cost": e_perf_cost(pool),
+        "e_over_pods": e_over_pods(pool, req_pods),
+        "hourly_cost": pool.hourly_cost,
+        "nodes": float(pool.total_nodes),
+        "pods": float(pool.total_pods),
+    }
 
 
 def pool_metric_arrays(items: Sequence[CandidateItem],

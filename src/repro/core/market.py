@@ -220,6 +220,35 @@ class InterruptEvent:
     reason: str = "capacity-reclaim"
 
 
+def snapshot_with(catalog: Sequence[Offering], spot: np.ndarray,
+                  t3: np.ndarray) -> List[Offering]:
+    """Materialize a market snapshot: the static catalog with live SP_i/T3_i.
+
+    Shared by :meth:`SpotMarketSimulator.snapshot` and the scenario engine's
+    replay path (``repro.sim``), which reconstructs snapshots from recorded
+    ``market_state`` trace records instead of a live simulator.
+    """
+    return [dataclasses.replace(o, spot_price=float(spot[i]), t3=int(t3[i]))
+            for i, o in enumerate(catalog)]
+
+
+def pressure_interrupt_probability(count: int, t3: float,
+                                   interruption_freq: int,
+                                   hours: float) -> float:
+    """Per-request interrupt probability of the pressure/IF model.
+
+    Rises as the allocation approaches/exceeds the pool's live T3 capacity
+    and with the SpotLake IF band.  Shared by the simulator's built-in
+    sampler and ``repro.sim.interrupts.PressureInterruptModel`` (which runs
+    the same law on its own RNG stream so scenario traces replay without
+    touching the market's price RNG).
+    """
+    pressure = count / max(t3, 0.5)
+    p = float(np.clip(0.01 + 0.10 * max(0.0, pressure - 0.8)
+                      + 0.015 * interruption_freq, 0.0, 0.9))
+    return 1.0 - (1.0 - p) ** hours
+
+
 class SpotMarketSimulator:
     """Time-stepped market: OU spot prices, drifting T3, interruptions.
 
@@ -242,12 +271,18 @@ class SpotMarketSimulator:
         self._index = {o.offering_id: i for i, o in enumerate(catalog)}
 
     # -- market state ------------------------------------------------------
+    @property
+    def catalog(self) -> List[Offering]:
+        """The static offering universe this market evolves (t=0 prices)."""
+        return list(self._base)
+
     def snapshot(self) -> List[Offering]:
-        out = []
-        for i, o in enumerate(self._base):
-            out.append(dataclasses.replace(
-                o, spot_price=float(self._spot[i]), t3=int(self._t3[i])))
-        return out
+        return snapshot_with(self._base, self._spot, self._t3)
+
+    def state_arrays(self) -> Tuple[np.ndarray, np.ndarray]:
+        """Copies of the live (spot, t3) vectors — the scenario engine's
+        trace hook: these two arrays fully determine ``snapshot()``."""
+        return self._spot.copy(), self._t3.copy()
 
     def step(self, hours: float = 1.0) -> None:
         """Advance market state (mean-reverting prices, random-walk T3)."""
@@ -259,6 +294,27 @@ class SpotMarketSimulator:
         dt3 = self._rng.normal(0.0, self._t3_vol * math.sqrt(hours), size=n)
         self._t3 = np.clip(self._t3 + np.round(dt3).astype(np.int64), 0, 50)
         self.time += hours
+
+    def apply_shock(self, selector: str = "", price_factor: float = 1.0,
+                    t3_factor: float = 1.0) -> int:
+        """Scale spot prices / T3 capacity of matching offerings (RNG-free).
+
+        ``selector`` is a substring match on ``offering_id`` ("" = whole
+        market).  This is the scenario engine's deterministic shock hook
+        (supply crunches, price spikes, an AZ losing capacity); the OU
+        mean-reversion of :meth:`step` then pulls prices back toward anchor.
+        Returns the number of offerings affected.
+        """
+        mask = np.array([selector in o.offering_id for o in self._base],
+                        dtype=bool)
+        if price_factor != 1.0:
+            self._spot[mask] = np.clip(self._spot[mask] * price_factor,
+                                       0.03 * self._od[mask],
+                                       1.0 * self._od[mask])
+        if t3_factor != 1.0:
+            self._t3[mask] = np.clip(
+                np.round(self._t3[mask] * t3_factor).astype(np.int64), 0, 50)
+        return int(mask.sum())
 
     # -- provisioning-side interactions -------------------------------------
     def fulfill(self, offering_id: str, count: int,
@@ -287,11 +343,8 @@ class SpotMarketSimulator:
                 continue
             i = self._index[offering_id]
             o = self._base[i]
-            t3 = float(self._t3[i])
-            pressure = count / max(t3, 0.5)
-            p = float(np.clip(0.01 + 0.10 * max(0.0, pressure - 0.8)
-                              + 0.015 * o.interruption_freq, 0.0, 0.9))
-            p = 1.0 - (1.0 - p) ** hours
+            p = pressure_interrupt_probability(count, float(self._t3[i]),
+                                               o.interruption_freq, hours)
             lost = int(self._rng.binomial(count, p))
             if lost > 0:
                 events.append(InterruptEvent(

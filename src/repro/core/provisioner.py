@@ -22,7 +22,8 @@ from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
 
 import numpy as np
 
-from .efficiency import CandidateItem, NodePool, Request, e_over_pods, e_perf_cost, e_total, pods_per_instance
+from .efficiency import (CandidateItem, NodePool, Request, decision_metrics,
+                         pods_per_instance)
 from .gss import GssTrace, bracketed_gss, golden_section_search
 from .ilp import CompiledMarket, compile_market
 from .market import InterruptEvent, Offering
@@ -55,6 +56,17 @@ class ProvisioningDecision:
     wall_seconds: float
     excluded_offerings: Set[str]
     metrics: Dict[str, float]
+
+
+def exclusion_mask(items: Sequence[CandidateItem],
+                   excluded: Set[str]) -> Optional[np.ndarray]:
+    """Boolean solver mask over ``items`` for the TTL-cached offering_ids —
+    the single definition of exclusion semantics, shared by the KubePACS
+    provisioner and every scenario-engine policy."""
+    if not excluded:
+        return None
+    return np.array([it.offering.offering_id in excluded for it in items],
+                    dtype=bool)
 
 
 def preprocess(catalog: Sequence[Offering], request: Request,
@@ -97,7 +109,15 @@ class KubePACSProvisioner:
         self._market: Optional[CompiledMarket] = None
 
     def _compiled(self, request: Request, catalog: Sequence[Offering],
+                  precompiled: Optional[Tuple[List[CandidateItem],
+                                              CompiledMarket]] = None,
                   ) -> Tuple[List[CandidateItem], CompiledMarket]:
+        if precompiled is not None:
+            # scenario-engine sharing hook: N replica provisioners solving
+            # against the same snapshot reuse one preprocessed candidate set
+            # + CompiledMarket (candidate shape ignores request.pods, so a
+            # shortfall-sized replacement request shares it too)
+            return precompiled
         # the held reference keeps the snapshot alive, so the identity check
         # cannot alias a recycled object id
         shape = (request.cpu_per_pod, request.mem_per_pod, request.workload)
@@ -111,32 +131,24 @@ class KubePACSProvisioner:
 
     # -- main optimization cycle -------------------------------------------
     def provision(self, request: Request, catalog: Sequence[Offering],
+                  precompiled: Optional[Tuple[List[CandidateItem],
+                                              CompiledMarket]] = None,
                   ) -> ProvisioningDecision:
         t0 = time.perf_counter()
         excluded = self.cache.excluded(self.clock)
-        items, market = self._compiled(request, catalog)
-        exclude = (np.array([it.offering.offering_id in excluded
-                             for it in items], dtype=bool)
-                   if excluded else None)
+        items, market = self._compiled(request, catalog, precompiled)
+        exclude = exclusion_mask(items, excluded)
         search = bracketed_gss if self.guarded_gss else golden_section_search
         pool, trace = search(items, request.pods, tolerance=self.tolerance,
                              market=market, exclude=exclude)
         wall = time.perf_counter() - t0
         if pool is None:   # demand exceeds bounded capacity: surface it
             pool = NodePool(items=[], counts=[], request=request)
-            metrics = {"e_total": 0.0, "e_perf_cost": 0.0, "e_over_pods": 0.0}
             alpha = None
         else:
             pool.request = request
-            metrics = {
-                "e_total": e_total(pool, request.pods),
-                "e_perf_cost": e_perf_cost(pool),
-                "e_over_pods": e_over_pods(pool, request.pods),
-                "hourly_cost": pool.hourly_cost,
-                "nodes": float(pool.total_nodes),
-                "pods": float(pool.total_pods),
-            }
             alpha = pool.alpha
+        metrics = decision_metrics(pool, request.pods)
         return ProvisioningDecision(pool=pool, trace=trace, alpha=alpha,
                                     wall_seconds=wall,
                                     excluded_offerings=excluded,
@@ -150,6 +162,8 @@ class KubePACSProvisioner:
     def handle_interrupts(self, request: Request,
                           catalog: Sequence[Offering],
                           surviving_pods: int = 0,
+                          precompiled: Optional[Tuple[List[CandidateItem],
+                                                      CompiledMarket]] = None,
                           ) -> Optional[ProvisioningDecision]:
         """Drain the queue, cache interrupted offerings, re-optimize.
 
@@ -168,7 +182,7 @@ class KubePACSProvisioner:
         if shortfall == 0:
             return None
         repl_request = dataclasses.replace(request, pods=shortfall)
-        return self.provision(repl_request, catalog)
+        return self.provision(repl_request, catalog, precompiled)
 
 
 def merge_pools(base: NodePool, extra: NodePool) -> NodePool:

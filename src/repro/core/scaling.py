@@ -1,14 +1,30 @@
-"""Workload-aware performance scaling (paper §3.3, Eq. 8).
+"""Workload-aware performance scaling (paper §3.3, Eq. 8) — the Karpenter
+scaling integration point.
 
 CoreMark can't see network/disk hardware, so for instances whose
 specialization matches the declared workload intent the benchmark score is
-scaled by the on-demand price ratio to the general-purpose sibling:
+scaled by the on-demand price ratio to the general-purpose sibling
+(symbols as in Table 1 / DESIGN.md):
 
-    BS_i^scaled = BS_i * OP_i / OP_base
+    BS_i^scaled = BS_i × OP_i / OP_base          (Eq. 8)
 
-Non-matching specializations stay unscaled (the c6id example in the paper).
-No intent -> no scaling.  A wrong intent only mis-weights specialization; it
-never breaks feasibility or availability (paper §3.3 last paragraph).
+where ``OP_base`` is the on-demand price of the general-purpose sibling
+``{family}{gen}{vendor}.{size}`` (:meth:`Offering.base_instance_type`,
+indexed by :func:`build_base_price_index`).  The rationale: AWS prices the
+`n`/`d`/`dn` premium at the value of the specialized hardware, so the
+od-price ratio is a market-calibrated proxy for the network/disk
+performance CoreMark misses.
+
+Integration with the Karpenter scaling path: this runs inside
+DatasetPreProcessing (Alg. 1 lines 3–6, `provisioner.preprocess`) — i.e.
+in the same controller pass that Karpenter's provisioner uses to build its
+candidate list — *before* the ILP sees the candidates, so the scaled
+``BS_i`` flows into ``Perf_i = BS_i·Pod_i`` and hence into both the Eq. 4–5
+objective normalization (``Perf_i/Perf_min``) and the Eq. 2 E_PerfCost
+score.  Non-matching specializations stay unscaled (the paper's c6id
+example); no declared intent ⇒ no scaling.  A wrong intent only
+mis-weights specialization; it never breaks feasibility or availability
+(paper §3.3 last paragraph).
 """
 
 from __future__ import annotations

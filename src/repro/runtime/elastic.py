@@ -1,19 +1,23 @@
 """Elastic spot-instance training runtime — the paper's §4.1 reactive loop
 wired to a real JAX training job.
 
-The KubePACS provisioner owns the node pool; the trainer owns the model.
+The KubePACS provisioner owns the node pool; the trainer owns the model;
+the **scenario engine owns the event stream**: market time, price ticks,
+and interruption notices come from a ``repro.sim.ClusterSim`` (the same
+engine behind the figure benchmarks), so every training run is recorded to
+the engine's replayable JSONL trace instead of a private market loop.
 Each "provisioning epoch":
 
-  provision → train steps → (market advances) → interruption notices →
+  provision → train steps → cluster.advance() emits interruption notices →
   emergency checkpoint → cache interrupted offerings → re-optimize
   (ILP × GSS minus the Unavailable Offerings Cache) → merge replacement
   capacity → restore → continue
 
-On this single-host container the *cluster* is simulated (the market
-simulator emits the same event stream AWS would), while the *training* is
-real JAX: checkpoint/restore, deterministic data resume, and the
-data-shard re-partitioning on world-size change all execute for real.
-Straggler mitigation follows the paper's diversity argument plus a step-time
+On this single-host container the *cluster* is simulated (the engine emits
+the same event stream AWS would), while the *training* is real JAX:
+checkpoint/restore, deterministic data resume, and the data-shard
+re-partitioning on world-size change all execute for real.  Straggler
+mitigation follows the paper's diversity argument plus a step-time
 watchdog: offerings flagged slow are pushed through the same
 UnavailableOfferingsCache path as interruptions.
 """
@@ -22,7 +26,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List, Optional, Union
 
 import jax
 import numpy as np
@@ -33,6 +37,7 @@ from ..core import (InterruptEvent, KubePACSProvisioner, NodePool, Request,
                     SpotMarketSimulator, merge_pools)
 from ..data.pipeline import DataConfig, make_batch
 from ..models import transformer
+from ..sim import ClusterSim
 from ..train import checkpoint as ckpt
 from ..train.loop import make_train_step
 
@@ -59,13 +64,19 @@ class EpochLog:
 
 class ElasticSpotTrainer:
     def __init__(self, cfg: ModelConfig, request: Request,
-                 market: SpotMarketSimulator, ckpt_dir: str,
+                 market: Union[SpotMarketSimulator, ClusterSim],
+                 ckpt_dir: str,
                  ecfg: Optional[ElasticConfig] = None,
                  opt_cfg: Optional[optim.OptConfig] = None,
                  dcfg: Optional[DataConfig] = None, seed: int = 0):
         self.cfg = cfg
         self.request = request
-        self.market = market
+        # a bare market is wrapped into the engine (pressure interrupts on
+        # a seed-keyed stream); passing a ClusterSim directly lets callers
+        # pick the interruption model and capture the trace
+        self.cluster = (market if isinstance(market, ClusterSim)
+                        else ClusterSim.from_market(market, name="elastic",
+                                                    interrupt_seed=seed))
         self.ckpt_dir = ckpt_dir
         self.ecfg = ecfg or ElasticConfig()
         self.opt_cfg = opt_cfg or optim.OptConfig(warmup_steps=5,
@@ -87,7 +98,7 @@ class ElasticSpotTrainer:
     # ------------------------------------------------------------------
     def provision(self) -> None:
         decision = self.provisioner.provision(self.request,
-                                              self.market.snapshot())
+                                              self.cluster.current_snapshot())
         self.pool = decision.pool
         self.world = max(1, min(self.pool.total_pods, self.request.pods))
         self.logs.append(EpochLog(self.step, "provision", {
@@ -117,11 +128,11 @@ class ElasticSpotTrainer:
                              self.opt_state, {"reason": kind},
                              keep=self.ecfg.keep_checkpoints)
         # 2. cache interrupted offerings + re-optimize the shortfall
-        self.provisioner.clock = self.market.time
+        self.provisioner.clock = self.cluster.time
         self.provisioner.enqueue(events)
         survivors = self._surviving_pool(events)
         repl = self.provisioner.handle_interrupts(
-            self.request, self.market.snapshot(),
+            self.request, self.cluster.current_snapshot(),
             surviving_pods=survivors.total_pods)
         if repl is not None and repl.pool.total_nodes > 0:
             self.pool = merge_pools(survivors, repl.pool)
@@ -146,12 +157,13 @@ class ElasticSpotTrainer:
         capacity collapsed are demoted exactly like interrupted offerings."""
         if self.pool is None:
             return []
-        snapshot = {o.offering_id: o.t3 for o in self.market.snapshot()}
+        snapshot = {o.offering_id: o.t3
+                    for o in self.cluster.current_snapshot()}
         events = []
         for it, c in zip(self.pool.items, self.pool.counts):
             oid = it.offering.offering_id
             if c > 0 and snapshot.get(oid, 0) < self.ecfg.straggler_t3_floor:
-                events.append(InterruptEvent(time=self.market.time,
+                events.append(InterruptEvent(time=self.cluster.time,
                                              offering_id=oid, count=c,
                                              reason="straggler"))
         return events
@@ -190,8 +202,15 @@ class ElasticSpotTrainer:
                                      self.opt_state, {"reason": "periodic"},
                                      keep=self.ecfg.keep_checkpoints)
             if self.step % self.ecfg.market_check_every == 0:
-                self.market.step(self.ecfg.market_hours_per_check)
-                events = self.market.interrupts_for_pool(self.pool.as_dict())
+                # the engine advances time, records the tick to its trace,
+                # and emits the interruption notices effective now.
+                # NOTE: hazard exposure now matches the market step — the
+                # pre-engine loop stepped the market market_hours_per_check
+                # hours but sampled only 1 h of interrupt hazard, so runs
+                # with market_hours_per_check > 1 see proportionally more
+                # interrupts than the seed did (intentional consistency fix)
+                events = self.cluster.advance(
+                    self.ecfg.market_hours_per_check, self.pool.as_dict())
                 if events:
                     self._handle_events(events, "interrupt")
                 stragglers = self._check_stragglers()
@@ -206,4 +225,5 @@ class ElasticSpotTrainer:
             "interrupts_handled": sum(1 for l in self.logs
                                       if l.event in ("interrupt", "straggler")),
             "steps": self.step,
+            "trace_records": len(self.cluster.recorder.records),
         }

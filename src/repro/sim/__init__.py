@@ -1,0 +1,29 @@
+"""Trace-driven scenario engine for spot-cluster simulation (DESIGN.md §9).
+
+Scenarios are declarative specs (``Scenario``); ``ClusterSim`` runs them
+through a discrete-event loop over market ticks, shocks, demand changes,
+and pluggable interruption models, recording a replayable JSONL trace.
+"""
+
+from .events import InterruptNotice, TRACE_VERSION
+from .interrupts import (InterruptModel, NullInterruptModel,
+                         PressureInterruptModel, PriceCrossingInterruptModel,
+                         RebalanceRecommendationModel, make_interrupt_model)
+from .policy import (FixedAlphaPolicy, KarpenterLikePolicy, KubePACSPolicy,
+                     Policy, make_policy)
+from .scenario import Scenario, Shock
+from .trace import TraceRecorder, load_trace, loads_trace
+from .engine import (ClusterSim, LiveMarketSource, ReplaySource,
+                     ScriptedMarketSource, SimResult, SimRound, run_replicas,
+                     script_market_states)
+
+__all__ = [
+    "InterruptNotice", "TRACE_VERSION", "InterruptModel",
+    "NullInterruptModel", "PressureInterruptModel",
+    "PriceCrossingInterruptModel", "RebalanceRecommendationModel",
+    "make_interrupt_model", "Policy", "KubePACSPolicy", "KarpenterLikePolicy",
+    "FixedAlphaPolicy", "make_policy", "Scenario", "Shock", "TraceRecorder",
+    "load_trace", "loads_trace", "ClusterSim", "LiveMarketSource",
+    "ReplaySource", "ScriptedMarketSource", "SimResult", "SimRound",
+    "run_replicas", "script_market_states",
+]

@@ -1,0 +1,657 @@
+"""ClusterSim: the discrete-event scenario engine (DESIGN.md §9).
+
+One reproducible harness unifying market evolution, interruption modeling,
+and provisioning.  A :class:`ClusterSim` advances a ``SpotMarketSimulator``
++ a pluggable policy through a time-ordered event queue of price ticks,
+scheduled shocks, demand changes, and interrupt notices, recording every
+event to a JSONL trace (``repro.sim.trace``).  The same loop runs in three
+modes, differing only in the :class:`MarketSource` behind it:
+
+* **live** — ``LiveMarketSource``: seeded ``SpotMarketSimulator`` RNG for
+  prices, a separately-seeded ``InterruptModel`` for notices;
+* **replay** — ``ReplaySource``: market states / notices / fulfillment
+  grants are popped from a recorded trace, no RNG anywhere — same policy
+  code re-derives bit-identical decisions (the determinism contract);
+* **scripted** — ``ScriptedMarketSource``: one precomputed market path
+  shared by N replicas of :func:`run_replicas`, which also share one
+  preprocessed ``CompiledMarket`` per (market state, request shape) so
+  multi-seed sweeps reuse PR 1's batched solver instead of re-solving
+  the identical candidate universe per replica.
+
+The engine also exposes an incremental event-stream API
+(:meth:`ClusterSim.advance` / :meth:`ClusterSim.current_snapshot`) used by
+``repro.runtime.elastic.ElasticSpotTrainer``, which owns its own training
+loop but sources market time, interrupts, and the trace from the engine.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..core.efficiency import NodePool, Request
+from ..core.ilp import compile_market
+from ..core.market import (InterruptEvent, Offering, SpotMarketSimulator,
+                           snapshot_with)
+from ..core.provisioner import (ProvisioningDecision, merge_pools, preprocess)
+from .events import (InterruptNotice, catalog_digest, decision_record,
+                     demand_record, fulfillment_record, header_record,
+                     interrupts_record, market_state_record, probe_record,
+                     shock_record, summary_record, tick_record,
+                     TRACE_VERSION)
+from .interrupts import InterruptModel, make_interrupt_model
+from .policy import make_policy
+from .scenario import Scenario, Shock
+from .trace import TraceRecorder
+
+_EPS = 1e-9
+
+#: sentinel payload for the initial provisioning event — scheduled at
+#: (t=0, demand priority) so a t=0 shock (priority 0) is applied first and
+#: the same-instant-visibility rule of DESIGN.md §9 holds at t=0 too
+_INITIAL = object()
+
+
+# ---------------------------------------------------------------------------
+# Market sources
+# ---------------------------------------------------------------------------
+
+class LiveMarketSource:
+    """Seeded simulator RNG for prices + a separate model RNG for notices."""
+
+    def __init__(self, catalog: Sequence[Offering], scenario: Scenario,
+                 model: InterruptModel,
+                 market: Optional[SpotMarketSimulator] = None):
+        self.market = market or SpotMarketSimulator(
+            catalog, seed=scenario.market_seed,
+            price_vol=scenario.price_vol, t3_vol=scenario.t3_vol)
+        self.model = model
+        model.reset(catalog, scenario.interrupt_seed)
+
+    def advance(self, hours: float) -> None:
+        self.market.step(hours)
+
+    def apply_shock(self, shock: Shock) -> None:
+        price_factor, t3_factor = shock.factors()
+        self.market.apply_shock(selector=shock.selector,
+                                price_factor=price_factor,
+                                t3_factor=t3_factor)
+
+    def state(self) -> Tuple[np.ndarray, np.ndarray]:
+        return self.market.state_arrays()
+
+    def interrupts(self, offerings: Dict[str, Offering],
+                   pool: Dict[str, int], hours: float,
+                   now: float) -> List[InterruptNotice]:
+        return self.model.sample(offerings, pool, hours, now)
+
+    def fulfill(self, offering_id: str, count: int, now: float) -> int:
+        return self.market.fulfill(offering_id, count)
+
+    def fulfill_pool(self, requests: Dict[str, int],
+                     now: float) -> Dict[str, int]:
+        return {oid: self.market.fulfill(oid, c)
+                for oid, c in requests.items()}
+
+
+class ScriptedMarketSource:
+    """A precomputed market path (see :func:`script_market_states`) shared
+    read-only across replicas; interrupts still come from a live per-replica
+    model.  Fulfillment is the deterministic T3 clip (no RNG) so replica
+    sweeps stay reproducible without a market RNG stream."""
+
+    def __init__(self, catalog: Sequence[Offering],
+                 states: Sequence[Tuple[np.ndarray, np.ndarray]],
+                 model: InterruptModel, seed: int):
+        self._states = states
+        self._idx = 0
+        self._index = {o.offering_id: i for i, o in enumerate(catalog)}
+        self.model = model
+        model.reset(catalog, seed)
+
+    def advance(self, hours: float) -> None:
+        pass
+
+    def apply_shock(self, shock: Shock) -> None:
+        pass
+
+    def state(self) -> Tuple[np.ndarray, np.ndarray]:
+        spot, t3 = self._states[self._idx]
+        self._idx += 1
+        return spot, t3
+
+    def interrupts(self, offerings, pool, hours, now):
+        return self.model.sample(offerings, pool, hours, now)
+
+    def _capacity(self, offering_id: str) -> int:
+        # before the first pop the "current" state is the t=0 state, not a
+        # [-1] wraparound into the end-of-horizon vector
+        _, t3 = self._states[max(self._idx - 1, 0)]
+        return int(t3[self._index[offering_id]])
+
+    def fulfill(self, offering_id, count, now):
+        return min(count, self._capacity(offering_id))
+
+    def fulfill_pool(self, requests, now):
+        return {oid: min(c, self._capacity(oid))
+                for oid, c in requests.items()}
+
+
+class ReplaySource:
+    """Serve market states, notices, and grants from a recorded trace.
+
+    Replay needs no RNG: everything stochastic was recorded; everything
+    else (policy decisions) is recomputed deterministically."""
+
+    def __init__(self, records: Sequence[Dict]):
+        self._records = list(records)
+        self._pos = 0
+
+    def _next(self, *rtypes: str) -> Dict:
+        while self._pos < len(self._records):
+            rec = self._records[self._pos]
+            self._pos += 1
+            if rec["type"] in rtypes:
+                return rec
+        raise ValueError(f"trace exhausted while looking for {rtypes}")
+
+    def advance(self, hours: float) -> None:
+        pass
+
+    def apply_shock(self, shock: Shock) -> None:
+        pass
+
+    def state(self) -> Tuple[np.ndarray, np.ndarray]:
+        rec = self._next("market_state")
+        return (np.array(rec["spot"], dtype=np.float64),
+                np.array(rec["t3"], dtype=np.int64))
+
+    def interrupts(self, offerings, pool, hours, now):
+        rec = self._next("interrupts")
+        return [InterruptNotice.from_record(n) for n in rec["notices"]]
+
+    def fulfill(self, offering_id, count, now):
+        return int(self._next("probe")["granted"])
+
+    def fulfill_pool(self, requests, now):
+        return {k: int(v)
+                for k, v in self._next("fulfillment")["grants"].items()}
+
+
+# ---------------------------------------------------------------------------
+# Results
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class SimRound:
+    """One tick's outcome: what was sampled, lost, and re-provisioned."""
+
+    time: float
+    notices: List[InterruptNotice]           # sampled this tick (incl. advisory)
+    effective: List[InterruptNotice]         # capacity actually reclaimed now
+    lost_nodes: int
+    lost_pods: int                           # per-item Pod_i accounting
+    shortfall: int
+    decision: Optional[ProvisioningDecision]
+    pool: NodePool                           # post-round pool
+    snapshot: Optional[List[Offering]] = None
+
+
+@dataclasses.dataclass
+class SimResult:
+    scenario: Scenario
+    decisions: List[Tuple[str, ProvisioningDecision]]   # (reason, decision)
+    rounds: List[SimRound]
+    total_cost: float
+    interrupted_nodes: int
+    pool: NodePool
+    recorder: TraceRecorder
+
+    @property
+    def records(self) -> List[Dict]:
+        return self.recorder.records
+
+    def decision_records(self) -> List[Dict]:
+        return [r for r in self.records if r["type"] == "decision"]
+
+
+def _apply_losses(pool: NodePool, notices: Sequence[InterruptNotice],
+                  ) -> Tuple[NodePool, int, int]:
+    """Remove interrupted nodes; lost pods use each item's actual Pod_i
+    (not a hardcoded per-node pod count — large-instance interrupts count
+    fully)."""
+    lost: Dict[str, int] = {}
+    for n in notices:
+        lost[n.offering_id] = lost.get(n.offering_id, 0) + n.count
+    items, counts, lost_nodes, lost_pods = [], [], 0, 0
+    for it, c in zip(pool.items, pool.counts):
+        take = min(c, lost.get(it.offering.offering_id, 0))
+        lost_nodes += take
+        lost_pods += take * it.pods
+        if c - take > 0:
+            items.append(it)
+            counts.append(c - take)
+    return (NodePool(items=items, counts=counts, alpha=pool.alpha,
+                     request=pool.request), lost_nodes, lost_pods)
+
+
+# ---------------------------------------------------------------------------
+# The engine
+# ---------------------------------------------------------------------------
+
+def _schedule(scenario: Scenario) -> List[Tuple[float, int, object]]:
+    """Time-ordered event queue: shocks (0) < demand changes (1) < ticks (2)
+    at equal timestamps, so a shock is visible to the same tick's decision.
+    A tick's payload is its dt; a duration that is not a step multiple gets
+    a final partial tick so the whole horizon is simulated and billed.
+    Shocks/demand changes beyond the horizon are dropped — the scenario
+    declares its world ends at ``duration_hours``.  The initial
+    provisioning itself is the ``_INITIAL`` event at (0, demand priority),
+    so a t=0 shock is visible to it like at any other timestamp."""
+    horizon = scenario.duration_hours
+    events: List[Tuple[float, int, object]] = [(0.0, 1, _INITIAL)]
+    for s in scenario.shocks:
+        if s.time <= horizon + _EPS:
+            events.append((s.time, 0, s))
+    for t, pods in scenario.demand_schedule:
+        if t <= horizon + _EPS:
+            events.append((t, 1, int(pods)))
+    if scenario.step_hours > 0:
+        n_ticks = int(math.floor(horizon / scenario.step_hours + _EPS))
+        for k in range(1, n_ticks + 1):
+            events.append((k * scenario.step_hours, 2,
+                           scenario.step_hours))
+        covered = n_ticks * scenario.step_hours
+        if horizon - covered > _EPS:
+            events.append((horizon, 2, horizon - covered))
+    return sorted(events, key=lambda e: (e[0], e[1]))
+
+
+def script_market_states(scenario: Scenario, catalog: Sequence[Offering],
+                         ) -> List[Tuple[np.ndarray, np.ndarray]]:
+    """Precompute every market state a run will observe (initial + one per
+    tick/shock), in the exact refresh order ``ClusterSim.run`` uses."""
+    market = SpotMarketSimulator(catalog, seed=scenario.market_seed,
+                                 price_vol=scenario.price_vol,
+                                 t3_vol=scenario.t3_vol)
+    states = []
+    last_t = 0.0
+    for t, prio, payload in _schedule(scenario):
+        if payload is _INITIAL:             # initial refresh at t=0
+            states.append(market.state_arrays())
+        elif prio == 2:                     # tick
+            market.step(t - last_t)
+            last_t = t
+            states.append(market.state_arrays())
+        elif prio == 0:                     # shock
+            shock: Shock = payload
+            price_factor, t3_factor = shock.factors()
+            market.apply_shock(selector=shock.selector,
+                               price_factor=price_factor,
+                               t3_factor=t3_factor)
+            states.append(market.state_arrays())
+    return states
+
+
+class ClusterSim:
+    """Event-queue simulation of one scenario (see module docstring)."""
+
+    def __init__(self, scenario: Scenario, *,
+                 catalog: Optional[Sequence[Offering]] = None,
+                 source=None, recorder: Optional[TraceRecorder] = None,
+                 keep_snapshots: bool = False,
+                 compile_cache: Optional[Dict] = None):
+        self.scenario = scenario
+        self.catalog = (list(catalog) if catalog is not None
+                        else scenario.build_catalog())
+        if source is None:
+            source = LiveMarketSource(self.catalog, scenario,
+                                      make_interrupt_model(
+                                          scenario.interrupt_model))
+        self.source = source
+        self.policy = make_policy(scenario.policy,
+                                  tolerance=scenario.tolerance,
+                                  ttl_hours=scenario.ttl_hours)
+        self.recorder = recorder or TraceRecorder()
+        self.recorder.write(header_record(scenario.to_dict(),
+                                          len(self.catalog),
+                                          catalog_digest(self.catalog)))
+        self.keep_snapshots = keep_snapshots
+        self.compile_cache = compile_cache
+
+        self.request = scenario.request()
+        self.pool = NodePool(items=[], counts=[])
+        self.pending: List[InterruptNotice] = []
+        self.time = 0.0
+        self.total_cost = 0.0
+        self._cost_accrued_to = 0.0
+        self.interrupted_nodes = 0
+        self.decisions: List[Tuple[str, ProvisioningDecision]] = []
+        self.rounds: List[SimRound] = []
+        self._snapshot: Optional[List[Offering]] = None
+        self._snap_index: Dict[str, Offering] = {}
+        self._state_idx = -1
+
+    # -- construction helpers ---------------------------------------------
+    @classmethod
+    def replay(cls, records: Sequence[Dict], *,
+               catalog: Optional[Sequence[Offering]] = None,
+               keep_snapshots: bool = False) -> "ClusterSim":
+        """Rebuild a sim from a recorded trace; running it re-derives the
+        identical decision sequence without any RNG (DESIGN.md §9)."""
+        records = list(records)
+        header = records[0]
+        if header.get("type") != "header":
+            raise ValueError("trace does not start with a header record")
+        if header.get("version") != TRACE_VERSION:
+            raise ValueError(f"trace version {header.get('version')!r} != "
+                             f"supported {TRACE_VERSION}")
+        scenario = Scenario.from_dict(header["scenario"])
+        catalog = (list(catalog) if catalog is not None
+                   else scenario.build_catalog())
+        # a trace is only meaningful against the exact offering universe it
+        # was recorded on; refuse to pair it with a different catalog
+        # (e.g. the recording run was handed an explicit catalog whose
+        # seeds don't match the Scenario's) instead of silently diverging
+        digest = catalog_digest(catalog)
+        if digest != header.get("catalog_digest"):
+            raise ValueError(
+                "catalog mismatch: trace was recorded against digest "
+                f"{header.get('catalog_digest')!r} but replay catalog has "
+                f"{digest!r}; pass the recording run's catalog= explicitly")
+        return cls(scenario, catalog=catalog,
+                   source=ReplaySource(records),
+                   keep_snapshots=keep_snapshots)
+
+    @classmethod
+    def from_market(cls, market: SpotMarketSimulator,
+                    interrupt_model: str = "pressure",
+                    interrupt_seed: int = 0, name: str = "live",
+                    recorder: Optional[TraceRecorder] = None) -> "ClusterSim":
+        """Wrap an existing market for event-stream consumers (the elastic
+        trainer): the engine owns time, interrupts, and the trace while the
+        caller drives its own loop via :meth:`advance`."""
+        catalog = market.catalog
+        scenario = Scenario(name=name, duration_hours=0.0,
+                            interrupt_model=interrupt_model,
+                            interrupt_seed=interrupt_seed,
+                            max_offerings=len(catalog))
+        model = make_interrupt_model(interrupt_model)
+        sim = cls(scenario, catalog=catalog,
+                  source=LiveMarketSource(catalog, scenario, model,
+                                          market=market),
+                  recorder=recorder)
+        sim.time = market.time
+        return sim
+
+    @property
+    def market(self) -> Optional[SpotMarketSimulator]:
+        """The underlying simulator of a live source (None on replay)."""
+        return getattr(self.source, "market", None)
+
+    # -- internals ---------------------------------------------------------
+    def _record(self, rec: Dict) -> None:
+        self.recorder.write(rec)
+
+    def _accrue_cost(self, now: float) -> None:
+        """Charge the current pool for the interval since the last accrual —
+        called before any event mutates the pool, so mid-interval pool
+        changes (demand merges, interrupts) are billed at the rate that
+        actually ran."""
+        self.total_cost += self.pool.hourly_cost * (now - self._cost_accrued_to)
+        self._cost_accrued_to = now
+
+    def _refresh(self) -> None:
+        spot, t3 = self.source.state()
+        self._record(market_state_record(self.time, spot, t3))
+        self._snapshot = snapshot_with(self.catalog, spot, t3)
+        self._snap_index = {o.offering_id: o for o in self._snapshot}
+        self._state_idx += 1
+
+    def _precompiled(self, request: Request):
+        """Shared-compile hook: replicas keyed on (market state, request
+        shape) reuse one preprocessed candidate set + CompiledMarket."""
+        if self.compile_cache is None:
+            return None
+        key = (self._state_idx, request.cpu_per_pod, request.mem_per_pod,
+               request.workload)
+        if key not in self.compile_cache:
+            items = preprocess(self._snapshot, request)
+            self.compile_cache[key] = (items, compile_market(items))
+        return self.compile_cache[key]
+
+    def _launch(self, decision: ProvisioningDecision, reason: str,
+                base_pool: Optional[NodePool] = None) -> None:
+        """Apply a decision: optional fulfillment clip, trace record, merge."""
+        new_pool = decision.pool
+        if self.scenario.apply_fulfillment and new_pool.total_nodes:
+            grants = self.source.fulfill_pool(new_pool.as_dict(), self.time)
+            self._record(fulfillment_record(self.time, grants))
+            items, counts = [], []
+            for it, c in zip(new_pool.items, new_pool.counts):
+                g = min(c, grants.get(it.offering.offering_id, 0))
+                if g > 0:
+                    items.append(it)
+                    counts.append(g)
+            new_pool = NodePool(items=items, counts=counts,
+                                alpha=new_pool.alpha,
+                                request=new_pool.request)
+        self._record(decision_record(self.time, reason, self.policy.name,
+                                     decision.pool.as_dict(), decision.alpha,
+                                     decision.metrics))
+        self.decisions.append((reason, decision))
+        if base_pool is not None and base_pool.total_nodes:
+            self.pool = merge_pools(base_pool, new_pool)
+        else:
+            self.pool = new_pool
+
+    def _split_notices(self, sampled: Sequence[InterruptNotice],
+                       now: float) -> List[InterruptNotice]:
+        """Advisory notices wait out their lead time in the pending queue;
+        returns the notices whose capacity is reclaimed *now*."""
+        effective: List[InterruptNotice] = []
+        still_pending: List[InterruptNotice] = []
+        for n in self.pending:
+            (effective if n.effective_time <= now + _EPS
+             else still_pending).append(n)
+        for n in sampled:
+            (still_pending if n.lead_hours > 0 else effective).append(n)
+        self.pending = still_pending
+        return effective
+
+    def _tick_events(self, t: float, dt: float, pool: Dict[str, int],
+                     ) -> Tuple[List[InterruptNotice],
+                                List[InterruptNotice]]:
+        """The tick protocol shared by :meth:`run` and :meth:`advance`:
+        record tick → advance market → refresh state → sample notices
+        (with §5.4.3 fault injection on genuinely calm rounds: nothing
+        sampled AND no advisory notice maturing now) → record → split into
+        (sampled, effective-now)."""
+        self._record(tick_record(t, dt))
+        self.source.advance(dt)
+        self.time = t
+        self._refresh()
+        sampled = self.source.interrupts(self._snap_index, pool, dt, t)
+        matured = any(n.effective_time <= t + _EPS for n in self.pending)
+        if (self.scenario.inject_if_idle and not sampled and not matured
+                and any(c > 0 for c in pool.values())):
+            # deterministically kill the largest allocation so
+            # interrupt-handling is exercised every round
+            oid, c = max(pool.items(), key=lambda kv: kv[1])
+            sampled = [InterruptNotice(time=t, offering_id=oid, count=c,
+                                       reason="fault-injection")]
+        self._record(interrupts_record(t, sampled))
+        return sampled, self._split_notices(sampled, t)
+
+    def _on_tick(self, t: float, dt: float) -> None:
+        self._accrue_cost(t)                # interval just run, old pool
+        sampled, effective = self._tick_events(t, dt, self.pool.as_dict())
+
+        survivors, lost_nodes, lost_pods = _apply_losses(self.pool, effective)
+        self.interrupted_nodes += lost_nodes
+        decision, shortfall = None, 0
+        if effective:
+            shortfall = max(0, self.request.pods - survivors.total_pods)
+            decision = self.policy.on_interrupts(
+                effective, self.request, self._snapshot,
+                survivors.total_pods, t,
+                precompiled=self._precompiled(self.request))
+            self.pool = survivors
+            if decision is not None:
+                # recorded even when the replacement pool is empty
+                # (infeasible shortfall) so the trace shows every
+                # re-optimization attempt, exactly like initial/demand
+                self._launch(decision, "interrupt", base_pool=survivors)
+        self.rounds.append(SimRound(
+            time=t, notices=list(sampled), effective=effective,
+            lost_nodes=lost_nodes, lost_pods=lost_pods, shortfall=shortfall,
+            decision=decision, pool=self.pool,
+            snapshot=self._snapshot if self.keep_snapshots else None))
+
+    def _on_shock(self, shock: Shock) -> None:
+        self.source.apply_shock(shock)
+        affected = sum(shock.selector in o.offering_id for o in self.catalog)
+        self._record(shock_record(self.time, shock.kind, shock.selector,
+                                  shock.factor, affected))
+        self._refresh()
+
+    def _on_demand(self, pods: int) -> None:
+        """Demand change: scale-ups provision only the shortfall and merge
+        with the running pool (capacity is never discarded for free);
+        scale-downs keep the pool over-provisioned — consolidation is a
+        billing optimization the paper leaves to Karpenter's own path."""
+        self._accrue_cost(self.time)
+        self.request = dataclasses.replace(self.request, pods=pods)
+        self._record(demand_record(self.time, pods))
+        shortfall = pods - self.pool.total_pods
+        if shortfall <= 0 and self.pool.total_nodes:
+            return
+        repl_request = (dataclasses.replace(self.request, pods=shortfall)
+                        if self.pool.total_nodes else self.request)
+        decision = self.policy.provision(repl_request, self._snapshot,
+                                         self.time,
+                                         precompiled=self._precompiled(
+                                             repl_request))
+        self._launch(decision, "demand",
+                     base_pool=self.pool if self.pool.total_nodes else None)
+
+    # -- scenario run ------------------------------------------------------
+    def _on_initial(self) -> None:
+        self._refresh()
+        decision = self.policy.provision(self.request, self._snapshot,
+                                         self.time,
+                                         precompiled=self._precompiled(
+                                             self.request))
+        self._launch(decision, "initial")
+
+    def run(self) -> SimResult:
+        if self._state_idx != -1:
+            # current_snapshot()/advance()/probe_fulfillment() already
+            # consumed market state: a run() on top would desynchronize
+            # the recorded state sequence (and a scripted source's state
+            # queue), silently breaking the byte-identical-trace contract
+            raise RuntimeError(
+                "run() must drive a fresh ClusterSim; this instance "
+                "already served the event-stream/probe API — construct a "
+                "new ClusterSim for the scenario run")
+        for t, prio, payload in _schedule(self.scenario):
+            self.time = t
+            if payload is _INITIAL:
+                self._on_initial()
+            elif prio == 0:
+                self._on_shock(payload)
+            elif prio == 1:
+                self._on_demand(payload)
+            else:
+                self._on_tick(t, payload)
+        self._record(summary_record(self.time, self.total_cost,
+                                    self.interrupted_nodes,
+                                    len(self.decisions),
+                                    self.pool.as_dict()))
+        return SimResult(scenario=self.scenario, decisions=self.decisions,
+                         rounds=self.rounds, total_cost=self.total_cost,
+                         interrupted_nodes=self.interrupted_nodes,
+                         pool=self.pool, recorder=self.recorder)
+
+    # -- incremental event-stream API (elastic trainer) --------------------
+    def current_snapshot(self) -> List[Offering]:
+        if self._snapshot is None:
+            self._refresh()
+        return self._snapshot
+
+    def advance(self, hours: float,
+                pool: Dict[str, int]) -> List[InterruptEvent]:
+        """Advance the market by ``hours`` and return the interrupt events
+        effective *now* for ``pool`` (advisory notices queue until their
+        lead time elapses; ``inject_if_idle`` scenarios fault-inject on
+        calm ticks here too).  Records tick/state/notices to the trace."""
+        t = self.time + hours
+        _, effective = self._tick_events(t, hours, pool)
+        # clip to the caller's live pool (a matured advisory may refer to
+        # capacity the caller already replaced), mirroring _apply_losses
+        remaining = dict(pool)
+        events: List[InterruptEvent] = []
+        for n in effective:
+            take = min(n.count, remaining.get(n.offering_id, 0))
+            if take <= 0:
+                continue
+            remaining[n.offering_id] -= take
+            self.interrupted_nodes += take
+            events.append(InterruptEvent(time=n.time,
+                                         offering_id=n.offering_id,
+                                         count=take, reason=n.reason))
+        return events
+
+    def probe_fulfillment(self, offering_id: str, count: int) -> int:
+        """One-off fulfillment probe (Fig. 9): how many of ``count`` nodes
+        the market would grant right now.  Recorded and replayable."""
+        granted = int(self.source.fulfill(offering_id, count, self.time))
+        self._record(probe_record(self.time, offering_id, count, granted))
+        return granted
+
+
+def run_replicas(scenario: Scenario, interrupt_seeds: Sequence[int], *,
+                 catalog: Optional[Sequence[Offering]] = None,
+                 keep_snapshots: bool = False) -> List[SimResult]:
+    """Vectorized multi-seed runner: N scenario replicas over one shared
+    market path and one shared ``CompiledMarket`` per (state, request shape).
+
+    The market evolution is computed once (:func:`script_market_states`);
+    each replica varies only the interruption RNG stream.  Because every
+    replica at a given tick sees the identical snapshot, preprocessing +
+    market compilation happen once and every replica's GSS prescan rides
+    the PR 1 batched solver against the same compiled arrays — a replica
+    is pure policy work, not market work.  A replica's decisions are
+    identical to a standalone ``ClusterSim`` run at the same seeds
+    (asserted in tests/test_scenario_engine.py).
+
+    ``apply_fulfillment`` scenarios are rejected: live fulfillment draws
+    from (and advances) the market's price RNG, which a scripted shared
+    path cannot reproduce — the replica≡standalone guarantee would
+    silently break.  Sweep fulfillment-sensitive scenarios with
+    independent ``ClusterSim`` runs instead.
+    """
+    if scenario.apply_fulfillment:
+        raise ValueError(
+            "run_replicas does not support apply_fulfillment scenarios: "
+            "live fulfillment consumes the market price RNG, so replicas "
+            "over a scripted market path would diverge from standalone "
+            "runs; use independent ClusterSim runs for that sweep")
+    catalog = (list(catalog) if catalog is not None
+               else scenario.build_catalog())
+    states = script_market_states(scenario, catalog)
+    compile_cache: Dict = {}
+    results = []
+    for seed in interrupt_seeds:
+        sc = dataclasses.replace(scenario, interrupt_seed=int(seed))
+        source = ScriptedMarketSource(
+            catalog, states, make_interrupt_model(sc.interrupt_model),
+            seed=int(seed))
+        sim = ClusterSim(sc, catalog=catalog, source=source,
+                         compile_cache=compile_cache,
+                         keep_snapshots=keep_snapshots)
+        results.append(sim.run())
+    return results

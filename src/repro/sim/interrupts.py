@@ -1,0 +1,151 @@
+"""Pluggable interruption models behind one interface (DESIGN.md §9).
+
+The paper samples interruptions from pool pressure + the SpotLake IF band;
+real spot markets also interrupt when the spot price crosses a user bid
+(classic EC2 spot semantics) and issue advance *rebalance recommendations*
+before reclaiming capacity.  The scenario engine treats all three as
+interchangeable :class:`InterruptModel` implementations so a scenario picks
+its interruption physics by spec string:
+
+    "none"                           no interruptions
+    "pressure"                       the pressure/IF sampler (own RNG stream)
+    "price_crossing:<bid_factor>"    fire iff live spot > bid_factor × spot₀
+    "rebalance:<lead_hours>:<inner>" wrap <inner>, stamping a warning lead
+                                     time; capacity is reclaimed lead_hours
+                                     after the (advisory) notice
+
+Models see the *live snapshot* (offerings carry current SP_i/T3_i) and the
+current pool; they never touch the market's price RNG, so the market path
+and the interruption stream are independently seeded and a recorded trace
+replays without any RNG at all.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Sequence
+
+import numpy as np
+
+from ..core.market import Offering, pressure_interrupt_probability
+from .events import InterruptNotice
+
+
+class InterruptModel:
+    """Interface: seeded reset + a pure-given-RNG-state sampling step."""
+
+    spec: str = "none"
+
+    def reset(self, catalog: Sequence[Offering], seed: int) -> None:
+        """Bind the model to a scenario run (catalog at t=0, RNG seed)."""
+
+    def sample(self, offerings: Dict[str, Offering], pool: Dict[str, int],
+               hours: float, now: float) -> List[InterruptNotice]:
+        """Interrupt notices for ``pool`` over the last ``hours``.
+
+        ``offerings`` maps offering_id → live Offering (current spot/t3).
+        """
+        raise NotImplementedError
+
+
+class NullInterruptModel(InterruptModel):
+    spec = "none"
+
+    def sample(self, offerings, pool, hours, now):
+        return []
+
+
+class PressureInterruptModel(InterruptModel):
+    """The paper's sampler: P(interrupt) rises with pool pressure and IF.
+
+    Identical law to ``SpotMarketSimulator.interrupts_for_pool`` (shared
+    via :func:`pressure_interrupt_probability`) but on a dedicated RNG
+    stream keyed by the scenario's ``interrupt_seed``.
+    """
+
+    spec = "pressure"
+
+    def __init__(self) -> None:
+        self._rng = np.random.default_rng(0)
+
+    def reset(self, catalog, seed):
+        self._rng = np.random.default_rng(seed)
+
+    def sample(self, offerings, pool, hours, now):
+        notices: List[InterruptNotice] = []
+        for offering_id, count in pool.items():
+            o = offerings.get(offering_id)
+            if o is None or count <= 0:
+                continue
+            p = pressure_interrupt_probability(count, float(o.t3),
+                                               o.interruption_freq, hours)
+            lost = int(self._rng.binomial(count, p))
+            if lost > 0:
+                notices.append(InterruptNotice(
+                    time=now, offering_id=offering_id, count=lost))
+        return notices
+
+
+class PriceCrossingInterruptModel(InterruptModel):
+    """EC2-classic bid semantics: all nodes of an offering are interrupted
+    iff its live spot price exceeds the bid (bid_factor × the t=0 spot
+    price).  Deterministic — no RNG."""
+
+    def __init__(self, bid_factor: float = 1.25) -> None:
+        self.bid_factor = float(bid_factor)
+        self.spec = f"price_crossing:{bid_factor:g}"
+        self._bids: Dict[str, float] = {}
+
+    def reset(self, catalog, seed):
+        self._bids = {o.offering_id: self.bid_factor * o.spot_price
+                      for o in catalog}
+
+    def sample(self, offerings, pool, hours, now):
+        notices: List[InterruptNotice] = []
+        for offering_id, count in pool.items():
+            o = offerings.get(offering_id)
+            if o is None or count <= 0:
+                continue
+            bid = self._bids.get(offering_id)
+            if bid is not None and o.spot_price > bid:
+                notices.append(InterruptNotice(
+                    time=now, offering_id=offering_id, count=count,
+                    reason="price-crossing"))
+        return notices
+
+
+class RebalanceRecommendationModel(InterruptModel):
+    """Advance-warning wrapper: inner-model notices become advisory
+    recommendations with a configurable lead time; the engine reclaims the
+    capacity only once ``lead_hours`` have elapsed (effective_time)."""
+
+    def __init__(self, inner: InterruptModel, lead_hours: float = 2.0) -> None:
+        self.inner = inner
+        self.lead_hours = float(lead_hours)
+        self.spec = f"rebalance:{lead_hours:g}:{inner.spec}"
+
+    def reset(self, catalog, seed):
+        self.inner.reset(catalog, seed)
+
+    def sample(self, offerings, pool, hours, now):
+        return [InterruptNotice(time=n.time, offering_id=n.offering_id,
+                                count=n.count,
+                                reason=f"rebalance-recommendation:{n.reason}",
+                                lead_hours=self.lead_hours)
+                for n in self.inner.sample(offerings, pool, hours, now)]
+
+
+def make_interrupt_model(spec: str) -> InterruptModel:
+    """Parse a scenario's interrupt-model spec string (see module doc)."""
+    if spec == "none":
+        return NullInterruptModel()
+    if spec == "pressure":
+        return PressureInterruptModel()
+    if spec.startswith("price_crossing"):
+        parts = spec.split(":")
+        return PriceCrossingInterruptModel(
+            float(parts[1]) if len(parts) > 1 else 1.25)
+    if spec.startswith("rebalance:"):
+        _, lead, inner = spec.split(":", 2)
+        return RebalanceRecommendationModel(make_interrupt_model(inner),
+                                            lead_hours=float(lead))
+    raise ValueError(f"unknown interrupt-model spec {spec!r}")

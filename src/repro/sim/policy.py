@@ -1,0 +1,174 @@
+"""Pluggable provisioning policies for the scenario engine.
+
+Every policy answers the same two questions the engine asks —
+
+  * ``provision(request, snapshot, now)``: build a pool from scratch
+    (initial provisioning, demand changes), and
+  * ``on_interrupts(notices, request, snapshot, surviving_pods, now)``:
+    react to capacity loss by provisioning the shortfall with the
+    interrupted offerings excluded (the §4.1 loop)
+
+— and returns the core :class:`ProvisioningDecision`, so KubePACS, a
+Karpenter-like baseline, and fixed-α ablations all produce comparable,
+trace-recordable decision sequences.  Policies must be deterministic
+functions of their inputs (no RNG, no wall clock in the decision content):
+that is what makes trace replay reproduce identical decisions.
+
+Spec strings (``Scenario.policy``):
+
+    "kubepacs"               guarded GSS × ILP (the paper's method)
+    "kubepacs_unguarded"     pure Algorithm-1 GSS over α ∈ [0, 1]
+    "karpenter_like"         price-capacity-optimized baseline (§5.4)
+    "fixed_alpha:<α>"        single ILP solve at a fixed α (Table 2)
+
+The optional ``precompiled=(items, CompiledMarket)`` argument lets the
+multi-seed runner share one preprocessed market across N replica policies
+(PR 1's batched engine is then reused instead of re-solving per replica).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..core.efficiency import (CandidateItem, NodePool, Request,
+                               decision_metrics)
+from ..core.ilp import CompiledMarket, solve_ilp
+from ..core.market import Offering
+from ..core.baselines import karpenter_like
+from ..core.provisioner import (KubePACSProvisioner, ProvisioningDecision,
+                                UnavailableOfferingsCache, exclusion_mask,
+                                preprocess)
+from .events import InterruptNotice
+
+Precompiled = Tuple[List[CandidateItem], CompiledMarket]
+
+
+class Policy:
+    name = "abstract"
+
+    def provision(self, request: Request, snapshot: Sequence[Offering],
+                  now: float, precompiled: Optional[Precompiled] = None,
+                  ) -> ProvisioningDecision:
+        raise NotImplementedError
+
+    def on_interrupts(self, notices: Sequence[InterruptNotice],
+                      request: Request, snapshot: Sequence[Offering],
+                      surviving_pods: int, now: float,
+                      precompiled: Optional[Precompiled] = None,
+                      ) -> Optional[ProvisioningDecision]:
+        raise NotImplementedError
+
+
+class KubePACSPolicy(Policy):
+    """The paper's provisioner, including its UnavailableOfferingsCache."""
+
+    name = "kubepacs"
+
+    def __init__(self, tolerance: float = 0.01, ttl_hours: float = 2.0,
+                 guarded: bool = True) -> None:
+        self.provisioner = KubePACSProvisioner(tolerance=tolerance,
+                                               ttl_hours=ttl_hours,
+                                               guarded_gss=guarded)
+        if not guarded:
+            self.name = "kubepacs_unguarded"
+
+    def provision(self, request, snapshot, now, precompiled=None):
+        self.provisioner.clock = now
+        return self.provisioner.provision(request, snapshot, precompiled)
+
+    def on_interrupts(self, notices, request, snapshot, surviving_pods, now,
+                      precompiled=None):
+        self.provisioner.clock = now
+        self.provisioner.enqueue([n.to_core() for n in notices])
+        return self.provisioner.handle_interrupts(
+            request, snapshot, surviving_pods=surviving_pods,
+            precompiled=precompiled)
+
+
+class _BaselinePolicy(Policy):
+    """Shared §4.1 plumbing (TTL exclusion cache, shortfall requests) for
+    baselines that are not the KubePACS provisioner."""
+
+    def __init__(self, ttl_hours: float = 2.0) -> None:
+        self.cache = UnavailableOfferingsCache(ttl_hours)
+
+    def _solve(self, items: List[CandidateItem], req_pods: int,
+               exclude: Optional[np.ndarray],
+               precompiled: Optional[Precompiled]) -> Tuple[NodePool, Optional[float]]:
+        raise NotImplementedError
+
+    def provision(self, request, snapshot, now, precompiled=None):
+        t0 = time.perf_counter()
+        excluded = self.cache.excluded(now)
+        items = precompiled[0] if precompiled is not None \
+            else preprocess(snapshot, request)
+        exclude = exclusion_mask(items, excluded)
+        pool, alpha = self._solve(items, request.pods, exclude, precompiled)
+        pool.request = request
+        pool.alpha = alpha
+        return ProvisioningDecision(
+            pool=pool, trace=None, alpha=alpha,
+            wall_seconds=time.perf_counter() - t0,
+            excluded_offerings=excluded,
+            metrics=decision_metrics(pool, request.pods))
+
+    def on_interrupts(self, notices, request, snapshot, surviving_pods, now,
+                      precompiled=None):
+        if not notices:
+            return None
+        for n in notices:
+            self.cache.add(n.offering_id, now)
+        shortfall = max(0, request.pods - surviving_pods)
+        if shortfall == 0:
+            return None
+        repl = dataclasses.replace(request, pods=shortfall)
+        return self.provision(repl, snapshot, now, precompiled)
+
+
+class FixedAlphaPolicy(_BaselinePolicy):
+    """Single ILP solve at a fixed α — the Table 2 ablation as a policy."""
+
+    def __init__(self, alpha: float, ttl_hours: float = 2.0) -> None:
+        super().__init__(ttl_hours)
+        self.alpha = float(alpha)
+        self.name = f"fixed_alpha:{alpha:g}"
+
+    def _solve(self, items, req_pods, exclude, precompiled):
+        market = precompiled[1] if precompiled is not None else None
+        counts = solve_ilp(items, req_pods, self.alpha, market=market,
+                           exclude=exclude)
+        if counts is None:
+            return NodePool(items=[], counts=[]), self.alpha
+        return NodePool(items=list(items), counts=list(counts)).nonzero(), \
+            self.alpha
+
+
+class KarpenterLikePolicy(_BaselinePolicy):
+    """Price-capacity-optimized consolidation (no BS/T3 awareness, §5.4)."""
+
+    name = "karpenter_like"
+
+    def _solve(self, items, req_pods, exclude, precompiled):
+        if exclude is not None:
+            items = [it for it, ex in zip(items, exclude) if not ex]
+        return karpenter_like(items, req_pods), None
+
+
+def make_policy(spec: str, tolerance: float = 0.01,
+                ttl_hours: float = 2.0) -> Policy:
+    """Parse a scenario's policy spec string (see module doc)."""
+    if spec == "kubepacs":
+        return KubePACSPolicy(tolerance=tolerance, ttl_hours=ttl_hours)
+    if spec == "kubepacs_unguarded":
+        return KubePACSPolicy(tolerance=tolerance, ttl_hours=ttl_hours,
+                              guarded=False)
+    if spec == "karpenter_like":
+        return KarpenterLikePolicy(ttl_hours=ttl_hours)
+    if spec.startswith("fixed_alpha:"):
+        return FixedAlphaPolicy(float(spec.split(":", 1)[1]),
+                                ttl_hours=ttl_hours)
+    raise ValueError(f"unknown policy spec {spec!r}")

@@ -1,0 +1,120 @@
+"""Declarative scenario specs: a paper figure as ~20 lines of config.
+
+A :class:`Scenario` fully determines a simulation run — catalog seed,
+market evolution seeds, demand schedule, shock schedule, interruption
+model, and provisioning policy are all plain JSON-serializable values —
+so the trace header alone is enough to re-instantiate and replay a run
+(DESIGN.md §9).  Interrupt models and policies are referenced by spec
+*string* (parsed by ``make_interrupt_model`` / ``make_policy``) precisely
+to keep the spec serializable.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Tuple
+
+from ..core.efficiency import Request
+from ..core.market import Offering, generate_catalog
+
+
+@dataclasses.dataclass(frozen=True)
+class Shock:
+    """A deterministic scheduled market shock (price spike, supply crunch).
+
+    ``selector`` substring-matches offering_ids ("" = the whole market);
+    ``kind`` is "price" or "capacity"; ``factor`` multiplies spot price or
+    T3 respectively (clipped to the market's valid ranges).
+    """
+
+    time: float
+    kind: str
+    factor: float
+    selector: str = ""
+
+    def __post_init__(self):
+        # normalize numerics so construction and the trace-header JSON
+        # round trip serialize identically (9 vs 9.0 would break the
+        # byte-identical replay contract)
+        object.__setattr__(self, "time", float(self.time))
+        object.__setattr__(self, "factor", float(self.factor))
+
+    def factors(self) -> Tuple[float, float]:
+        """(price_factor, t3_factor) — the single source of the kind→factor
+        dispatch, shared by the live source and the scripted market path so
+        the two can never desynchronize."""
+        if self.kind == "price":
+            return self.factor, 1.0
+        if self.kind == "capacity":
+            return 1.0, self.factor
+        raise ValueError(f"unknown shock kind {self.kind!r}")
+
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    """Everything needed to reproduce one trace-driven simulation run."""
+
+    name: str
+    duration_hours: float = 24.0
+    step_hours: float = 6.0
+    # -- demand -----------------------------------------------------------
+    pods: int = 100
+    cpu_per_pod: float = 2.0
+    mem_per_pod: float = 2.0
+    workload: Tuple[str, ...] = ()            # subset of ("network", "disk")
+    demand_schedule: Tuple[Tuple[float, int], ...] = ()   # (time, new pods)
+    # -- environment ------------------------------------------------------
+    shocks: Tuple[Shock, ...] = ()
+    interrupt_model: str = "pressure"
+    catalog_seed: int = 0
+    max_offerings: int = 600
+    market_seed: int = 0
+    interrupt_seed: int = 0
+    price_vol: float = 0.06
+    t3_vol: float = 1.6
+    # -- control plane ----------------------------------------------------
+    policy: str = "kubepacs"
+    tolerance: float = 0.01
+    ttl_hours: float = 2.0              # UnavailableOfferingsCache TTL
+    apply_fulfillment: bool = False     # clip launches by live T3 capacity
+    inject_if_idle: bool = False        # §5.4.3 fault injection: if a tick
+    #                                     samples no interrupt, kill the
+    #                                     largest allocation deterministically
+
+    def __post_init__(self):
+        # normalize order-insensitive and numeric fields so construction
+        # and the to_dict/from_dict trace-header round trip compare equal
+        # AND serialize to identical bytes (int vs float demand times
+        # would break the byte-identical replay contract)
+        object.__setattr__(self, "workload", tuple(sorted(self.workload)))
+        object.__setattr__(self, "demand_schedule",
+                           tuple((float(t), int(p))
+                                 for t, p in self.demand_schedule))
+        object.__setattr__(self, "duration_hours", float(self.duration_hours))
+        object.__setattr__(self, "step_hours", float(self.step_hours))
+
+    def request(self) -> Request:
+        return Request(pods=self.pods, cpu_per_pod=self.cpu_per_pod,
+                       mem_per_pod=self.mem_per_pod,
+                       workload=frozenset(self.workload))
+
+    def build_catalog(self) -> List[Offering]:
+        return generate_catalog(seed=self.catalog_seed,
+                                max_offerings=self.max_offerings)
+
+    # -- (de)serialization — the trace-header round trip -------------------
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["workload"] = sorted(self.workload)
+        d["demand_schedule"] = [list(x) for x in self.demand_schedule]
+        d["shocks"] = [dataclasses.asdict(s) for s in self.shocks]
+        return d
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "Scenario":
+        d = dict(d)
+        d["workload"] = tuple(d.get("workload", ()))
+        d["demand_schedule"] = tuple(
+            tuple(x) for x in d.get("demand_schedule", ()))
+        d["shocks"] = tuple(Shock(**s) for s in d.get("shocks", ()))
+        return cls(**d)   # __post_init__ normalizes numerics/order

@@ -1,0 +1,105 @@
+"""Docs gate (`make docs-check`): keep README and DESIGN.md honest.
+
+1. Extracts every ```bash fenced block from README.md and smoke-runs each
+   command line, so the quickstart can never rot.  A block immediately
+   preceded by an HTML comment containing ``docs-check: skip`` is listed
+   but not executed (slow full sweeps, commands that would recurse into
+   this check).
+2. Collects every ``DESIGN.md §N`` reference in README.md and the Python
+   sources and fails on references to sections that don't exist — DESIGN
+   section numbering is a stable public contract (DESIGN.md header).
+
+Exit code 0 iff every command succeeds and no reference dangles.
+"""
+
+from __future__ import annotations
+
+import os
+import re
+import subprocess
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+README = os.path.join(REPO, "README.md")
+DESIGN = os.path.join(REPO, "DESIGN.md")
+SKIP_MARK = "docs-check: skip"
+TIMEOUT_S = 600
+
+FENCE_RE = re.compile(
+    r"(?P<pre>^[^\n]*\n)?^```bash\n(?P<body>.*?)^```", re.M | re.S)
+SECTION_REF_RE = re.compile(r"DESIGN\.md\s*§\s*(\d+)")
+SECTION_DEF_RE = re.compile(r"^##\s*§(\d+)\b", re.M)
+
+
+def extract_bash_blocks(text: str):
+    """Yield (skipped, [command lines]) per fenced bash block."""
+    for m in FENCE_RE.finditer(text):
+        pre = m.group("pre") or ""
+        skipped = SKIP_MARK in pre
+        lines = [ln.strip() for ln in m.group("body").splitlines()]
+        cmds = [ln for ln in lines if ln and not ln.startswith("#")]
+        yield skipped, cmds
+
+
+def check_quickstart() -> int:
+    failures = 0
+    with open(README) as f:
+        text = f.read()
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    for skipped, cmds in extract_bash_blocks(text):
+        for cmd in cmds:
+            if skipped:
+                print(f"docs-check: SKIP  {cmd}")
+                continue
+            print(f"docs-check: RUN   {cmd}")
+            try:
+                proc = subprocess.run(cmd, shell=True, cwd=REPO, env=env,
+                                      capture_output=True, text=True,
+                                      timeout=TIMEOUT_S)
+            except subprocess.TimeoutExpired:
+                failures += 1
+                print(f"docs-check: FAIL  {cmd} (timeout {TIMEOUT_S}s)")
+                continue
+            if proc.returncode != 0:
+                failures += 1
+                print(f"docs-check: FAIL  {cmd} (exit {proc.returncode})")
+                sys.stderr.write(proc.stderr[-2000:] + "\n")
+    return failures
+
+
+def check_design_refs() -> int:
+    with open(DESIGN) as f:
+        defined = set(SECTION_DEF_RE.findall(f.read()))
+    failures = 0
+    sources = [README]
+    for root in ("src", "benchmarks", "examples", "tests", "tools"):
+        for dirpath, _, names in os.walk(os.path.join(REPO, root)):
+            sources += [os.path.join(dirpath, n) for n in names
+                        if n.endswith(".py")]
+    for path in sources:
+        with open(path) as f:
+            text = f.read()
+        for sec in SECTION_REF_RE.findall(text):
+            if sec not in defined:
+                failures += 1
+                print(f"docs-check: DANGLING reference DESIGN.md §{sec} "
+                      f"in {os.path.relpath(path, REPO)}")
+    print(f"docs-check: DESIGN.md sections defined: "
+          f"{sorted(defined, key=int)}")
+    return failures
+
+
+def main() -> int:
+    failures = check_design_refs()
+    failures += check_quickstart()
+    if failures:
+        print(f"docs-check: {failures} failure(s)")
+        return 1
+    print("docs-check: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
