@@ -3,7 +3,7 @@
 
 PY := PYTHONPATH=src python
 
-.PHONY: verify test bench bench-solver docs-check
+.PHONY: verify test bench bench-solver bench-risk docs-check
 
 ## tier-1 gate: full test suite + a smoke pass of the solver microbenchmark
 ## + the docs gate (README quickstart runs, DESIGN.md refs resolve)
@@ -26,3 +26,8 @@ bench:
 ## solver microbenchmark at all market sizes; refreshes BENCH_solver.json
 bench-solver:
 	$(PY) -m benchmarks.bench_solver --json BENCH_solver.json
+
+## risk-subsystem backtest (kubepacs_risk vs kubepacs + forecast
+## calibration); refreshes BENCH_risk.json
+bench-risk:
+	$(PY) -m benchmarks.bench_risk --json BENCH_risk.json

@@ -10,10 +10,11 @@ import json
 import sys
 import traceback
 
-from . import (bench_solver, elastic_training, fig5_sota, fig5c_spotkube,
-               fig6_alpha, fig6b_cross_provider, fig7_tolerance,
-               fig8_preferences, fig9_t3_fulfillment, fig12_interrupts,
-               roofline_report, table2_fixed_alpha, table3_perf_dollar)
+from . import (bench_risk, bench_solver, elastic_training, fig5_sota,
+               fig5c_spotkube, fig6_alpha, fig6b_cross_provider,
+               fig7_tolerance, fig8_preferences, fig9_t3_fulfillment,
+               fig12_interrupts, roofline_report, table2_fixed_alpha,
+               table3_perf_dollar)
 
 ALL = [
     ("fig5_sota", fig5_sota),
@@ -27,6 +28,7 @@ ALL = [
     ("fig12_interrupts", fig12_interrupts),
     ("table3_perf_dollar", table3_perf_dollar),
     ("bench_solver", bench_solver),
+    ("bench_risk", bench_risk),
     ("elastic_training", elastic_training),
     ("roofline_report", roofline_report),
 ]

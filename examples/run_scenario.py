@@ -4,16 +4,18 @@ the shared-market multi-replica runner.
 
     PYTHONPATH=src python examples/run_scenario.py --trace /tmp/storm.jsonl
     PYTHONPATH=src python examples/run_scenario.py --smoke   # small & fast
+    PYTHONPATH=src python examples/run_scenario.py --smoke --policy kubepacs_risk:12
 """
 
 import argparse
 
 import numpy as np
 
-from repro.sim import ClusterSim, Scenario, Shock, load_trace, run_replicas
+from repro.sim import (ClusterSim, Scenario, Shock, load_trace, make_policy,
+                       run_replicas)
 
 
-def build_scenario(smoke: bool) -> Scenario:
+def build_scenario(smoke: bool, policy: str = "kubepacs") -> Scenario:
     return Scenario(
         name="interrupt_storm_with_spike",
         duration_hours=12.0 if smoke else 36.0, step_hours=6.0,
@@ -24,7 +26,7 @@ def build_scenario(smoke: bool) -> Scenario:
                       selector="us-east-1"),),
         # two-hour rebalance warnings wrapped around bid crossings
         interrupt_model="rebalance:2:price_crossing:1.3",
-        policy="kubepacs",
+        policy=policy,
         catalog_seed=7, max_offerings=300 if smoke else 800,
         market_seed=7, interrupt_seed=7,
     )
@@ -35,9 +37,14 @@ def main():
     ap.add_argument("--trace", default="/tmp/kubepacs_scenario.jsonl")
     ap.add_argument("--smoke", action="store_true",
                     help="small catalog / short horizon")
+    ap.add_argument("--policy", default="kubepacs",
+                    help="policy spec, e.g. kubepacs, kubepacs_risk:12, "
+                         "karpenter_like, fixed_alpha:0.5")
     args = ap.parse_args()
 
-    scenario = build_scenario(args.smoke)
+    make_policy(args.policy)   # validate the spec before building anything
+
+    scenario = build_scenario(args.smoke, policy=args.policy)
     print(f"scenario {scenario.name!r}: {scenario.duration_hours:.0f}h, "
           f"policy={scenario.policy}, interrupts={scenario.interrupt_model}")
 

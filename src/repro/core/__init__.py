@@ -6,11 +6,11 @@ from .market import (Offering, InterruptEvent, SpotMarketSimulator,
 from .efficiency import (Request, CandidateItem, NodePool, pods_per_instance,
                          e_perf_cost, e_over_pods, e_total, e_total_batch,
                          decision_metrics, pool_metric_arrays,
-                         score_counts_batch)
+                         reweight_items, score_counts_batch)
 from .scaling import scaled_benchmark_score, build_base_price_index, matches_intent
 from .ilp import (solve_ilp, solve_ilp_batch, solve_ilp_pulp,
                   solve_ilp_reference, objective_coefficients,
-                  CompiledMarket, compile_market)
+                  CompiledMarket, compile_market, reweight_market)
 from .gss import (golden_section_search, bracketed_gss, expected_iterations,
                   GssTrace, PHI)
 from .baselines import kubepacs_greedy, spotverse, spotkube, karpenter_like
@@ -30,4 +30,5 @@ __all__ = [
     "karpenter_like", "KubePACSProvisioner", "ProvisioningDecision",
     "UnavailableOfferingsCache", "preprocess", "merge_pools",
     "snapshot_with", "pressure_interrupt_probability", "decision_metrics",
+    "reweight_items", "reweight_market",
 ]

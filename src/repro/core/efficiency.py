@@ -88,6 +88,13 @@ class NodePool:
     def hourly_cost(self) -> float:
         return float(sum(it.spot_price * c for it, c in zip(self.items, self.counts)))
 
+    @property
+    def perf_rate(self) -> float:
+        """Σ_i Perf_i·x_i — aggregate benchmark throughput per hour, the
+        numerator of Eq. 2 and the rate the scenario engine integrates into
+        delivered perf-hours (DESIGN.md §10 backtest accounting)."""
+        return float(sum(it.perf * c for it, c in zip(self.items, self.counts)))
+
     def nonzero(self) -> "NodePool":
         keep = [(it, c) for it, c in zip(self.items, self.counts) if c > 0]
         return NodePool(items=[it for it, _ in keep], counts=[c for _, c in keep],
@@ -151,6 +158,26 @@ def decision_metrics(pool: NodePool, req_pods: int) -> Dict[str, float]:
         "nodes": float(pool.total_nodes),
         "pods": float(pool.total_pods),
     }
+
+
+def reweight_items(items: Sequence[CandidateItem], perf: np.ndarray,
+                   price: np.ndarray) -> List[CandidateItem]:
+    """Array-adjustment entry point: the same candidates with substituted
+    (Perf_i, SP_i) vectors.
+
+    The risk subsystem (``repro.risk.objective``) optimizes a *risk-adjusted*
+    efficiency by handing GSS + the ILP engine candidates whose performance
+    is discounted by expected uptime and whose price carries expected
+    re-provisioning cost — the solvers are reused verbatim because only
+    these two vectors enter the objective.  ``Pod_i``/``T3_i`` (the
+    constraint structure) are untouched, so a :class:`CompiledMarket` can be
+    reweighted without re-splitting bundles (``repro.core.ilp.reweight_market``).
+    Since ``Perf_i = BS_i·Pod_i``, the adjusted BS is ``perf_i / Pod_i``.
+    """
+    if len(perf) != len(items) or len(price) != len(items):
+        raise ValueError("perf/price vectors must match the candidate count")
+    return [dataclasses.replace(it, bs=float(p) / it.pods, spot_price=float(sp))
+            for it, p, sp in zip(items, perf, price)]
 
 
 def pool_metric_arrays(items: Sequence[CandidateItem],

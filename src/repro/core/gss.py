@@ -94,10 +94,15 @@ def golden_section_search(
     solver: Callable[[Sequence[CandidateItem], int, float], Optional[List[int]]] = solve_ilp,
     market: Optional[CompiledMarket] = None,
     exclude: Optional[np.ndarray] = None,
+    timer: Callable[[], float] = time.perf_counter,
 ) -> Tuple[Optional[NodePool], GssTrace]:
-    """Algorithm 1 (lines 7–27).  Returns (best pool S*, evaluation trace)."""
+    """Algorithm 1 (lines 7–27).  Returns (best pool S*, evaluation trace).
+
+    ``timer`` stamps ``GssTrace.wall_seconds``; inject a fake for tests that
+    assert full decision equality (wall time is diagnostic, never decision
+    content)."""
     trace = GssTrace()
-    t0 = time.perf_counter()
+    t0 = timer()
     cache: dict[float, Tuple[Optional[NodePool], float]] = {}
     evaluate = _make_evaluator(items, req_pods, solver, market, exclude,
                                trace, cache)
@@ -125,7 +130,7 @@ def golden_section_search(
             if f2 > best_f:
                 best_pool, best_f = pool2, f2
 
-    trace.wall_seconds = time.perf_counter() - t0
+    trace.wall_seconds = timer() - t0
     if best_pool is not None:
         best_pool = best_pool.nonzero()
     return best_pool, trace
@@ -139,6 +144,7 @@ def bracketed_gss(
     solver: Callable[[Sequence[CandidateItem], int, float], Optional[List[int]]] = solve_ilp,
     market: Optional[CompiledMarket] = None,
     exclude: Optional[np.ndarray] = None,
+    timer: Callable[[], float] = time.perf_counter,
 ) -> Tuple[Optional[NodePool], GssTrace]:
     """Guarded GSS (beyond-paper robustness hardening, DESIGN.md §7).
 
@@ -153,7 +159,7 @@ def bracketed_gss(
     grid = [i / (prescan - 1) for i in range(prescan)]
     use_engine = solver is solve_ilp
     scan_trace = GssTrace()
-    t0 = time.perf_counter()
+    t0 = timer()
 
     if use_engine:
         if market is None:
@@ -198,12 +204,12 @@ def bracketed_gss(
     pool, trace = golden_section_search(items, req_pods, tolerance=tolerance,
                                         alpha_lo=lo, alpha_hi=hi,
                                         solver=solver, market=market,
-                                        exclude=exclude)
+                                        exclude=exclude, timer=timer)
     # merge traces and keep the global argmax
     trace.alphas = scan_trace.alphas + trace.alphas
     trace.e_totals = scan_trace.e_totals + trace.e_totals
     trace.ilp_solves += scan_trace.ilp_solves
-    trace.wall_seconds = time.perf_counter() - t0
+    trace.wall_seconds = timer() - t0
     inner_f = e_total(pool, req_pods) if pool is not None else float("-inf")
     if best_pool is not None and best_f > inner_f:
         return best_pool.nonzero(), trace

@@ -189,6 +189,40 @@ def compile_market(items: Sequence[CandidateItem]) -> CompiledMarket:
         b_item=b_item_arr, b_pods=b_pods_arr, b_copies=b_copies_arr)
 
 
+def reweight_market(market: CompiledMarket, perf: np.ndarray,
+                    price: np.ndarray,
+                    items: Optional[Sequence[CandidateItem]] = None,
+                    ) -> CompiledMarket:
+    """Array-adjustment entry point: a compiled market with substituted
+    (Perf_i, SP_i) objective vectors.
+
+    The bounded-knapsack *structure* (Pod_i, T3_i, binary bundle splits) is
+    independent of the objective, so swapping in adjusted performance/price
+    vectors — the risk subsystem's uptime-discounted Perf and
+    re-provision-charged SP (``repro.risk.objective``) — costs O(n) instead
+    of a full :func:`compile_market`.  Pass ``items`` (e.g. from
+    :func:`repro.core.efficiency.reweight_items`) to keep ``market.items``
+    consistent with the new vectors; otherwise the original items are kept
+    and only the solver-facing arrays change.
+    """
+    perf = np.asarray(perf, dtype=np.float64)
+    price = np.asarray(price, dtype=np.float64)
+    if len(perf) != market.n or len(price) != market.n:
+        raise ValueError(f"adjusted vectors must have {market.n} entries")
+    if market.n == 0:
+        return market
+    if np.any(price <= 0):
+        raise ValueError("adjusted prices must be positive")
+    positive_perf = perf[perf > 0]
+    perf_min = float(positive_perf.min()) if positive_perf.size else 1.0
+    sp_min = float(price.min())
+    return dataclasses.replace(
+        market,
+        items=market.items if items is None else tuple(items),
+        perf=perf, price=price, perf_min=perf_min, sp_min=sp_min,
+        perf_norm=perf / perf_min, price_norm=price / sp_min)
+
+
 # ---------------------------------------------------------------------------
 # Memory-flat covering knapsack: value pass, LP pruning, D&C backtracking
 # ---------------------------------------------------------------------------

@@ -18,7 +18,8 @@ from __future__ import annotations
 import collections
 import dataclasses
 import time
-from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+from typing import (Callable, Dict, Iterable, List, Optional, Sequence, Set,
+                    Tuple)
 
 import numpy as np
 
@@ -91,12 +92,17 @@ class KubePACSProvisioner:
     """ILP + GSS provisioning with §4.1 interrupt handling."""
 
     def __init__(self, tolerance: float = 0.01, ttl_hours: float = 2.0,
-                 guarded_gss: bool = True):
+                 guarded_gss: bool = True,
+                 timer: Callable[[], float] = time.perf_counter):
         self.tolerance = tolerance
         self.guarded_gss = guarded_gss   # bracketed prescan (DESIGN.md §7)
         self.cache = UnavailableOfferingsCache(ttl_hours)
         self.event_queue: collections.deque[InterruptEvent] = collections.deque()
         self.clock = 0.0   # advanced by the caller (simulator hours)
+        # wall timer for the diagnostic wall_seconds stamps; injectable so
+        # tests can assert full ProvisioningDecision equality (decision
+        # *content* never depends on it)
+        self.timer = timer
         # compiled-market cache (DESIGN.md §8): bundle splits / pod / bound
         # arrays depend only on the catalog snapshot and the request's
         # per-pod shape, so re-optimisation against the *same* snapshot
@@ -134,14 +140,14 @@ class KubePACSProvisioner:
                   precompiled: Optional[Tuple[List[CandidateItem],
                                               CompiledMarket]] = None,
                   ) -> ProvisioningDecision:
-        t0 = time.perf_counter()
+        t0 = self.timer()
         excluded = self.cache.excluded(self.clock)
         items, market = self._compiled(request, catalog, precompiled)
         exclude = exclusion_mask(items, excluded)
         search = bracketed_gss if self.guarded_gss else golden_section_search
         pool, trace = search(items, request.pods, tolerance=self.tolerance,
-                             market=market, exclude=exclude)
-        wall = time.perf_counter() - t0
+                             market=market, exclude=exclude, timer=self.timer)
+        wall = self.timer() - t0
         if pool is None:   # demand exceeds bounded capacity: surface it
             pool = NodePool(items=[], counts=[], request=request)
             alpha = None

@@ -10,7 +10,7 @@ from .interrupts import (InterruptModel, NullInterruptModel,
                          PressureInterruptModel, PriceCrossingInterruptModel,
                          RebalanceRecommendationModel, make_interrupt_model)
 from .policy import (FixedAlphaPolicy, KarpenterLikePolicy, KubePACSPolicy,
-                     Policy, make_policy)
+                     KubePACSRiskPolicy, Policy, make_policy)
 from .scenario import Scenario, Shock
 from .trace import TraceRecorder, load_trace, loads_trace
 from .engine import (ClusterSim, LiveMarketSource, ReplaySource,
@@ -21,7 +21,8 @@ __all__ = [
     "InterruptNotice", "TRACE_VERSION", "InterruptModel",
     "NullInterruptModel", "PressureInterruptModel",
     "PriceCrossingInterruptModel", "RebalanceRecommendationModel",
-    "make_interrupt_model", "Policy", "KubePACSPolicy", "KarpenterLikePolicy",
+    "make_interrupt_model", "Policy", "KubePACSPolicy", "KubePACSRiskPolicy",
+    "KarpenterLikePolicy",
     "FixedAlphaPolicy", "make_policy", "Scenario", "Shock", "TraceRecorder",
     "load_trace", "loads_trace", "ClusterSim", "LiveMarketSource",
     "ReplaySource", "ScriptedMarketSource", "SimResult", "SimRound",

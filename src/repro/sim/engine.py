@@ -21,7 +21,12 @@ modes, differing only in the :class:`MarketSource` behind it:
 The engine also exposes an incremental event-stream API
 (:meth:`ClusterSim.advance` / :meth:`ClusterSim.current_snapshot`) used by
 ``repro.runtime.elastic.ElasticSpotTrainer``, which owns its own training
-loop but sources market time, interrupts, and the trace from the engine.
+loop but sources market time, interrupts, and the trace from the engine —
+and an *observer* fan-out (DESIGN.md §10): the policy and any
+``observers=`` passed to the constructor receive every market refresh,
+interrupt sample, and fulfillment round, which is how the risk
+subsystem's online estimators (and the backtest's calibration probe)
+learn from the same stream live and under replay.
 """
 
 from __future__ import annotations
@@ -198,6 +203,7 @@ class SimRound:
     decision: Optional[ProvisioningDecision]
     pool: NodePool                           # post-round pool
     snapshot: Optional[List[Offering]] = None
+    lost_perf: float = 0.0                   # Σ Perf_i over reclaimed nodes
 
 
 @dataclasses.dataclass
@@ -209,6 +215,13 @@ class SimResult:
     interrupted_nodes: int
     pool: NodePool
     recorder: TraceRecorder
+    total_perf_hours: float = 0.0     # ∫ pool perf_rate dt (delivered work)
+
+    @property
+    def lost_perf_total(self) -> float:
+        """Σ Perf_i of every reclaimed node — the backtest charges each
+        interruption ``reprovision_hours`` of this rate (DESIGN.md §10)."""
+        return float(sum(rd.lost_perf for rd in self.rounds))
 
     @property
     def records(self) -> List[Dict]:
@@ -219,23 +232,25 @@ class SimResult:
 
 
 def _apply_losses(pool: NodePool, notices: Sequence[InterruptNotice],
-                  ) -> Tuple[NodePool, int, int]:
+                  ) -> Tuple[NodePool, int, int, float]:
     """Remove interrupted nodes; lost pods use each item's actual Pod_i
     (not a hardcoded per-node pod count — large-instance interrupts count
-    fully)."""
+    fully).  Also totals the reclaimed Perf_i rate for loss accounting."""
     lost: Dict[str, int] = {}
     for n in notices:
         lost[n.offering_id] = lost.get(n.offering_id, 0) + n.count
     items, counts, lost_nodes, lost_pods = [], [], 0, 0
+    lost_perf = 0.0
     for it, c in zip(pool.items, pool.counts):
         take = min(c, lost.get(it.offering.offering_id, 0))
         lost_nodes += take
         lost_pods += take * it.pods
+        lost_perf += take * it.perf
         if c - take > 0:
             items.append(it)
             counts.append(c - take)
     return (NodePool(items=items, counts=counts, alpha=pool.alpha,
-                     request=pool.request), lost_nodes, lost_pods)
+                     request=pool.request), lost_nodes, lost_pods, lost_perf)
 
 
 # ---------------------------------------------------------------------------
@@ -303,7 +318,8 @@ class ClusterSim:
                  catalog: Optional[Sequence[Offering]] = None,
                  source=None, recorder: Optional[TraceRecorder] = None,
                  keep_snapshots: bool = False,
-                 compile_cache: Optional[Dict] = None):
+                 compile_cache: Optional[Dict] = None,
+                 observers: Sequence = (), clock=None):
         self.scenario = scenario
         self.catalog = (list(catalog) if catalog is not None
                         else scenario.build_catalog())
@@ -312,9 +328,17 @@ class ClusterSim:
                                       make_interrupt_model(
                                           scenario.interrupt_model))
         self.source = source
+        policy_kwargs = {} if clock is None else {"clock": clock}
         self.policy = make_policy(scenario.policy,
                                   tolerance=scenario.tolerance,
-                                  ttl_hours=scenario.ttl_hours)
+                                  ttl_hours=scenario.ttl_hours,
+                                  **policy_kwargs)
+        # event-stream observer fan-out (DESIGN.md §10): the policy always
+        # observes (risk policies learn online), plus any caller-supplied
+        # observers (e.g. the backtest's calibration probe) — each owns its
+        # own state, so fan-out order is not decision-relevant
+        self.policy.bind(self.catalog)
+        self._observers = [self.policy, *observers]
         self.recorder = recorder or TraceRecorder()
         self.recorder.write(header_record(scenario.to_dict(),
                                           len(self.catalog),
@@ -327,6 +351,7 @@ class ClusterSim:
         self.pending: List[InterruptNotice] = []
         self.time = 0.0
         self.total_cost = 0.0
+        self.total_perf_hours = 0.0
         self._cost_accrued_to = 0.0
         self.interrupted_nodes = 0
         self.decisions: List[Tuple[str, ProvisioningDecision]] = []
@@ -339,7 +364,8 @@ class ClusterSim:
     @classmethod
     def replay(cls, records: Sequence[Dict], *,
                catalog: Optional[Sequence[Offering]] = None,
-               keep_snapshots: bool = False) -> "ClusterSim":
+               keep_snapshots: bool = False,
+               observers: Sequence = ()) -> "ClusterSim":
         """Rebuild a sim from a recorded trace; running it re-derives the
         identical decision sequence without any RNG (DESIGN.md §9)."""
         records = list(records)
@@ -364,7 +390,7 @@ class ClusterSim:
                 f"{digest!r}; pass the recording run's catalog= explicitly")
         return cls(scenario, catalog=catalog,
                    source=ReplaySource(records),
-                   keep_snapshots=keep_snapshots)
+                   keep_snapshots=keep_snapshots, observers=observers)
 
     @classmethod
     def from_market(cls, market: SpotMarketSimulator,
@@ -396,12 +422,24 @@ class ClusterSim:
     def _record(self, rec: Dict) -> None:
         self.recorder.write(rec)
 
+    def _useful_scale(self) -> float:
+        """Fraction of the pool's perf rate doing *useful* work: pods beyond
+        the requested demand contribute nothing (the E_OverPods principle,
+        Eq. 2 — per hour, useful perf / cost is then exactly E_Total), while
+        an underfilled pool is fully utilized."""
+        alloc = self.pool.total_pods
+        return min(1.0, self.request.pods / alloc) if alloc > 0 else 0.0
+
     def _accrue_cost(self, now: float) -> None:
         """Charge the current pool for the interval since the last accrual —
-        called before any event mutates the pool, so mid-interval pool
-        changes (demand merges, interrupts) are billed at the rate that
-        actually ran."""
-        self.total_cost += self.pool.hourly_cost * (now - self._cost_accrued_to)
+        called before any event mutates the pool or the demand, so
+        mid-interval changes (demand merges, interrupts) are billed at the
+        rate that actually ran.  Useful perf-hours accrue on the same
+        schedule, so cost and work integrals cover identical pool
+        histories."""
+        dt = now - self._cost_accrued_to
+        self.total_cost += self.pool.hourly_cost * dt
+        self.total_perf_hours += self.pool.perf_rate * self._useful_scale() * dt
         self._cost_accrued_to = now
 
     def _refresh(self) -> None:
@@ -410,6 +448,8 @@ class ClusterSim:
         self._snapshot = snapshot_with(self.catalog, spot, t3)
         self._snap_index = {o.offering_id: o for o in self._snapshot}
         self._state_idx += 1
+        for obs in self._observers:
+            obs.observe_market(self.time, spot, t3)
 
     def _precompiled(self, request: Request):
         """Shared-compile hook: replicas keyed on (market state, request
@@ -428,8 +468,11 @@ class ClusterSim:
         """Apply a decision: optional fulfillment clip, trace record, merge."""
         new_pool = decision.pool
         if self.scenario.apply_fulfillment and new_pool.total_nodes:
-            grants = self.source.fulfill_pool(new_pool.as_dict(), self.time)
+            requested = new_pool.as_dict()
+            grants = self.source.fulfill_pool(requested, self.time)
             self._record(fulfillment_record(self.time, grants))
+            for obs in self._observers:
+                obs.observe_fulfillment(self.time, requested, grants)
             items, counts = [], []
             for it, c in zip(new_pool.items, new_pool.counts):
                 g = min(c, grants.get(it.offering.offering_id, 0))
@@ -484,13 +527,23 @@ class ClusterSim:
             sampled = [InterruptNotice(time=t, offering_id=oid, count=c,
                                        reason="fault-injection")]
         self._record(interrupts_record(t, sampled))
+        for obs in self._observers:
+            obs.observe_interrupts(t, dt, pool, sampled)
         return sampled, self._split_notices(sampled, t)
 
     def _on_tick(self, t: float, dt: float) -> None:
+        scale = self._useful_scale()        # utilization of the interval's pool
         self._accrue_cost(t)                # interval just run, old pool
         sampled, effective = self._tick_events(t, dt, self.pool.as_dict())
 
-        survivors, lost_nodes, lost_pods = _apply_losses(self.pool, effective)
+        survivors, lost_nodes, lost_pods, lost_perf = _apply_losses(
+            self.pool, effective)
+        # a notice sampled over this tick reclaimed its capacity at an
+        # unknown instant within it, but the accrual above credited the
+        # full interval — charge the expected half-tick of undelivered
+        # useful work (cost is NOT rebated: reclaimed capacity was still
+        # billed, which is exactly why interruptions hurt perf-per-dollar)
+        self.total_perf_hours -= 0.5 * dt * lost_perf * scale
         self.interrupted_nodes += lost_nodes
         decision, shortfall = None, 0
         if effective:
@@ -509,7 +562,8 @@ class ClusterSim:
             time=t, notices=list(sampled), effective=effective,
             lost_nodes=lost_nodes, lost_pods=lost_pods, shortfall=shortfall,
             decision=decision, pool=self.pool,
-            snapshot=self._snapshot if self.keep_snapshots else None))
+            snapshot=self._snapshot if self.keep_snapshots else None,
+            lost_perf=lost_perf))
 
     def _on_shock(self, shock: Shock) -> None:
         self.source.apply_shock(shock)
@@ -574,7 +628,8 @@ class ClusterSim:
         return SimResult(scenario=self.scenario, decisions=self.decisions,
                          rounds=self.rounds, total_cost=self.total_cost,
                          interrupted_nodes=self.interrupted_nodes,
-                         pool=self.pool, recorder=self.recorder)
+                         pool=self.pool, recorder=self.recorder,
+                         total_perf_hours=self.total_perf_hours)
 
     # -- incremental event-stream API (elastic trainer) --------------------
     def current_snapshot(self) -> List[Offering]:

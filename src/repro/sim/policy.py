@@ -12,12 +12,23 @@ Every policy answers the same two questions the engine asks —
 Karpenter-like baseline, and fixed-α ablations all produce comparable,
 trace-recordable decision sequences.  Policies must be deterministic
 functions of their inputs (no RNG, no wall clock in the decision content):
-that is what makes trace replay reproduce identical decisions.
+that is what makes trace replay reproduce identical decisions.  The
+diagnostic ``wall_seconds`` stamp goes through an injectable ``clock`` so
+tests can assert *full* ``ProvisioningDecision`` equality.
+
+Policies are also engine *observers* (DESIGN.md §10): the engine feeds
+them the event stream (market refreshes, interrupt samples, fulfillment
+grants) through the no-op ``observe_*`` hooks below.  Stateful policies —
+``kubepacs_risk`` updates its online risk estimators this way — therefore
+stay deterministic under replay: the recorded stream re-derives the
+identical estimator state at every decision point.
 
 Spec strings (``Scenario.policy``):
 
     "kubepacs"               guarded GSS × ILP (the paper's method)
     "kubepacs_unguarded"     pure Algorithm-1 GSS over α ∈ [0, 1]
+    "kubepacs_risk[:H]"      risk-adjusted E_risk over an H-hour horizon
+                             (default 12) — DESIGN.md §10
     "karpenter_like"         price-capacity-optimized baseline (§5.4)
     "fixed_alpha:<α>"        single ILP solve at a fixed α (Table 2)
 
@@ -30,21 +41,27 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from ..core.efficiency import (CandidateItem, NodePool, Request,
                                decision_metrics)
-from ..core.ilp import CompiledMarket, solve_ilp
+from ..core.gss import bracketed_gss
+from ..core.ilp import CompiledMarket, compile_market, solve_ilp
 from ..core.market import Offering
 from ..core.baselines import karpenter_like
 from ..core.provisioner import (KubePACSProvisioner, ProvisioningDecision,
                                 UnavailableOfferingsCache, exclusion_mask,
                                 preprocess)
+from ..risk.estimators import RiskEstimators, RiskParams
+from ..risk.objective import e_risk, reweight_candidates, risk_adjustment
 from .events import InterruptNotice
 
 Precompiled = Tuple[List[CandidateItem], CompiledMarket]
+
+#: default forecasting horizon (hours) of "kubepacs_risk" without ":H"
+DEFAULT_RISK_HORIZON = 12.0
 
 
 class Policy:
@@ -62,6 +79,23 @@ class Policy:
                       ) -> Optional[ProvisioningDecision]:
         raise NotImplementedError
 
+    # -- engine observer hooks (no-ops for stateless policies) --------------
+    def bind(self, catalog: Sequence[Offering]) -> None:
+        """Called once by the engine with the static offering universe."""
+
+    def observe_market(self, time: float, spot: np.ndarray,
+                       t3: np.ndarray) -> None:
+        """A market refresh (tick or shock) produced live (spot, t3)."""
+
+    def observe_interrupts(self, time: float, dt: float,
+                           pool: Dict[str, int],
+                           notices: Sequence[InterruptNotice]) -> None:
+        """A tick sampled ``notices`` for ``pool`` exposed over ``dt``."""
+
+    def observe_fulfillment(self, time: float, requested: Dict[str, int],
+                            grants: Dict[str, int]) -> None:
+        """A launch's fulfillment round granted ``grants`` of ``requested``."""
+
 
 class KubePACSPolicy(Policy):
     """The paper's provisioner, including its UnavailableOfferingsCache."""
@@ -69,10 +103,12 @@ class KubePACSPolicy(Policy):
     name = "kubepacs"
 
     def __init__(self, tolerance: float = 0.01, ttl_hours: float = 2.0,
-                 guarded: bool = True) -> None:
+                 guarded: bool = True,
+                 clock: Callable[[], float] = time.perf_counter) -> None:
         self.provisioner = KubePACSProvisioner(tolerance=tolerance,
                                                ttl_hours=ttl_hours,
-                                               guarded_gss=guarded)
+                                               guarded_gss=guarded,
+                                               timer=clock)
         if not guarded:
             self.name = "kubepacs_unguarded"
 
@@ -93,8 +129,10 @@ class _BaselinePolicy(Policy):
     """Shared §4.1 plumbing (TTL exclusion cache, shortfall requests) for
     baselines that are not the KubePACS provisioner."""
 
-    def __init__(self, ttl_hours: float = 2.0) -> None:
+    def __init__(self, ttl_hours: float = 2.0,
+                 clock: Callable[[], float] = time.perf_counter) -> None:
         self.cache = UnavailableOfferingsCache(ttl_hours)
+        self.clock = clock
 
     def _solve(self, items: List[CandidateItem], req_pods: int,
                exclude: Optional[np.ndarray],
@@ -102,7 +140,7 @@ class _BaselinePolicy(Policy):
         raise NotImplementedError
 
     def provision(self, request, snapshot, now, precompiled=None):
-        t0 = time.perf_counter()
+        t0 = self.clock()
         excluded = self.cache.excluded(now)
         items = precompiled[0] if precompiled is not None \
             else preprocess(snapshot, request)
@@ -112,7 +150,7 @@ class _BaselinePolicy(Policy):
         pool.alpha = alpha
         return ProvisioningDecision(
             pool=pool, trace=None, alpha=alpha,
-            wall_seconds=time.perf_counter() - t0,
+            wall_seconds=self.clock() - t0,
             excluded_offerings=excluded,
             metrics=decision_metrics(pool, request.pods))
 
@@ -132,8 +170,9 @@ class _BaselinePolicy(Policy):
 class FixedAlphaPolicy(_BaselinePolicy):
     """Single ILP solve at a fixed α — the Table 2 ablation as a policy."""
 
-    def __init__(self, alpha: float, ttl_hours: float = 2.0) -> None:
-        super().__init__(ttl_hours)
+    def __init__(self, alpha: float, ttl_hours: float = 2.0,
+                 clock: Callable[[], float] = time.perf_counter) -> None:
+        super().__init__(ttl_hours, clock)
         self.alpha = float(alpha)
         self.name = f"fixed_alpha:{alpha:g}"
 
@@ -158,17 +197,138 @@ class KarpenterLikePolicy(_BaselinePolicy):
         return karpenter_like(items, req_pods), None
 
 
+class KubePACSRiskPolicy(_BaselinePolicy):
+    """Risk-adjusted KubePACS: guarded GSS × ILP over E_risk (DESIGN.md §10).
+
+    Decisions maximize the risk-adjusted efficiency of
+    :mod:`repro.risk.objective` — Perf_i discounted by expected uptime and
+    fulfillment rate, SP_i charged with drifted price and expected
+    re-provision cost over ``horizon`` hours — by substituting adjusted
+    (Perf̂, SP̂) vectors into the *unchanged* PR 1 solver stack.  The
+    returned pool references the real items, so cost accrual and the
+    canonical metrics stay in real dollars; the optimized risk score rides
+    along as the extra ``e_risk`` metric.  The §4.1 exclusion/shortfall
+    protocol is inherited from :class:`_BaselinePolicy`.
+
+    Deterministic given (snapshot, estimator state): estimators update only
+    through the engine's observe hooks, which replay feeds the identical
+    recorded stream.
+    """
+
+    def __init__(self, horizon: float = DEFAULT_RISK_HORIZON,
+                 tolerance: float = 0.01, ttl_hours: float = 2.0,
+                 params: Optional[RiskParams] = None,
+                 clock: Callable[[], float] = time.perf_counter) -> None:
+        super().__init__(ttl_hours, clock)
+        self.horizon = float(horizon)
+        self.name = f"kubepacs_risk:{self.horizon:g}"
+        self.tolerance = tolerance
+        self.params = params or RiskParams()
+        self.estimators: Optional[RiskEstimators] = None
+        # compiled-market cache mirroring KubePACSProvisioner._compiled:
+        # preprocessing/bundle-splitting depends only on (snapshot identity,
+        # per-pod request shape), so the same-tick §4.1 re-provision reuses
+        # the initial decision's CompiledMarket and only the O(n)
+        # reweighting runs per solve
+        self._market_snapshot: Optional[Sequence[Offering]] = None
+        self._market_shape: Optional[Tuple] = None
+        self._market_items: List[CandidateItem] = []
+        self._market: Optional[CompiledMarket] = None
+
+    # -- estimator lifecycle -----------------------------------------------
+    def bind(self, catalog):
+        self.estimators = RiskEstimators(catalog, self.params)
+
+    def _ensure_estimators(self, snapshot) -> RiskEstimators:
+        # standalone use (no engine): bind lazily to the first snapshot —
+        # offering order there matches the catalog (snapshot_with preserves
+        # it), so indices line up with later observations
+        if self.estimators is None:
+            self.estimators = RiskEstimators(snapshot, self.params)
+        return self.estimators
+
+    def observe_market(self, time, spot, t3):
+        if self.estimators is not None:
+            self.estimators.on_market_state(time, spot, t3)
+
+    def observe_interrupts(self, time, dt, pool, notices):
+        if self.estimators is not None:
+            self.estimators.on_interrupts(time, dt, pool, notices)
+
+    def observe_fulfillment(self, time, requested, grants):
+        if self.estimators is not None:
+            self.estimators.on_fulfillment(time, requested, grants)
+
+    # -- decisions ----------------------------------------------------------
+    def _compiled(self, request, snapshot,
+                  precompiled: Optional[Precompiled]) -> Precompiled:
+        if precompiled is not None:
+            return precompiled
+        # the held snapshot reference keeps it alive, so the identity check
+        # cannot alias a recycled object id
+        shape = (request.cpu_per_pod, request.mem_per_pod, request.workload)
+        if snapshot is not self._market_snapshot or \
+                shape != self._market_shape:
+            items = preprocess(snapshot, request)
+            self._market_snapshot = snapshot
+            self._market_shape = shape
+            self._market_items = items
+            self._market = compile_market(items)
+        return self._market_items, self._market
+
+    def provision(self, request, snapshot, now, precompiled=None):
+        t0 = self.clock()
+        est = self._ensure_estimators(snapshot)
+        excluded = self.cache.excluded(now)
+        items, market = self._compiled(request, snapshot, precompiled)
+        exclude = exclusion_mask(items, excluded)
+        adj = risk_adjustment(items, est, self.horizon)
+        items_adj, market_adj = reweight_candidates(items, adj, market)
+        pool_adj, trace = bracketed_gss(items_adj, request.pods,
+                                        tolerance=self.tolerance,
+                                        market=market_adj, exclude=exclude,
+                                        timer=self.clock)
+        if pool_adj is None:     # demand exceeds bounded capacity
+            pool = NodePool(items=[], counts=[], request=request)
+            alpha = None
+            risk_score = 0.0
+        else:
+            # map the solved counts back onto the real items so downstream
+            # cost/perf accounting uses live market numbers, not Perf̂/SP̂
+            real = {it.offering.offering_id: it for it in items}
+            pool = NodePool(
+                items=[real[it.offering.offering_id]
+                       for it in pool_adj.items],
+                counts=list(pool_adj.counts), alpha=pool_adj.alpha,
+                request=request)
+            alpha = pool_adj.alpha
+            risk_score = e_risk(pool, request.pods, items_adj)
+        metrics = decision_metrics(pool, request.pods)
+        metrics["e_risk"] = risk_score
+        return ProvisioningDecision(pool=pool, trace=trace, alpha=alpha,
+                                    wall_seconds=self.clock() - t0,
+                                    excluded_offerings=excluded,
+                                    metrics=metrics)
+
+
 def make_policy(spec: str, tolerance: float = 0.01,
-                ttl_hours: float = 2.0) -> Policy:
+                ttl_hours: float = 2.0,
+                clock: Callable[[], float] = time.perf_counter) -> Policy:
     """Parse a scenario's policy spec string (see module doc)."""
     if spec == "kubepacs":
-        return KubePACSPolicy(tolerance=tolerance, ttl_hours=ttl_hours)
+        return KubePACSPolicy(tolerance=tolerance, ttl_hours=ttl_hours,
+                              clock=clock)
     if spec == "kubepacs_unguarded":
         return KubePACSPolicy(tolerance=tolerance, ttl_hours=ttl_hours,
-                              guarded=False)
+                              guarded=False, clock=clock)
+    if spec == "kubepacs_risk" or spec.startswith("kubepacs_risk:"):
+        horizon = (float(spec.split(":", 1)[1])
+                   if ":" in spec else DEFAULT_RISK_HORIZON)
+        return KubePACSRiskPolicy(horizon=horizon, tolerance=tolerance,
+                                  ttl_hours=ttl_hours, clock=clock)
     if spec == "karpenter_like":
-        return KarpenterLikePolicy(ttl_hours=ttl_hours)
+        return KarpenterLikePolicy(ttl_hours=ttl_hours, clock=clock)
     if spec.startswith("fixed_alpha:"):
         return FixedAlphaPolicy(float(spec.split(":", 1)[1]),
-                                ttl_hours=ttl_hours)
+                                ttl_hours=ttl_hours, clock=clock)
     raise ValueError(f"unknown policy spec {spec!r}")

@@ -1,0 +1,344 @@
+"""Risk subsystem: estimator convergence, E_risk reductions, survival math,
+determinism of the kubepacs_risk policy, and the backtest acceptance
+comparison (DESIGN.md §10)."""
+
+import numpy as np
+import pytest
+
+from repro.core import (Request, compile_market, generate_catalog, preprocess,
+                        reweight_items, reweight_market, solve_ilp)
+from repro.risk import (RiskEstimators, e_risk, expected_uptime_fraction,
+                        interrupt_probability, replay_observations,
+                        reweight_candidates, risk_adjustment, survival_curve)
+from repro.risk import backtest
+from repro.sim import ClusterSim, Scenario, make_policy
+from repro.sim.events import InterruptNotice
+
+from ._optional import HAVE_HYPOTHESIS, given, settings, st
+
+
+def storm_scenario(**overrides) -> Scenario:
+    base = dict(name="risk_test_storm", duration_hours=36.0, step_hours=6.0,
+                pods=60, cpu_per_pod=2, mem_per_pod=2,
+                interrupt_model="pressure", inject_if_idle=True,
+                policy="kubepacs_risk:12", catalog_seed=1, max_offerings=150,
+                market_seed=1, interrupt_seed=1)
+    base.update(overrides)
+    return Scenario(**base)
+
+
+# ------------------------------------------------------------- survival ----
+
+def test_survival_curve_and_limits():
+    hazard = np.array([0.0, 0.05, 0.5])
+    s = survival_curve(hazard, np.array([0.0, 1.0, 10.0]))
+    assert s.shape == (3, 3)
+    assert np.allclose(s[:, 0], 1.0)            # S(0) = 1
+    assert np.allclose(s[0], 1.0)               # λ=0 never dies
+    assert np.all(np.diff(s[1:], axis=1) < 0)   # strictly decreasing in h
+
+    assert np.all(interrupt_probability(hazard, 0.0) == 0.0)
+    assert np.all(expected_uptime_fraction(hazard, 0.0) == 1.0)
+    u = expected_uptime_fraction(hazard, 24.0)
+    assert u[0] == 1.0
+    assert np.all((u > 0) & (u <= 1.0)) and u[1] > u[2]
+    # closed form: U = (1 − e^{−λH})/(λH)
+    assert u[2] == pytest.approx((1 - np.exp(-0.5 * 24)) / (0.5 * 24))
+
+
+# ----------------------------------------------- estimator convergence ----
+# Each property is a plain checker exercised two ways: always on a fixed
+# parameter grid (the deterministic suite), and — when hypothesis is
+# installed — under randomized @given search over the whole range.
+
+def _check_hazard_convergence(lam: float) -> None:
+    """On a stationary expected-count event stream the discounted-ratio
+    estimator converges to the true hazard (prior mass decays away)."""
+    catalog = generate_catalog(seed=3, max_offerings=10)
+    est = RiskEstimators(catalog)
+    oid = catalog[0].offering_id
+    count, dt = 25, 1.0
+    for k in range(400):
+        notices = [InterruptNotice(time=k * dt, offering_id=oid,
+                                   count=lam * count * dt)]
+        est.on_interrupts(k * dt, dt, {oid: count}, notices)
+    hazard = est.hazard()[est.index[oid]]
+    assert hazard == pytest.approx(lam, rel=0.05)
+    # offerings never exposed stay at their IF-band prior
+    other = catalog[1]
+    prior = 0.01 + 0.015 * other.interruption_freq
+    assert est.hazard()[est.index[other.offering_id]] == \
+        pytest.approx(prior, rel=1e-6)
+
+
+def _check_drift_convergence(drift: float) -> None:
+    """A constant-relative-growth price path yields exactly that per-hour
+    drift at every step, so the EWMA converges to it."""
+    catalog = generate_catalog(seed=3, max_offerings=5)
+    est = RiskEstimators(catalog)
+    spot = np.array([o.spot_price for o in catalog], dtype=np.float64)
+    t3 = np.array([o.t3 for o in catalog])
+    for k in range(200):
+        est.on_market_state(float(k), spot, t3)
+        spot = spot * (1.0 + drift)
+    assert np.allclose(est.drift(), drift, atol=5e-4)
+
+
+@pytest.mark.parametrize("lam", [0.002, 0.02, 0.12])
+def test_hazard_estimator_converges_to_true_rate(lam):
+    _check_hazard_convergence(lam)
+
+
+@pytest.mark.parametrize("drift", [-0.04, 0.0, 0.03])
+def test_price_drift_estimator_converges(drift):
+    _check_drift_convergence(drift)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=15, deadline=None)
+    @given(lam=st.floats(min_value=1e-3, max_value=0.15))
+    def test_hazard_estimator_converges_property(lam):
+        _check_hazard_convergence(lam)
+
+    @settings(max_examples=15, deadline=None)
+    @given(drift=st.floats(min_value=-0.04, max_value=0.04))
+    def test_price_drift_estimator_converges_property(drift):
+        _check_drift_convergence(drift)
+
+
+def test_replay_observations_matches_live_price_state():
+    """The offline record walker reproduces the price/drift state a live
+    observer built from the same market_state stream."""
+    sc = storm_scenario(interrupt_model="none", inject_if_idle=False,
+                        duration_hours=18.0)
+    catalog = sc.build_catalog()
+    sim = ClusterSim(sc, catalog=catalog)
+    res = sim.run()
+    live = sim.policy.estimators
+    offline = replay_observations(RiskEstimators(catalog), res.records)
+    assert np.allclose(offline.drift(), live.drift())
+    assert offline._last_market_time == live._last_market_time
+
+
+def test_shortfall_estimator_tracks_grant_rate():
+    catalog = generate_catalog(seed=3, max_offerings=5)
+    est = RiskEstimators(catalog)
+    oid = catalog[0].offering_id
+    for k in range(60):
+        est.on_fulfillment(float(k), {oid: 10}, {oid: 4})   # 40% granted
+    i = est.index[oid]
+    assert est.shortfall()[i] == pytest.approx(0.6, abs=0.01)
+    # never-requested offerings keep the zero-shortfall prior
+    assert est.shortfall()[est.index[catalog[1].offering_id]] == 0.0
+
+
+# ------------------------------------------------------ E_risk reductions ----
+
+def _items(n=40):
+    catalog = generate_catalog(seed=2, max_offerings=200)
+    return preprocess(catalog, Request(pods=50, cpu_per_pod=2,
+                                       mem_per_pod=2))[:n], catalog
+
+
+def test_e_risk_identity_at_zero_horizon():
+    """horizon → 0: the adjustment is the exact identity, so E_risk of any
+    pool equals e_total bitwise."""
+    items, catalog = _items()
+    est = RiskEstimators(catalog)
+    adj = risk_adjustment(items, est, horizon=0.0)
+    assert adj.perf.tolist() == [it.perf for it in items]
+    assert adj.price.tolist() == [it.spot_price for it in items]
+    items_adj, _ = reweight_candidates(items, adj)
+    counts = solve_ilp(items, 50, 0.4)
+    from repro.core import NodePool, e_total
+    pool = NodePool(items=list(items), counts=counts).nonzero()
+    assert e_risk(pool, 50, items_adj) == e_total(pool, 50)
+
+
+def test_e_risk_identity_at_zero_hazard():
+    """hazard → 0 (with zero drift and shortfall): identity at any horizon."""
+    items, catalog = _items()
+    est = RiskEstimators(catalog)
+    est._events[:] = 0.0               # force λ = 0 (white-box, prior off)
+    adj = risk_adjustment(items, est, horizon=24.0)
+    assert adj.perf.tolist() == [it.perf for it in items]
+    assert adj.price.tolist() == [it.spot_price for it in items]
+
+
+def test_e_risk_discounts_high_hazard_and_charges_price():
+    items, catalog = _items()
+    est = RiskEstimators(catalog)
+    oid = items[0].offering.offering_id
+    for k in range(20):                # hammer item 0 with interrupts
+        est.on_interrupts(float(k), 1.0, {oid: 5},
+                          [InterruptNotice(time=float(k), offering_id=oid,
+                                           count=3)])
+    adj = risk_adjustment(items, est, horizon=12.0)
+    assert adj.perf[0] < items[0].perf          # uptime discount
+    assert adj.price[0] > items[0].spot_price   # re-provision charge
+    assert adj.hazard[0] > adj.hazard[1]
+
+
+def test_reweight_market_matches_fresh_compile():
+    """The O(n) reweighted CompiledMarket solves identically to compiling
+    the adjusted items from scratch (bundle structure is objective-free)."""
+    items, catalog = _items(60)
+    est = RiskEstimators(catalog)
+    adj = risk_adjustment(items, est, horizon=24.0)
+    market = compile_market(items)
+    items_adj = reweight_items(items, adj.perf, adj.price)
+    fast = reweight_market(market, adj.perf, adj.price, items=items_adj)
+    fresh = compile_market(items_adj)
+    assert np.allclose(fast.perf_norm, fresh.perf_norm)
+    assert np.allclose(fast.price_norm, fresh.price_norm)
+    assert fast.b_pods.tolist() == fresh.b_pods.tolist()
+    for alpha in (0.0, 0.3, 0.9):
+        assert solve_ilp(items_adj, 120, alpha, market=fast) == \
+            solve_ilp(items_adj, 120, alpha, market=fresh)
+
+
+def test_reweight_market_validates_inputs():
+    items, _ = _items(10)
+    market = compile_market(items)
+    with pytest.raises(ValueError, match="entries"):
+        reweight_market(market, np.ones(3), np.ones(3))
+    with pytest.raises(ValueError, match="positive"):
+        reweight_market(market, np.ones(10), np.zeros(10))
+
+
+# ------------------------------------------------- policy & determinism ----
+
+def test_make_policy_risk_specs():
+    assert make_policy("kubepacs_risk").horizon == 12.0
+    p = make_policy("kubepacs_risk:36")
+    assert p.horizon == 36.0 and p.name == "kubepacs_risk:36"
+    with pytest.raises(ValueError):
+        make_policy("kubepacs_risky")
+
+
+def test_risk_policy_same_seed_byte_identical_and_replays():
+    sc = storm_scenario()
+    a = ClusterSim(sc).run()
+    b = ClusterSim(sc).run()
+    assert a.recorder.dumps() == b.recorder.dumps()
+    replayed = ClusterSim.replay(a.records).run()
+    assert replayed.decision_records() == a.decision_records()
+    assert replayed.recorder.dumps() == a.recorder.dumps()
+    assert any("e_risk" in r["metrics"] for r in a.decision_records())
+
+
+def test_risk_policy_replay_needs_no_rng(monkeypatch):
+    sc = storm_scenario()
+    catalog = sc.build_catalog()
+    live = ClusterSim(sc, catalog=catalog).run()
+
+    def boom(*a, **k):
+        raise AssertionError("replay consumed RNG")
+    monkeypatch.setattr(np.random, "default_rng", boom)
+    replayed = ClusterSim.replay(live.records, catalog=catalog).run()
+    assert replayed.decision_records() == live.decision_records()
+
+
+def test_risk_policy_estimators_follow_event_stream():
+    sc = storm_scenario()
+    sim = ClusterSim(sc)
+    res = sim.run()
+    est = sim.policy.estimators
+    assert est is not None
+    assert est._last_market_time == sc.duration_hours
+    # the storm's interrupts (incl. injected ones) raised someone's hazard
+    # above the cold-start prior
+    assert np.any(est.hazard() > est._hazard_prior + 1e-9)
+    assert res.interrupted_nodes > 0
+
+
+def test_injectable_clock_full_decision_equality():
+    """With a deterministic clock, two identical runs agree on the *entire*
+    ProvisioningDecision — wall_seconds and GSS trace included — for every
+    policy family (the wall stamp is diagnostic, not decision content)."""
+    def fake_clock_factory():
+        state = {"t": 0.0}
+
+        def clock():
+            state["t"] += 1.0
+            return state["t"]
+        return clock
+
+    for policy in ("kubepacs", "kubepacs_risk:12", "fixed_alpha:0.5"):
+        sc = storm_scenario(policy=policy, duration_hours=12.0)
+        a = ClusterSim(sc, clock=fake_clock_factory()).run()
+        b = ClusterSim(sc, clock=fake_clock_factory()).run()
+        assert a.decisions == b.decisions      # full dataclass equality
+        assert all(d.wall_seconds > 0 for _, d in a.decisions)
+
+
+def test_run_replicas_supports_risk_policy():
+    from repro.sim import run_replicas
+    sc = storm_scenario(duration_hours=18.0)
+    single = ClusterSim(sc).run()
+    replicas = run_replicas(sc, [1, 2])
+    assert replicas[0].decision_records() == single.decision_records()
+
+
+# ------------------------------------------------------------- backtest ----
+
+def test_engine_accrues_useful_perf_hours():
+    """Useful work = perf_rate × min(1, req/alloc): over-provisioned pods
+    earn nothing, so per-hour useful-ppd equals E_Total exactly."""
+    sc = storm_scenario(interrupt_model="none", inject_if_idle=False,
+                        duration_hours=12.0)
+    res = ClusterSim(sc).run()
+    pool = dict(res.decisions)["initial"].pool
+    scale = min(1.0, sc.pods / pool.total_pods)
+    assert res.total_perf_hours == pytest.approx(
+        12.0 * pool.perf_rate * scale)
+    assert res.lost_perf_total == 0.0
+    # and the per-hour useful ppd is E_Total of the standing pool
+    from repro.core import e_total
+    assert res.total_perf_hours / res.total_cost == \
+        pytest.approx(e_total(pool, sc.pods))
+
+
+def test_interrupts_charge_half_tick_of_useful_work():
+    """One 6 h tick ending in a fault-injected loss: delivered work is the
+    pool's full-interval useful rate minus half a tick of the reclaimed
+    rate (the expected mid-interval reclaim instant)."""
+    sc = storm_scenario(duration_hours=6.0, interrupt_model="none",
+                        inject_if_idle=True)
+    res = ClusterSim(sc).run()
+    pool = dict(res.decisions)["initial"].pool
+    scale = min(1.0, sc.pods / pool.total_pods)
+    rd = res.rounds[0]
+    assert rd.lost_nodes > 0 and rd.lost_perf > 0
+    assert res.total_perf_hours == pytest.approx(
+        (6.0 * pool.perf_rate - 0.5 * 6.0 * rd.lost_perf) * scale)
+
+
+def test_calibration_report_scores_forecast():
+    sc = backtest.interrupt_storm_scenario(duration_hours=24.0,
+                                           max_offerings=120)
+    res = ClusterSim(sc).run()
+    rep = backtest.calibration_report(res.records)
+    assert rep["ticks"] == 4
+    assert rep["allocations_scored"] > 0
+    assert 0.0 <= rep["brier"] <= 1.0
+    assert rep["predicted_interrupted_nodes"] >= 0.0
+    # realized = every node named by a sampled notice (advisory included)
+    assert rep["realized_interrupted_nodes"] == sum(
+        n.count for rd in res.rounds for n in rd.notices)
+
+
+def test_backtest_storm_risk_beats_static():
+    """Acceptance: on the interrupt-storm scenario kubepacs_risk ≥ kubepacs
+    on perf-per-dollar net of interruption losses (deterministic: crossing
+    interrupts draw no RNG, so this is a stable comparison, not a coin
+    flip)."""
+    out = backtest.compare_policies(backtest.interrupt_storm_scenario(),
+                                    policies=("kubepacs",
+                                              "kubepacs_risk:12"),
+                                    seeds=(0,))
+    static = out["summary"]["kubepacs"]["mean_net_ppd"]
+    risk = out["summary"]["kubepacs_risk:12"]["mean_net_ppd"]
+    assert risk >= static
+    assert out["summary"]["kubepacs_risk:12"]["mean_interrupted_nodes"] <= \
+        out["summary"]["kubepacs"]["mean_interrupted_nodes"]

@@ -102,13 +102,17 @@ def test_replay_rejects_mismatched_catalog():
 
 
 def test_decision_metrics_schema_uniform_across_policies():
-    """Every policy (and the infeasible path) emits the same metric keys."""
+    """Every policy (and the infeasible path) emits the same metric keys;
+    kubepacs_risk adds exactly its optimized risk score on top."""
     keys = {"e_total", "e_perf_cost", "e_over_pods", "hourly_cost",
             "nodes", "pods"}
     for policy in ("kubepacs", "karpenter_like", "fixed_alpha:0.5"):
         sc = storm_scenario(duration_hours=0.0, policy=policy)
         res = ClusterSim(sc).run()
         assert set(res.decision_records()[0]["metrics"]) == keys
+    sc = storm_scenario(duration_hours=0.0, policy="kubepacs_risk:12")
+    res = ClusterSim(sc).run()
+    assert set(res.decision_records()[0]["metrics"]) == keys | {"e_risk"}
     # infeasible demand: empty pool, same schema, zero scores
     sc = storm_scenario(duration_hours=0.0, pods=10**7)
     rec = ClusterSim(sc).run().decision_records()[0]
