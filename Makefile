@@ -3,7 +3,7 @@
 
 PY := PYTHONPATH=src python
 
-.PHONY: verify test bench bench-solver bench-risk docs-check
+.PHONY: verify test bench bench-solver bench-risk bench-fleet docs-check
 
 ## tier-1 gate: full test suite + a smoke pass of the solver microbenchmark
 ## + the docs gate (README quickstart runs, DESIGN.md refs resolve)
@@ -31,3 +31,8 @@ bench-solver:
 ## calibration); refreshes BENCH_risk.json
 bench-risk:
 	$(PY) -m benchmarks.bench_risk --json BENCH_risk.json
+
+## fleet-engine throughput (FleetSim vs per-seed run_replicas at R=256,
+## decision-memo effectiveness); refreshes BENCH_fleet.json
+bench-fleet:
+	$(PY) -m benchmarks.bench_fleet --json BENCH_fleet.json

@@ -1,18 +1,21 @@
 """Scenario-engine tour: define a scenario declaratively, run it, record the
-JSONL trace, replay the trace bit-exactly, and sweep interruption seeds with
-the shared-market multi-replica runner.
+JSONL trace, replay the trace bit-exactly, and sweep interruption seeds —
+with the per-seed runner by default, or the replica-major fleet engine
+(one shared market path + cross-replica decision memo, DESIGN.md §11)
+when ``--replicas N`` asks for a real Monte-Carlo sweep.
 
     PYTHONPATH=src python examples/run_scenario.py --trace /tmp/storm.jsonl
     PYTHONPATH=src python examples/run_scenario.py --smoke   # small & fast
     PYTHONPATH=src python examples/run_scenario.py --smoke --policy kubepacs_risk:12
+    PYTHONPATH=src python examples/run_scenario.py --smoke --replicas 256
 """
 
 import argparse
 
 import numpy as np
 
-from repro.sim import (ClusterSim, Scenario, Shock, load_trace, make_policy,
-                       run_replicas)
+from repro.sim import (ClusterSim, FleetSim, Scenario, Shock, load_trace,
+                       make_policy, run_replicas)
 
 
 def build_scenario(smoke: bool, policy: str = "kubepacs") -> Scenario:
@@ -40,6 +43,9 @@ def main():
     ap.add_argument("--policy", default="kubepacs",
                     help="policy spec, e.g. kubepacs, kubepacs_risk:12, "
                          "karpenter_like, fixed_alpha:0.5")
+    ap.add_argument("--replicas", type=int, default=None, metavar="N",
+                    help="sweep N interruption seeds with the fleet engine "
+                         "(default: 5 seeds via the per-seed runner)")
     args = ap.parse_args()
 
     make_policy(args.policy)   # validate the spec before building anything
@@ -64,13 +70,29 @@ def main():
           f"byte-identical trace={byte_equal}")
     assert identical and byte_equal
 
-    # 3. multi-seed sweep over one shared market path + compiled market
-    seeds = list(range(5))
-    replicas = run_replicas(scenario, seeds)
-    costs = [r.total_cost for r in replicas]
-    print(f"sweep:  {len(seeds)} interruption seeds -> total cost "
-          f"${np.mean(costs):.2f} ± {np.std(costs):.2f} "
-          f"(min {min(costs):.2f}, max {max(costs):.2f})")
+    # 3. multi-seed sweep over one shared market path + compiled market:
+    #    the fleet engine for real Monte-Carlo sizes, the per-seed runner
+    #    for the default handful of seeds
+    if args.replicas:
+        fleet = FleetSim(scenario, list(range(args.replicas)))
+        results = fleet.run()
+        costs = [r.total_cost for r in results]
+        stats = fleet.stats()
+        lookups = stats.get("memo_hits", 0) + stats.get("memo_misses", 0)
+        print(f"fleet:  {args.replicas} interruption seeds in "
+              f"{fleet.wall_seconds:.2f}s "
+              f"({args.replicas / fleet.wall_seconds:.0f} replicas/s) -> "
+              f"total cost ${np.mean(costs):.2f} ± {np.std(costs):.2f}")
+        print(f"        decision memo: {stats.get('memo_unique_solves', 0)} "
+              f"unique solves for {lookups} decisions "
+              f"(hit rate {stats.get('memo_hits', 0) / max(lookups, 1):.1%})")
+    else:
+        seeds = list(range(5))
+        replicas = run_replicas(scenario, seeds)
+        costs = [r.total_cost for r in replicas]
+        print(f"sweep:  {len(seeds)} interruption seeds -> total cost "
+              f"${np.mean(costs):.2f} ± {np.std(costs):.2f} "
+              f"(min {min(costs):.2f}, max {max(costs):.2f})")
 
 
 if __name__ == "__main__":

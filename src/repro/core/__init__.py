@@ -2,7 +2,8 @@
 
 from .market import (Offering, InterruptEvent, SpotMarketSimulator,
                      generate_catalog, restrict, snapshot_with,
-                     pressure_interrupt_probability)
+                     pressure_interrupt_probability,
+                     pressure_interrupt_probability_batch)
 from .efficiency import (Request, CandidateItem, NodePool, pods_per_instance,
                          e_perf_cost, e_over_pods, e_total, e_total_batch,
                          decision_metrics, pool_metric_arrays,
@@ -14,8 +15,9 @@ from .ilp import (solve_ilp, solve_ilp_batch, solve_ilp_pulp,
 from .gss import (golden_section_search, bracketed_gss, expected_iterations,
                   GssTrace, PHI)
 from .baselines import kubepacs_greedy, spotverse, spotkube, karpenter_like
-from .provisioner import (KubePACSProvisioner, ProvisioningDecision,
-                          UnavailableOfferingsCache, preprocess, merge_pools)
+from .provisioner import (DecisionMemo, KubePACSProvisioner,
+                          ProvisioningDecision, UnavailableOfferingsCache,
+                          preprocess, merge_pools)
 
 __all__ = [
     "Offering", "InterruptEvent", "SpotMarketSimulator", "generate_catalog",
@@ -29,6 +31,7 @@ __all__ = [
     "GssTrace", "PHI", "kubepacs_greedy", "spotverse", "spotkube",
     "karpenter_like", "KubePACSProvisioner", "ProvisioningDecision",
     "UnavailableOfferingsCache", "preprocess", "merge_pools",
-    "snapshot_with", "pressure_interrupt_probability", "decision_metrics",
-    "reweight_items", "reweight_market",
+    "snapshot_with", "pressure_interrupt_probability",
+    "pressure_interrupt_probability_batch", "decision_metrics",
+    "reweight_items", "reweight_market", "DecisionMemo",
 ]

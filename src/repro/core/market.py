@@ -249,6 +249,25 @@ def pressure_interrupt_probability(count: int, t3: float,
     return 1.0 - (1.0 - p) ** hours
 
 
+def pressure_interrupt_probability_batch(counts: np.ndarray, t3: np.ndarray,
+                                         interruption_freq: np.ndarray,
+                                         hours: float) -> np.ndarray:
+    """Vectorized :func:`pressure_interrupt_probability` over any shape.
+
+    Elementwise bitwise-identical to the scalar law (same IEEE-754 ops in
+    the same order), so the batched samplers in ``repro.sim.interrupts``
+    and the fleet engine (``repro.sim.fleet``) draw from probabilities that
+    exactly match the per-node scalar path — the byte-identical-trace
+    contract survives the vectorization (DESIGN.md §11).
+    """
+    counts = np.asarray(counts, dtype=np.float64)
+    pressure = counts / np.maximum(np.asarray(t3, dtype=np.float64), 0.5)
+    p = np.clip(0.01 + 0.10 * np.maximum(0.0, pressure - 0.8)
+                + 0.015 * np.asarray(interruption_freq, dtype=np.float64),
+                0.0, 0.9)
+    return 1.0 - (1.0 - p) ** hours
+
+
 class SpotMarketSimulator:
     """Time-stepped market: OU spot prices, drifting T3, interruptions.
 

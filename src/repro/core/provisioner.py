@@ -57,6 +57,81 @@ class ProvisioningDecision:
     wall_seconds: float
     excluded_offerings: Set[str]
     metrics: Dict[str, float]
+    # diagnostic provenance (e.g. {"memo_hit": 1.0} when the pool came from
+    # the cross-replica DecisionMemo).  compare=False keeps the fleet ≡
+    # standalone decision-equality contract intact: a memoized decision
+    # equals the freshly-solved one it was cached from (DESIGN.md §11)
+    cache: Dict[str, float] = dataclasses.field(default_factory=dict,
+                                                compare=False)
+
+
+class DecisionMemo:
+    """Cross-replica decision memoization (DESIGN.md §11).
+
+    The fleet engine sets :attr:`context` to a token capturing everything
+    decision-relevant that lives *outside* the provisioning call — the
+    shared market-state index and the policy's internal-state digest —
+    before each replica's decision.  The policy/provisioner side then keys
+    the solve on ``(context, request shape + pods, excluded offerings)``:
+    replicas whose keys coincide share one GSS×ILP solve, turning
+    O(replicas · solves) into O(unique · solves).  ``context=None`` (the
+    default, and the standalone-``ClusterSim`` state) disables lookups, so
+    attaching a memo can never change single-run behavior.
+
+    Correctness rests on the policy determinism contract (DESIGN.md §9):
+    a decision is a pure function of (market snapshot, request, excluded
+    set, policy state), all of which the key covers.  Stored decisions are
+    returned by reference — engine code never mutates a decision's pool,
+    trace, or metrics after launch — with only the diagnostic
+    ``wall_seconds``/``cache`` fields rewritten per hit.
+    """
+
+    def __init__(self) -> None:
+        self._store: Dict = {}
+        self.context: Optional[Tuple] = None
+        self.hits = 0
+        self.misses = 0
+
+    def key(self, request: Request, excluded: Set[str]) -> Optional[Tuple]:
+        if self.context is None:
+            return None
+        return (self.context, request.pods, request.cpu_per_pod,
+                request.mem_per_pod, request.workload, frozenset(excluded))
+
+    def lookup(self, key) -> Optional[ProvisioningDecision]:
+        hit = self._store.get(key)
+        if hit is None:
+            self.misses += 1
+        else:
+            self.hits += 1
+        return hit
+
+    def fetch(self, key, wall_seconds: float,
+              ) -> Optional[ProvisioningDecision]:
+        """Lookup plus the per-hit diagnostic stamping every memoized
+        provision path shares: a hit comes back with fresh ``wall_seconds``
+        and memo provenance in ``cache``.  Only ``cache`` is
+        ``compare=False``; ``wall_seconds`` participates in equality, so
+        full ``==`` against a standalone decision holds exactly when the
+        wall clock is injected (tests use ``clock=lambda: 0.0``) — the
+        record-level and field-level equality contracts are
+        clock-independent because records never include wall time."""
+        hit = self.lookup(key)
+        if hit is None:
+            return None
+        return dataclasses.replace(hit, wall_seconds=wall_seconds,
+                                   cache={"memo_hit": 1.0})
+
+    def store(self, key, decision: ProvisioningDecision) -> None:
+        self._store[key] = decision
+
+    @property
+    def unique_solves(self) -> int:
+        return len(self._store)
+
+    def stats(self) -> Dict[str, int]:
+        return {"memo_hits": self.hits, "memo_misses": self.misses,
+                "memo_unique_solves": self.unique_solves}
 
 
 def exclusion_mask(items: Sequence[CandidateItem],
@@ -113,6 +188,9 @@ class KubePACSProvisioner:
         self._market_shape: Optional[Tuple] = None
         self._market_items: List[CandidateItem] = []
         self._market: Optional[CompiledMarket] = None
+        # cross-replica decision memo (attached by the fleet engine; None =
+        # standalone operation, memo lookups disabled)
+        self.decision_memo: Optional[DecisionMemo] = None
 
     def _compiled(self, request: Request, catalog: Sequence[Offering],
                   precompiled: Optional[Tuple[List[CandidateItem],
@@ -142,6 +220,12 @@ class KubePACSProvisioner:
                   ) -> ProvisioningDecision:
         t0 = self.timer()
         excluded = self.cache.excluded(self.clock)
+        memo = self.decision_memo
+        mkey = memo.key(request, excluded) if memo is not None else None
+        if mkey is not None:
+            hit = memo.fetch(mkey, self.timer() - t0)
+            if hit is not None:
+                return hit
         items, market = self._compiled(request, catalog, precompiled)
         exclude = exclusion_mask(items, excluded)
         search = bracketed_gss if self.guarded_gss else golden_section_search
@@ -155,10 +239,13 @@ class KubePACSProvisioner:
             pool.request = request
             alpha = pool.alpha
         metrics = decision_metrics(pool, request.pods)
-        return ProvisioningDecision(pool=pool, trace=trace, alpha=alpha,
-                                    wall_seconds=wall,
-                                    excluded_offerings=excluded,
-                                    metrics=metrics)
+        decision = ProvisioningDecision(pool=pool, trace=trace, alpha=alpha,
+                                        wall_seconds=wall,
+                                        excluded_offerings=excluded,
+                                        metrics=metrics)
+        if mkey is not None:
+            memo.store(mkey, decision)
+        return decision
 
     # -- §4.1 reactive loop ---------------------------------------------------
     def enqueue(self, events: Iterable[InterruptEvent]) -> None:

@@ -39,6 +39,7 @@ import numpy as np
 
 from ..core.market import Offering
 from ..sim.engine import ClusterSim, SimResult
+from ..sim.fleet import FleetSim, run_fleet
 from ..sim.scenario import Scenario, Shock
 from .estimators import RiskEstimators, RiskParams
 from .survival import interrupt_probability
@@ -180,6 +181,44 @@ def calibration_report(records: Sequence[Dict], *,
     return probe.report()
 
 
+def fleet_calibration(scenario: Scenario, seeds: Sequence[int], *,
+                      catalog: Optional[Sequence[Offering]] = None,
+                      params: Optional[RiskParams] = None) -> Dict:
+    """Calibration over a whole interruption-seed fleet (DESIGN.md §11).
+
+    One predict-then-update :class:`CalibrationObserver` rides each fleet
+    replica — fed the identical event stream a standalone run would feed
+    it — so the Brier score and forecast ratio are estimated over
+    ``len(seeds)`` independent interrupt realizations of one market path
+    instead of a single draw.  Returns the pooled score (every
+    (tick, offering, seed) Brier term weighted equally), the summed
+    predicted/realized node counts, and the per-seed reports.
+    """
+    probes: List[CalibrationObserver] = []
+
+    def factory(cat):
+        probe = CalibrationObserver(cat, params)
+        probes.append(probe)
+        return [probe]
+
+    FleetSim(scenario, seeds, catalog=catalog,
+             observer_factory=factory).run()
+    reports = [p.report() for p in probes]
+    terms = [t for p in probes for t in p.brier_terms]
+    predicted = float(sum(p.predicted_nodes for p in probes))
+    realized = int(sum(p.realized_nodes for p in probes))
+    return {
+        "seeds": [int(s) for s in seeds],
+        "allocations_scored": len(terms),
+        "brier": float(np.mean(terms)) if terms else None,
+        "predicted_interrupted_nodes": round(predicted, 3),
+        "realized_interrupted_nodes": realized,
+        "forecast_ratio": (round(predicted / realized, 3)
+                           if realized else None),
+        "per_seed": reports,
+    }
+
+
 # ---------------------------------------------------------------------------
 # Policy comparison on perf-per-dollar net of interruption losses
 # ---------------------------------------------------------------------------
@@ -227,15 +266,22 @@ def compare_policies(scenario: Scenario,
     differences are pure policy differences plus the interrupt draws their
     distinct pools induce.  Returns per-policy per-seed metrics and
     seed-mean summaries keyed by policy spec.
+
+    Runs ride the fleet engine (one :class:`FleetSim` per policy over all
+    seeds — DESIGN.md §11), which produces per-seed results identical to
+    standalone ``ClusterSim`` runs; ``apply_fulfillment`` scenarios, which
+    the fleet cannot script, fall back to the per-seed path.
     """
     c = recovery_overhead_hours
     runs: Dict[str, List[Dict]] = {}
     for spec in policies:
-        runs[spec] = []
-        for seed in seeds:
-            sc = dataclasses.replace(scenario, policy=spec,
-                                     interrupt_seed=int(seed))
-            runs[spec].append(_run_metrics(ClusterSim(sc).run(), c))
+        sc = dataclasses.replace(scenario, policy=spec)
+        if scenario.apply_fulfillment:
+            results = [ClusterSim(dataclasses.replace(
+                sc, interrupt_seed=int(seed))).run() for seed in seeds]
+        else:
+            results = run_fleet(sc, seeds)
+        runs[spec] = [_run_metrics(r, c) for r in results]
     summary = {}
     for spec, rows in runs.items():
         summary[spec] = {

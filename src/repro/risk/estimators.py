@@ -30,6 +30,7 @@ round-trip exactly (DESIGN.md §9) and numpy arithmetic is deterministic.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import math
 from typing import Dict, List, Optional, Sequence
 
@@ -172,6 +173,20 @@ class RiskEstimators:
         """Catalog indices for a list of offering_ids (e.g. candidate items)."""
         return np.array([self.index[oid] for oid in offering_ids],
                         dtype=np.int64)
+
+    def digest(self) -> str:
+        """Deterministic fingerprint of the full estimator state, used as
+        the risk policy's contribution to the fleet decision-memo key
+        (DESIGN.md §11): replicas with bit-identical estimator state (and
+        identical market snapshot / request / excluded set) provably share
+        one risk-adjusted solve.  Hashes the raw float64 buffers, so any
+        single-bit state divergence changes the digest."""
+        h = hashlib.blake2b(digest_size=16)
+        for arr in (self._prev_spot, self._drift, self._exposure,
+                    self._events, self._requested, self._granted):
+            h.update(arr.tobytes())
+        h.update(repr(self._last_market_time).encode())
+        return h.hexdigest()
 
     # -- (de)serialization — deterministic state snapshots ------------------
     def state_dict(self) -> Dict:

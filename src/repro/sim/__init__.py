@@ -16,6 +16,7 @@ from .trace import TraceRecorder, load_trace, loads_trace
 from .engine import (ClusterSim, LiveMarketSource, ReplaySource,
                      ScriptedMarketSource, SimResult, SimRound, run_replicas,
                      script_market_states)
+from .fleet import FleetSim, run_fleet
 
 __all__ = [
     "InterruptNotice", "TRACE_VERSION", "InterruptModel",
@@ -26,5 +27,5 @@ __all__ = [
     "FixedAlphaPolicy", "make_policy", "Scenario", "Shock", "TraceRecorder",
     "load_trace", "loads_trace", "ClusterSim", "LiveMarketSource",
     "ReplaySource", "ScriptedMarketSource", "SimResult", "SimRound",
-    "run_replicas", "script_market_states",
+    "run_replicas", "script_market_states", "FleetSim", "run_fleet",
 ]

@@ -216,6 +216,14 @@ class SimResult:
     pool: NodePool
     recorder: TraceRecorder
     total_perf_hours: float = 0.0     # ∫ pool perf_rate dt (delivered work)
+    #: cache-effectiveness counters (DESIGN.md §11): ``compile_hits`` /
+    #: ``compile_misses`` of the shared CompiledMarket cache, plus
+    #: ``memo_hits`` / ``memo_misses`` / ``memo_unique_solves`` of the
+    #: cross-replica decision memo under the fleet engine (fleet results
+    #: carry the fleet-wide aggregate).  Deliberately NOT part of decision
+    #: metrics or the trace: cache provenance must never break the
+    #: fleet ≡ standalone equality contract.
+    cache_stats: Dict[str, int] = dataclasses.field(default_factory=dict)
 
     @property
     def lost_perf_total(self) -> float:
@@ -229,6 +237,64 @@ class SimResult:
 
     def decision_records(self) -> List[Dict]:
         return [r for r in self.records if r["type"] == "decision"]
+
+
+def useful_scale(pool: NodePool, req_pods: int) -> float:
+    """Fraction of a pool's perf rate doing *useful* work: pods beyond the
+    requested demand contribute nothing (the E_OverPods principle, Eq. 2),
+    an underfilled pool is fully utilized.  One definition shared by
+    ClusterSim and FleetSim — the value enters the delivered-work accrual,
+    so the float sequence must be identical in both engines."""
+    alloc = pool.total_pods
+    return min(1.0, req_pods / alloc) if alloc > 0 else 0.0
+
+
+def accrual_increments(pool: NodePool, req_pods: int,
+                       dt: float) -> Tuple[float, float]:
+    """(cost, useful perf-hours) one interval adds to the running totals —
+    the single definition of the accrual float sequence (DESIGN.md §11:
+    fleet totals must match standalone totals bit-for-bit, so both engines
+    add exactly these products in exactly this order)."""
+    return (pool.hourly_cost * dt,
+            pool.perf_rate * useful_scale(pool, req_pods) * dt)
+
+
+def shock_affected(catalog: Sequence[Offering], shock: Shock) -> int:
+    """Offerings a shock's selector matches — the trace-record count."""
+    return sum(shock.selector in o.offering_id for o in catalog)
+
+
+def _split_pending(pending: Sequence[InterruptNotice],
+                   sampled: Sequence[InterruptNotice], now: float,
+                   ) -> Tuple[List[InterruptNotice], List[InterruptNotice]]:
+    """Advisory-lead split shared by ClusterSim and FleetSim: matured
+    pending notices plus zero-lead fresh ones are effective *now*; the
+    rest wait out their lead time.  Determinism-critical (it decides which
+    tick reclaims capacity), hence one definition."""
+    effective: List[InterruptNotice] = []
+    still_pending: List[InterruptNotice] = []
+    for n in pending:
+        (effective if n.effective_time <= now + _EPS
+         else still_pending).append(n)
+    for n in sampled:
+        (still_pending if n.lead_hours > 0 else effective).append(n)
+    return effective, still_pending
+
+
+def shared_precompile(cache: Dict, stats: Dict[str, int], state_idx: int,
+                      snapshot: Sequence[Offering], request: Request):
+    """The (market state, request shape)-keyed preprocess+compile cache
+    shared by ClusterSim replicas and the fleet engine, with hit/miss
+    counters (``SimResult.cache_stats``)."""
+    key = (state_idx, request.cpu_per_pod, request.mem_per_pod,
+           request.workload)
+    if key not in cache:
+        stats["compile_misses"] += 1
+        items = preprocess(snapshot, request)
+        cache[key] = (items, compile_market(items))
+    else:
+        stats["compile_hits"] += 1
+    return cache[key]
 
 
 def _apply_losses(pool: NodePool, notices: Sequence[InterruptNotice],
@@ -345,6 +411,8 @@ class ClusterSim:
                                           catalog_digest(self.catalog)))
         self.keep_snapshots = keep_snapshots
         self.compile_cache = compile_cache
+        self.cache_stats: Dict[str, int] = {"compile_hits": 0,
+                                            "compile_misses": 0}
 
         self.request = scenario.request()
         self.pool = NodePool(items=[], counts=[])
@@ -423,12 +491,9 @@ class ClusterSim:
         self.recorder.write(rec)
 
     def _useful_scale(self) -> float:
-        """Fraction of the pool's perf rate doing *useful* work: pods beyond
-        the requested demand contribute nothing (the E_OverPods principle,
-        Eq. 2 — per hour, useful perf / cost is then exactly E_Total), while
-        an underfilled pool is fully utilized."""
-        alloc = self.pool.total_pods
-        return min(1.0, self.request.pods / alloc) if alloc > 0 else 0.0
+        """See :func:`useful_scale` (per hour, useful perf / cost is then
+        exactly E_Total)."""
+        return useful_scale(self.pool, self.request.pods)
 
     def _accrue_cost(self, now: float) -> None:
         """Charge the current pool for the interval since the last accrual —
@@ -438,8 +503,9 @@ class ClusterSim:
         schedule, so cost and work integrals cover identical pool
         histories."""
         dt = now - self._cost_accrued_to
-        self.total_cost += self.pool.hourly_cost * dt
-        self.total_perf_hours += self.pool.perf_rate * self._useful_scale() * dt
+        cost, perf = accrual_increments(self.pool, self.request.pods, dt)
+        self.total_cost += cost
+        self.total_perf_hours += perf
         self._cost_accrued_to = now
 
     def _refresh(self) -> None:
@@ -456,12 +522,8 @@ class ClusterSim:
         shape) reuse one preprocessed candidate set + CompiledMarket."""
         if self.compile_cache is None:
             return None
-        key = (self._state_idx, request.cpu_per_pod, request.mem_per_pod,
-               request.workload)
-        if key not in self.compile_cache:
-            items = preprocess(self._snapshot, request)
-            self.compile_cache[key] = (items, compile_market(items))
-        return self.compile_cache[key]
+        return shared_precompile(self.compile_cache, self.cache_stats,
+                                 self._state_idx, self._snapshot, request)
 
     def _launch(self, decision: ProvisioningDecision, reason: str,
                 base_pool: Optional[NodePool] = None) -> None:
@@ -495,14 +557,7 @@ class ClusterSim:
                        now: float) -> List[InterruptNotice]:
         """Advisory notices wait out their lead time in the pending queue;
         returns the notices whose capacity is reclaimed *now*."""
-        effective: List[InterruptNotice] = []
-        still_pending: List[InterruptNotice] = []
-        for n in self.pending:
-            (effective if n.effective_time <= now + _EPS
-             else still_pending).append(n)
-        for n in sampled:
-            (still_pending if n.lead_hours > 0 else effective).append(n)
-        self.pending = still_pending
+        effective, self.pending = _split_pending(self.pending, sampled, now)
         return effective
 
     def _tick_events(self, t: float, dt: float, pool: Dict[str, int],
@@ -567,9 +622,9 @@ class ClusterSim:
 
     def _on_shock(self, shock: Shock) -> None:
         self.source.apply_shock(shock)
-        affected = sum(shock.selector in o.offering_id for o in self.catalog)
         self._record(shock_record(self.time, shock.kind, shock.selector,
-                                  shock.factor, affected))
+                                  shock.factor,
+                                  shock_affected(self.catalog, shock)))
         self._refresh()
 
     def _on_demand(self, pods: int) -> None:
@@ -629,7 +684,8 @@ class ClusterSim:
                          rounds=self.rounds, total_cost=self.total_cost,
                          interrupted_nodes=self.interrupted_nodes,
                          pool=self.pool, recorder=self.recorder,
-                         total_perf_hours=self.total_perf_hours)
+                         total_perf_hours=self.total_perf_hours,
+                         cache_stats=dict(self.cache_stats))
 
     # -- incremental event-stream API (elastic trainer) --------------------
     def current_snapshot(self) -> List[Offering]:
@@ -671,8 +727,13 @@ class ClusterSim:
 def run_replicas(scenario: Scenario, interrupt_seeds: Sequence[int], *,
                  catalog: Optional[Sequence[Offering]] = None,
                  keep_snapshots: bool = False) -> List[SimResult]:
-    """Vectorized multi-seed runner: N scenario replicas over one shared
+    """Per-seed multi-replica runner: N scenario replicas over one shared
     market path and one shared ``CompiledMarket`` per (state, request shape).
+
+    This is the *reference* sweep implementation: one full ``ClusterSim``
+    per seed.  For Monte-Carlo sizes (tens to thousands of seeds) use
+    ``repro.sim.fleet.FleetSim`` / ``run_fleet`` (DESIGN.md §11), which is
+    proven per-seed identical to this path and ~20-50× faster per replica.
 
     The market evolution is computed once (:func:`script_market_states`);
     each replica varies only the interruption RNG stream.  Because every

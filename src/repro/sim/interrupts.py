@@ -26,7 +26,8 @@ from typing import Dict, List, Sequence
 
 import numpy as np
 
-from ..core.market import Offering, pressure_interrupt_probability
+from ..core.market import (Offering, pressure_interrupt_probability,
+                           pressure_interrupt_probability_batch)
 from .events import InterruptNotice
 
 
@@ -60,6 +61,16 @@ class PressureInterruptModel(InterruptModel):
     Identical law to ``SpotMarketSimulator.interrupts_for_pool`` (shared
     via :func:`pressure_interrupt_probability`) but on a dedicated RNG
     stream keyed by the scenario's ``interrupt_seed``.
+
+    The per-tick draw is one vectorized binomial over the pool's live
+    entries (DESIGN.md §11): numpy's ``Generator.binomial`` fills array
+    outputs by iterating the scalar sampler in C order against the same
+    bit stream, so the batched call consumes the RNG byte-identically to
+    the seed implementation's per-entry Python loop — same seed, same
+    trace, one RNG call per tick.  :meth:`draw_lost_counts` exposes the
+    batched draw to the fleet engine, which gathers the probabilities
+    from a fleet-wide hazard matrix instead of recomputing them per
+    replica.
     """
 
     spec = "pressure"
@@ -70,19 +81,31 @@ class PressureInterruptModel(InterruptModel):
     def reset(self, catalog, seed):
         self._rng = np.random.default_rng(seed)
 
+    def draw_lost_counts(self, counts: np.ndarray,
+                         probs: np.ndarray) -> np.ndarray:
+        """One batched binomial draw on this model's stream — ``probs``
+        must come from the shared pressure law (scalar or batch; the two
+        are bitwise-identical) evaluated in pool-entry order."""
+        if len(counts) == 0:
+            return np.zeros(0, dtype=np.int64)
+        return self._rng.binomial(counts, probs)
+
     def sample(self, offerings, pool, hours, now):
-        notices: List[InterruptNotice] = []
-        for offering_id, count in pool.items():
-            o = offerings.get(offering_id)
-            if o is None or count <= 0:
-                continue
-            p = pressure_interrupt_probability(count, float(o.t3),
-                                               o.interruption_freq, hours)
-            lost = int(self._rng.binomial(count, p))
-            if lost > 0:
-                notices.append(InterruptNotice(
-                    time=now, offering_id=offering_id, count=lost))
-        return notices
+        entries = [(offering_id, count, offerings.get(offering_id))
+                   for offering_id, count in pool.items()]
+        entries = [(oid, c, o) for oid, c, o in entries
+                   if o is not None and c > 0]
+        if not entries:
+            return []
+        probs = pressure_interrupt_probability_batch(
+            np.array([c for _, c, _ in entries], dtype=np.int64),
+            np.array([float(o.t3) for _, _, o in entries]),
+            np.array([o.interruption_freq for _, _, o in entries]),
+            hours)
+        lost = self.draw_lost_counts(
+            np.array([c for _, c, _ in entries], dtype=np.int64), probs)
+        return [InterruptNotice(time=now, offering_id=oid, count=int(k))
+                for (oid, _, _), k in zip(entries, lost) if k > 0]
 
 
 class PriceCrossingInterruptModel(InterruptModel):
@@ -99,18 +122,23 @@ class PriceCrossingInterruptModel(InterruptModel):
         self._bids = {o.offering_id: self.bid_factor * o.spot_price
                       for o in catalog}
 
-    def sample(self, offerings, pool, hours, now):
-        notices: List[InterruptNotice] = []
-        for offering_id, count in pool.items():
-            o = offerings.get(offering_id)
-            if o is None or count <= 0:
-                continue
-            bid = self._bids.get(offering_id)
+    def crossed_ids(self, offerings: Dict[str, Offering]) -> set:
+        """The offerings whose live spot strictly exceeds their bid — the
+        single definition of the crossing rule, shared by :meth:`sample`
+        and the fleet engine's one-mask-per-tick batched path."""
+        crossed = set()
+        for oid, o in offerings.items():
+            bid = self._bids.get(oid)
             if bid is not None and o.spot_price > bid:
-                notices.append(InterruptNotice(
-                    time=now, offering_id=offering_id, count=count,
-                    reason="price-crossing"))
-        return notices
+                crossed.add(oid)
+        return crossed
+
+    def sample(self, offerings, pool, hours, now):
+        crossed = self.crossed_ids(offerings)
+        return [InterruptNotice(time=now, offering_id=offering_id,
+                                count=count, reason="price-crossing")
+                for offering_id, count in pool.items()
+                if count > 0 and offering_id in crossed]
 
 
 class RebalanceRecommendationModel(InterruptModel):
@@ -126,12 +154,19 @@ class RebalanceRecommendationModel(InterruptModel):
     def reset(self, catalog, seed):
         self.inner.reset(catalog, seed)
 
-    def sample(self, offerings, pool, hours, now):
+    def wrap(self, notices: Sequence[InterruptNotice],
+             ) -> List[InterruptNotice]:
+        """Stamp the advisory lead onto inner-model notices — the single
+        definition of the wrapper semantics, shared by :meth:`sample` and
+        the fleet engine (which draws the inner notices batched)."""
         return [InterruptNotice(time=n.time, offering_id=n.offering_id,
                                 count=n.count,
                                 reason=f"rebalance-recommendation:{n.reason}",
                                 lead_hours=self.lead_hours)
-                for n in self.inner.sample(offerings, pool, hours, now)]
+                for n in notices]
+
+    def sample(self, offerings, pool, hours, now):
+        return self.wrap(self.inner.sample(offerings, pool, hours, now))
 
 
 def make_interrupt_model(spec: str) -> InterruptModel:

@@ -51,7 +51,8 @@ from ..core.gss import bracketed_gss
 from ..core.ilp import CompiledMarket, compile_market, solve_ilp
 from ..core.market import Offering
 from ..core.baselines import karpenter_like
-from ..core.provisioner import (KubePACSProvisioner, ProvisioningDecision,
+from ..core.provisioner import (DecisionMemo, KubePACSProvisioner,
+                                ProvisioningDecision,
                                 UnavailableOfferingsCache, exclusion_mask,
                                 preprocess)
 from ..risk.estimators import RiskEstimators, RiskParams
@@ -66,6 +67,7 @@ DEFAULT_RISK_HORIZON = 12.0
 
 class Policy:
     name = "abstract"
+    decision_memo: Optional[DecisionMemo] = None
 
     def provision(self, request: Request, snapshot: Sequence[Offering],
                   now: float, precompiled: Optional[Precompiled] = None,
@@ -78,6 +80,22 @@ class Policy:
                       precompiled: Optional[Precompiled] = None,
                       ) -> Optional[ProvisioningDecision]:
         raise NotImplementedError
+
+    # -- cross-replica memoization hooks (DESIGN.md §11) --------------------
+    def set_decision_memo(self, memo: Optional[DecisionMemo]) -> None:
+        """Attach the fleet engine's shared :class:`DecisionMemo` (None
+        detaches).  Policies that route their solve through the memo must
+        key it on *everything* decision-relevant; stateful policies
+        additionally surface their internal state via :meth:`memo_digest`."""
+        self.decision_memo = memo
+
+    def memo_digest(self) -> Optional[str]:
+        """Digest of internal decision-relevant state beyond the (snapshot,
+        request, excluded-set) the memo key already covers.  ``None`` means
+        the policy is stateless given those inputs (the KubePACS/baseline
+        policies — their only state is the TTL exclusion cache, which the
+        memo key captures as the resolved excluded frozenset)."""
+        return None
 
     # -- engine observer hooks (no-ops for stateless policies) --------------
     def bind(self, catalog: Sequence[Offering]) -> None:
@@ -112,6 +130,10 @@ class KubePACSPolicy(Policy):
         if not guarded:
             self.name = "kubepacs_unguarded"
 
+    def set_decision_memo(self, memo):
+        self.decision_memo = memo
+        self.provisioner.decision_memo = memo
+
     def provision(self, request, snapshot, now, precompiled=None):
         self.provisioner.clock = now
         return self.provisioner.provision(request, snapshot, precompiled)
@@ -142,17 +164,26 @@ class _BaselinePolicy(Policy):
     def provision(self, request, snapshot, now, precompiled=None):
         t0 = self.clock()
         excluded = self.cache.excluded(now)
+        memo = self.decision_memo
+        mkey = memo.key(request, excluded) if memo is not None else None
+        if mkey is not None:
+            hit = memo.fetch(mkey, self.clock() - t0)
+            if hit is not None:
+                return hit
         items = precompiled[0] if precompiled is not None \
             else preprocess(snapshot, request)
         exclude = exclusion_mask(items, excluded)
         pool, alpha = self._solve(items, request.pods, exclude, precompiled)
         pool.request = request
         pool.alpha = alpha
-        return ProvisioningDecision(
+        decision = ProvisioningDecision(
             pool=pool, trace=None, alpha=alpha,
             wall_seconds=self.clock() - t0,
             excluded_offerings=excluded,
             metrics=decision_metrics(pool, request.pods))
+        if mkey is not None:
+            memo.store(mkey, decision)
+        return decision
 
     def on_interrupts(self, notices, request, snapshot, surviving_pods, now,
                       precompiled=None):
@@ -276,10 +307,25 @@ class KubePACSRiskPolicy(_BaselinePolicy):
             self._market = compile_market(items)
         return self._market_items, self._market
 
+    def memo_digest(self):
+        # the estimator arrays are the only decision-relevant state beyond
+        # the memo key's (snapshot, request, excluded) — two replicas with
+        # identical observation histories share identical digests, so their
+        # risk-adjusted solves coincide (DESIGN.md §11)
+        if self.estimators is None:
+            return None
+        return self.estimators.digest()
+
     def provision(self, request, snapshot, now, precompiled=None):
         t0 = self.clock()
         est = self._ensure_estimators(snapshot)
         excluded = self.cache.excluded(now)
+        memo = self.decision_memo
+        mkey = memo.key(request, excluded) if memo is not None else None
+        if mkey is not None:
+            hit = memo.fetch(mkey, self.clock() - t0)
+            if hit is not None:
+                return hit
         items, market = self._compiled(request, snapshot, precompiled)
         exclude = exclusion_mask(items, excluded)
         adj = risk_adjustment(items, est, self.horizon)
@@ -305,10 +351,13 @@ class KubePACSRiskPolicy(_BaselinePolicy):
             risk_score = e_risk(pool, request.pods, items_adj)
         metrics = decision_metrics(pool, request.pods)
         metrics["e_risk"] = risk_score
-        return ProvisioningDecision(pool=pool, trace=trace, alpha=alpha,
-                                    wall_seconds=self.clock() - t0,
-                                    excluded_offerings=excluded,
-                                    metrics=metrics)
+        decision = ProvisioningDecision(pool=pool, trace=trace, alpha=alpha,
+                                        wall_seconds=self.clock() - t0,
+                                        excluded_offerings=excluded,
+                                        metrics=metrics)
+        if mkey is not None:
+            memo.store(mkey, decision)
+        return decision
 
 
 def make_policy(spec: str, tolerance: float = 0.01,

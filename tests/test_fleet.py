@@ -1,0 +1,272 @@
+"""Fleet engine: per-seed fleet ≡ run_replicas ≡ standalone equality, the
+cross-replica decision memo, cache counters, and the vectorized pressure
+sampler's RNG-stream contract (DESIGN.md §11)."""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import (DecisionMemo, generate_catalog,
+                        pressure_interrupt_probability,
+                        pressure_interrupt_probability_batch)
+from repro.risk import backtest
+from repro.sim import (ClusterSim, FleetSim, PressureInterruptModel,
+                       run_fleet, run_replicas)
+from repro.sim.events import InterruptNotice
+
+SEEDS = [0, 1, 2]
+
+#: the three standard stress scenarios, shrunk for unit-test runtimes
+#: (the storm keeps 36 h so its 2 h-lead rebalance notices actually mature
+#: into reclaims and the interrupt → re-provision path is exercised)
+_SMALL = dict(duration_hours=24.0, max_offerings=100)
+SCENARIOS = {
+    "storm": lambda **kw: backtest.interrupt_storm_scenario(
+        **{**_SMALL, "duration_hours": 36.0, **kw}),
+    "price_shock": lambda **kw: backtest.price_shock_scenario(
+        **{**_SMALL, **kw}),
+    "pressure_crunch": lambda **kw: backtest.pressure_crunch_scenario(
+        **{**_SMALL, **kw}),
+}
+
+
+def _standalone(scenario, seed, clock=None):
+    sc = dataclasses.replace(scenario, interrupt_seed=int(seed))
+    kwargs = {} if clock is None else {"clock": clock}
+    return ClusterSim(sc, **kwargs).run()
+
+
+def _assert_result_equal(a, b):
+    """Field-by-field SimResult equality — floats bit-for-bit."""
+    assert a.total_cost == b.total_cost
+    assert a.total_perf_hours == b.total_perf_hours
+    assert a.lost_perf_total == b.lost_perf_total
+    assert a.interrupted_nodes == b.interrupted_nodes
+    assert a.pool.as_dict() == b.pool.as_dict()
+    assert len(a.rounds) == len(b.rounds)
+    for ra, rb in zip(a.rounds, b.rounds):
+        assert (ra.time, ra.notices, ra.effective, ra.lost_nodes,
+                ra.lost_pods, ra.shortfall, ra.lost_perf) == \
+               (rb.time, rb.notices, rb.effective, rb.lost_nodes,
+                rb.lost_pods, rb.shortfall, rb.lost_perf)
+        assert ra.pool.as_dict() == rb.pool.as_dict()
+    assert [(r, d.pool.as_dict(), d.alpha, d.metrics)
+            for r, d in a.decisions] == \
+           [(r, d.pool.as_dict(), d.alpha, d.metrics)
+            for r, d in b.decisions]
+
+
+# ------------------------------------------------------ equality proof ----
+
+@pytest.mark.parametrize("scenario_name", sorted(SCENARIOS))
+@pytest.mark.parametrize("policy", ["kubepacs", "kubepacs_risk:12"])
+def test_fleet_matches_standalone_and_run_replicas(scenario_name, policy):
+    """The acceptance contract: every fleet replica is identical — rounds,
+    decisions, float totals, and the JSONL trace byte-for-byte — to a
+    standalone ClusterSim run and to run_replicas at the same seed."""
+    sc = SCENARIOS[scenario_name](policy=policy)
+    fleet = run_fleet(sc, SEEDS, record_traces=True)
+    per_seed = run_replicas(sc, SEEDS)
+    assert len(fleet) == len(per_seed) == len(SEEDS)
+    for seed, f, p in zip(SEEDS, fleet, per_seed):
+        single = _standalone(sc, seed)
+        assert f.scenario.interrupt_seed == seed
+        _assert_result_equal(f, single)
+        _assert_result_equal(f, p)
+        assert f.recorder.dumps() == single.recorder.dumps()
+        assert f.decision_records() == p.decision_records()
+
+
+@pytest.mark.parametrize("policy", ["karpenter_like", "fixed_alpha:0.5"])
+def test_fleet_matches_standalone_baseline_policies(policy):
+    sc = SCENARIOS["storm"](policy=policy)
+    fleet = run_fleet(sc, SEEDS, record_traces=True)
+    for seed, f in zip(SEEDS, fleet):
+        single = _standalone(sc, seed)
+        _assert_result_equal(f, single)
+        assert f.recorder.dumps() == single.recorder.dumps()
+
+
+def test_fleet_full_decision_equality_with_injected_clock():
+    """With an injected wall clock even the diagnostic wall_seconds agrees,
+    so whole ProvisioningDecision dataclasses compare equal — including
+    across memo hits (decision provenance is compare=False)."""
+    fake = lambda: 0.0                                     # noqa: E731
+    sc = SCENARIOS["pressure_crunch"](policy="kubepacs")
+    fleet = run_fleet(sc, SEEDS, clock=fake)
+    for seed, f in zip(SEEDS, fleet):
+        single = _standalone(sc, seed, clock=fake)
+        assert [r for r, _ in f.decisions] == [r for r, _ in single.decisions]
+        for (_, da), (_, db) in zip(f.decisions, single.decisions):
+            assert da == db
+
+
+def test_fleet_memo_disabled_equality():
+    """Memoization is a pure optimization: memo on/off produce identical
+    traces, and only the memoized fleet reports memo counters."""
+    sc = SCENARIOS["pressure_crunch"]()
+    on = FleetSim(sc, SEEDS, record_traces=True)
+    off = FleetSim(sc, SEEDS, record_traces=True, memoize=False)
+    res_on, res_off = on.run(), off.run()
+    for a, b in zip(res_on, res_off):
+        assert a.recorder.dumps() == b.recorder.dumps()
+    assert "memo_hits" in on.stats() and on.stats()["memo_hits"] > 0
+    assert "memo_hits" not in off.stats()
+
+
+def test_fleet_empty_seed_list_matches_run_replicas():
+    sc = SCENARIOS["storm"]()
+    assert run_fleet(sc, []) == run_replicas(sc, [])
+
+
+def test_fleet_rejects_fulfillment_scenarios():
+    sc = SCENARIOS["storm"](apply_fulfillment=True)
+    with pytest.raises(ValueError, match="apply_fulfillment"):
+        FleetSim(sc, SEEDS)
+
+
+def test_fleet_run_is_single_shot():
+    sim = FleetSim(SCENARIOS["storm"](duration_hours=6.0), [0])
+    sim.run()
+    with pytest.raises(RuntimeError, match="once"):
+        sim.run()
+
+
+# ------------------------------------------------------- cache counters ----
+
+def test_fleet_cache_counters_assert_effectiveness():
+    """Cache effectiveness is asserted from counters, not timing.
+
+    On the deterministic (bid-crossing) storm all replicas coincide, so
+    every replica beyond the first hits the memo on every decision; on the
+    stochastic crunch replicas genuinely diverge, yet coinciding
+    (state, demand, exclusion) keys still collapse."""
+    sim = FleetSim(SCENARIOS["storm"](), list(range(8)))
+    sim.run()
+    stats = sim.stats()
+    assert stats["replicas"] == 8
+    # identical replicas -> unique solves per decision event, not replica
+    assert stats["memo_unique_solves"] == stats["memo_misses"]
+    assert stats["memo_hits"] == 7 * stats["memo_misses"]
+
+    sim = FleetSim(SCENARIOS["pressure_crunch"](), list(range(8)))
+    results = sim.run()
+    stats = sim.stats()
+    assert stats["memo_hits"] > 0
+    assert stats["memo_unique_solves"] == stats["memo_misses"]
+    # interrupt re-provisioning reuses the per-state compiled market
+    assert stats["compile_misses"] >= 1
+    assert stats["compile_hits"] > stats["compile_misses"]
+    # every result carries the fleet-wide aggregate
+    for r in results:
+        assert r.cache_stats == stats
+    # memo provenance is stamped on hit decisions (and never breaks
+    # decision equality — ProvisioningDecision.cache is compare=False)
+    flags = [d.cache.get("memo_hit") for r in results
+             for _, d in r.decisions]
+    assert flags.count(1.0) == stats["memo_hits"]
+
+
+def test_run_replicas_compile_counters():
+    """The PR 2 shared-compile path now reports its effectiveness too."""
+    sc = SCENARIOS["storm"]()
+    results = run_replicas(sc, SEEDS)
+    assert results[0].cache_stats["compile_misses"] >= 1
+    # later replicas reuse every compiled (state, shape) of the first
+    assert results[1].cache_stats["compile_misses"] == 0
+    assert results[1].cache_stats["compile_hits"] > 0
+
+
+def test_decision_memo_disabled_without_context():
+    """context=None (the standalone state) disables lookups entirely, so
+    attaching a memo can never change single-run behavior."""
+    memo = DecisionMemo()
+    sc = SCENARIOS["storm"](duration_hours=12.0)
+    sim = ClusterSim(sc)
+    sim.policy.set_decision_memo(memo)
+    sim.run()
+    assert memo.hits == memo.misses == memo.unique_solves == 0
+
+
+# ------------------------------------------- vectorized pressure sampler ----
+
+def _reference_sample(rng, offerings, pool, hours, now):
+    """The seed implementation's per-entry Python loop, kept as the RNG
+    stream reference: one scalar binomial per qualifying pool entry."""
+    notices = []
+    for offering_id, count in pool.items():
+        o = offerings.get(offering_id)
+        if o is None or count <= 0:
+            continue
+        p = pressure_interrupt_probability(count, float(o.t3),
+                                           o.interruption_freq, hours)
+        lost = int(rng.binomial(count, p))
+        if lost > 0:
+            notices.append(InterruptNotice(
+                time=now, offering_id=offering_id, count=lost))
+    return notices
+
+
+def test_vectorized_pressure_sampler_is_stream_identical(small_catalog):
+    """One batched binomial call must consume the RNG byte-identically to
+    the per-entry loop — same notices, same stream position after."""
+    index = {o.offering_id: o for o in small_catalog}
+    pool = {o.offering_id: max(1, o.t3 * k % 7) for k, o in
+            enumerate(small_catalog[:25], start=1)}
+    pool[small_catalog[30].offering_id] = 0          # skipped, draws nothing
+    for seed in range(5):
+        model = PressureInterruptModel()
+        model.reset(small_catalog, seed)
+        got = model.sample(index, pool, hours=6.0, now=3.0)
+        ref_rng = np.random.default_rng(seed)
+        want = _reference_sample(ref_rng, index, pool, 6.0, 3.0)
+        assert got == want
+        # identical stream position: the next draws coincide
+        assert np.array_equal(model._rng.random(4), ref_rng.random(4))
+
+
+def test_pressure_probability_batch_matches_scalar_bitwise():
+    counts = np.array([0, 1, 3, 17, 120, 400])
+    t3 = np.array([0.0, 0.4, 3.0, 17.0, 100.0, 80.0])
+    if_band = np.array([0, 1, 2, 3, 2, 1])
+    for hours in (0.5, 1.0, 6.0):
+        batch = pressure_interrupt_probability_batch(counts, t3, if_band,
+                                                     hours)
+        scalar = [pressure_interrupt_probability(int(c), float(t), int(i),
+                                                 hours)
+                  for c, t, i in zip(counts, t3, if_band)]
+        assert batch.tolist() == scalar
+
+
+# ----------------------------------------------------- backtest rewiring ----
+
+def test_compare_policies_rides_fleet_and_matches_standalone():
+    sc = SCENARIOS["price_shock"]()
+    comp = backtest.compare_policies(
+        sc, policies=("kubepacs", "karpenter_like"), seeds=(0, 1))
+    assert set(comp["runs"]) == {"kubepacs", "karpenter_like"}
+    # fleet-backed rows equal the metrics of standalone runs
+    for spec, rows in comp["runs"].items():
+        for seed, row in zip((0, 1), rows):
+            single = _standalone(dataclasses.replace(sc, policy=spec), seed)
+            assert row == backtest._run_metrics(
+                single, comp["recovery_overhead_hours"])
+
+
+def test_fleet_calibration_matches_per_trace_reports():
+    """Each fleet replica's calibration probe sees the identical stream a
+    standalone trace replay feeds, so per-seed reports coincide and the
+    pooled Brier is their term-weighted mean."""
+    sc = SCENARIOS["pressure_crunch"]()
+    rep = backtest.fleet_calibration(sc, seeds=SEEDS)
+    assert rep["seeds"] == SEEDS
+    assert len(rep["per_seed"]) == len(SEEDS)
+    for seed, per in zip(SEEDS, rep["per_seed"]):
+        trace = _standalone(sc, seed).records
+        assert per == backtest.calibration_report(trace)
+    n = rep["allocations_scored"]
+    assert n == sum(p["allocations_scored"] for p in rep["per_seed"])
+    assert rep["brier"] == pytest.approx(np.average(
+        [p["brier"] for p in rep["per_seed"]],
+        weights=[p["allocations_scored"] for p in rep["per_seed"]]))
