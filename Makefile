@@ -3,7 +3,8 @@
 
 PY := PYTHONPATH=src python
 
-.PHONY: verify test bench bench-solver bench-risk bench-fleet docs-check
+.PHONY: verify test bench bench-solver bench-backend bench-risk bench-fleet \
+        docs-check
 
 ## tier-1 gate: full test suite + a smoke pass of the solver microbenchmark
 ## + the docs gate (README quickstart runs, DESIGN.md refs resolve)
@@ -26,6 +27,12 @@ bench:
 ## solver microbenchmark at all market sizes; refreshes BENCH_solver.json
 bench-solver:
 	$(PY) -m benchmarks.bench_solver --json BENCH_solver.json
+
+## decision-plane backend benchmark (PR 1 path vs batched numpy/jax
+## engines at 250 offerings x 5k pods, 32 jittered decisions); refreshes
+## BENCH_backend.json
+bench-backend:
+	$(PY) -m benchmarks.bench_backend --json BENCH_backend.json
 
 ## risk-subsystem backtest (kubepacs_risk vs kubepacs + forecast
 ## calibration); refreshes BENCH_risk.json

@@ -1,0 +1,387 @@
+"""Decision-plane backend benchmark: cross-decision batched GSS×ILP vs the
+PR 1 per-decision NumPy path (DESIGN.md §12).
+
+The scenario is a FleetSim-style tick with ``n_decisions`` *unique* pending
+decisions (demands jittered ±15 % around the acceptance market's 5k pods —
+the low-memo-hit regime where PR 4's DecisionMemo cannot collapse them):
+
+  * ``pr1_path``        — the PR 1 engine, vendored below verbatim (greedy
+    LP prune + min-plus D&C backtracking), driven one bracketed-GSS cycle
+    per decision against a shared CompiledMarket: exactly what the fleet
+    engine paid per unique decision before this change;
+  * ``sequential``      — the new engine (core-bounded prune + one
+    improvement-bit DP), still one cycle per decision, numpy backend;
+  * ``batched_numpy``   — one :func:`bracketed_gss_many` over all
+    decisions (cross-decision stacked prescan + lockstep golden rounds);
+  * ``batched_jax``     — the same batched cycle with every DP dispatched
+    through the JAX-jitted scan backend (absent → recorded as skipped).
+    NOTE: on small CPU hosts XLA's scan under-runs the ragged host path —
+    the honest number is recorded either way; the jax backend's value is
+    the accelerator path (one fused dispatch per phase), not CPU wins.
+
+Selections are asserted identical across every path before timing
+(engine-equality is part of the backend contract, tests/test_backend.py).
+
+Usage:
+  python -m benchmarks.bench_backend [--smoke] [--json PATH] [--decisions N]
+
+The checked-in record is refreshed with ``make bench-backend``
+(→ ``--json BENCH_backend.json``); the plain run is side-effect-free.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import platform
+import time
+from typing import List, Optional
+
+import numpy as np
+
+from repro.core import (NumpyBackend, Request, compile_market, e_total,
+                        generate_catalog, jax_available, make_backend,
+                        preprocess)
+from repro.core.efficiency import NodePool, score_counts_batch
+from repro.core.gss import PHI, GssTrace, bracketed_gss_many
+
+#: ISSUE 5 acceptance bar: ≥5× end-to-end provisioning-cycle speedup over
+#: the PR 1 NumPy path at 250 offerings × 5k pods, n_decisions ≥ 32
+TARGET_SPEEDUP = 5.0
+PRESCAN = 9
+TOLERANCE = 0.01
+
+# ---------------------------------------------------------------------------
+# The PR 1 engine, vendored verbatim (commit 489a203) as the baseline
+# ---------------------------------------------------------------------------
+
+_INF = float("inf")
+_DENSE_BUNDLES = 16
+_DENSE_TARGET = 512
+
+
+def _pr1_cover_dp(bpods, bcosts, target):
+    dp = np.full(target + 1, _INF)
+    dp[0] = 0.0
+    for b in range(len(bpods)):
+        pb = int(bpods[b])
+        cb = bcosts[b]
+        if pb > target:
+            np.minimum(dp, cb, out=dp)
+            continue
+        np.minimum(dp[pb:], dp[:-pb] + cb, out=dp[pb:])
+        if pb > 1:
+            np.minimum(dp[1:pb], dp[0] + cb, out=dp[1:pb])
+    return dp
+
+
+def _pr1_lp_prune(bpods, bcosts, target):
+    B = len(bpods)
+    if B == 0 or target <= 0:
+        return np.ones(B, dtype=bool)
+    rate = bcosts / bpods
+    order = np.argsort(rate, kind="stable")
+    p_sorted = bpods[order].astype(np.float64)
+    c_sorted = bcosts[order]
+    cum_p = np.cumsum(p_sorted)
+    cum_c = np.cumsum(c_sorted)
+    if cum_p[-1] < target:
+        return np.ones(B, dtype=bool)
+    k_ub = int(np.searchsorted(cum_p, target))
+    ub = float(cum_c[k_ub])
+    resid = np.maximum(target - bpods, 0).astype(np.float64)
+    k = np.searchsorted(cum_p, resid)
+    prev_p = np.where(k > 0, cum_p[np.maximum(k - 1, 0)], 0.0)
+    prev_c = np.where(k > 0, cum_c[np.maximum(k - 1, 0)], 0.0)
+    lp = prev_c + (resid - prev_p) * (c_sorted[k] / p_sorted[k])
+    lp[resid <= 0] = 0.0
+    return bcosts + lp <= ub * (1.0 + 1e-12) + 1e-9
+
+
+def _pr1_dense_backtrack(bpods, bcosts, target):
+    B = len(bpods)
+    take = np.zeros(B, dtype=bool)
+    if target <= 0:
+        return take
+    dp = np.full(target + 1, _INF)
+    dp[0] = 0.0
+    history = np.empty((B + 1, target + 1))
+    history[0] = dp
+    for b in range(B):
+        pb = int(bpods[b])
+        cut = min(pb, target + 1)
+        shifted = np.empty(target + 1)
+        shifted[:cut] = dp[0]
+        if cut <= target:
+            shifted[cut:] = dp[: target + 1 - pb]
+        dp = np.minimum(dp, shifted + bcosts[b])
+        history[b + 1] = dp
+    j = target
+    for b in range(B - 1, -1, -1):
+        if j == 0:
+            break
+        if history[b + 1][j] < history[b][j] - 1e-12:
+            take[b] = True
+            j = max(0, j - int(bpods[b]))
+    return take
+
+
+def _pr1_dc_backtrack(bpods, bcosts, target):
+    B = len(bpods)
+    if target <= 0:
+        return np.zeros(B, dtype=bool)
+    if B <= _DENSE_BUNDLES or target <= _DENSE_TARGET:
+        return _pr1_dense_backtrack(bpods, bcosts, target)
+    mid = B // 2
+    dp_l = _pr1_cover_dp(bpods[:mid], bcosts[:mid], target)
+    dp_r = _pr1_cover_dp(bpods[mid:], bcosts[mid:], target)
+    tot = dp_l + dp_r[::-1]
+    j1 = int(np.argmin(tot))
+    take = np.empty(B, dtype=bool)
+    take[:mid] = _pr1_dc_backtrack(bpods[:mid], bcosts[:mid], j1)
+    take[mid:] = _pr1_dc_backtrack(bpods[mid:], bcosts[mid:], target - j1)
+    return take
+
+
+def _pr1_solve(market, req_pods, alpha):
+    coef = market.coefficients(np.array([alpha]))[0]
+    n = market.n
+    active = market.structural
+    counts = np.zeros(n, dtype=np.int64)
+    neg = (coef < 0) & active
+    counts[neg] = market.bound[neg]
+    covered = int(np.sum(market.pods[neg] * market.bound[neg]))
+    residual = max(0, req_pods - covered)
+    if residual == 0:
+        return list(map(int, counts))
+    in_dp = active & ~neg
+    if int(np.sum(market.pods[in_dp] * market.bound[in_dp])) < residual:
+        return None
+    bidx = np.flatnonzero(in_dp[market.b_item])
+    bpods = market.b_pods[bidx]
+    bcosts = coef[market.b_item[bidx]] * market.b_copies[bidx]
+    keep = _pr1_lp_prune(bpods, bcosts, residual)
+    kept_idx = np.flatnonzero(keep)
+    take = np.zeros(len(bpods), dtype=bool)
+    take[kept_idx] = _pr1_dc_backtrack(bpods[kept_idx], bcosts[kept_idx],
+                                       residual)
+    taken = bidx[take]
+    np.add.at(counts, market.b_item[taken], market.b_copies[taken])
+    return list(map(int, counts))
+
+
+def pr1_bracketed_gss(items, req_pods, market):
+    """The PR 1 guarded cycle: 9-α prescan + golden refinement, every
+    solve through the vendored PR 1 solver (one decision at a time)."""
+    grid = [i / (PRESCAN - 1) for i in range(PRESCAN)]
+    counts_list = [_pr1_solve(market, req_pods, a) for a in grid]
+    scores = score_counts_batch(items, counts_list, req_pods,
+                                none_score=float("-inf"),
+                                arrays=market.metric_arrays)
+    pools = [None if c is None else NodePool(items=list(items), counts=c)
+             for c in counts_list]
+    best_pool, best_f, best_idx = None, float("-inf"), 0
+    for gi, (alpha, score, pool) in enumerate(zip(grid, scores, pools)):
+        if pool is not None:
+            pool.alpha = alpha
+        if score > best_f:
+            best_pool, best_f, best_idx = pool, score, gi
+    a = grid[max(0, best_idx - 1)]
+    b = grid[min(len(grid) - 1, best_idx + 1)]
+
+    cache = {}
+
+    def evaluate(alpha):
+        key = round(alpha, 12)
+        if key in cache:
+            return cache[key]
+        counts = _pr1_solve(market, req_pods, alpha)
+        if counts is None:
+            out = (None, float("-inf"))
+        else:
+            pool = NodePool(items=list(items), counts=counts, alpha=alpha)
+            out = (pool, e_total(pool, req_pods))
+        cache[key] = out
+        return out
+
+    x1 = b - PHI * (b - a)
+    x2 = a + PHI * (b - a)
+    pool1, f1 = evaluate(x1)
+    pool2, f2 = evaluate(x2)
+    g_pool, g_f = (pool1, f1) if f1 >= f2 else (pool2, f2)
+    while (b - a) > TOLERANCE:
+        if f1 >= f2:
+            b = x2
+            x2, f2, pool2 = x1, f1, pool1
+            x1 = b - PHI * (b - a)
+            pool1, f1 = evaluate(x1)
+            if f1 > g_f:
+                g_pool, g_f = pool1, f1
+        else:
+            a = x1
+            x1, f1, pool1 = x2, f2, pool2
+            x2 = a + PHI * (b - a)
+            pool2, f2 = evaluate(x2)
+            if f2 > g_f:
+                g_pool, g_f = pool2, f2
+    if g_pool is not None:
+        g_pool = g_pool.nonzero()
+    inner_f = e_total(g_pool, req_pods) if g_pool is not None \
+        else float("-inf")
+    if best_pool is not None and best_f > inner_f:
+        return best_pool.nonzero()
+    return g_pool
+
+
+# ---------------------------------------------------------------------------
+# Benchmark driver
+# ---------------------------------------------------------------------------
+
+def _jittered_demands(base: int, n: int, jitter: float = 0.15,
+                      seed: int = 0) -> List[int]:
+    rng = np.random.default_rng(seed)
+    return [int(base * (1 + jitter * (2 * rng.random() - 1)))
+            for _ in range(n)]
+
+
+def _best_of(fn, repeat: int) -> float:
+    best = float("inf")
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def run(smoke: bool = False, n_decisions: Optional[int] = None,
+        json_path: Optional[str] = None, repeat: int = 2) -> dict:
+    n_items, base_pods = (100, 1000) if smoke else (250, 5000)
+    n_dec = n_decisions or (8 if smoke else 32)
+    cat = generate_catalog(seed=0, max_offerings=2000)
+    items = preprocess(cat, Request(pods=base_pods, cpu_per_pod=2,
+                                    mem_per_pod=2))[:n_items]
+    market = compile_market(items)
+    demands = _jittered_demands(base_pods, n_dec)
+    numpy_be = NumpyBackend()
+    fake = lambda: 0.0                                     # noqa: E731
+
+    # equality gate before any timing: all engines select identical pools
+    pr1_pools = [pr1_bracketed_gss(items, r, market) for r in demands]
+    seq = bracketed_gss_many(items, demands, tolerance=TOLERANCE,
+                             market=market, timer=fake, backend=numpy_be)
+    batched_pools = [p for p, _t in seq]
+    equality = all(
+        (a is None) == (b is None) and (a is None or (
+            a.as_dict() == b.as_dict()))
+        for a, b in zip(pr1_pools, batched_pools))
+    if not equality:
+        raise AssertionError("backend engines disagree with the PR 1 "
+                             "selections — refusing to time a divergent "
+                             "decision plane")
+
+    def sequential_cycle(backend):
+        for r in demands:
+            bracketed_gss_many(items, [r], tolerance=TOLERANCE,
+                               market=market, timer=fake, backend=backend)
+
+    def batched_cycle(backend):
+        bracketed_gss_many(items, demands, tolerance=TOLERANCE,
+                           market=market, timer=fake, backend=backend)
+
+    t_pr1 = _best_of(lambda: [pr1_bracketed_gss(items, r, market)
+                              for r in demands], repeat)
+    t_seq = _best_of(lambda: sequential_cycle(numpy_be), repeat)
+    t_batch_np = _best_of(lambda: batched_cycle(numpy_be), repeat)
+
+    jax_rec: dict = {"available": jax_available()}
+    if jax_rec["available"]:
+        jax_be = make_backend("jax")
+        jax_pools = [p for p, _t in bracketed_gss_many(
+            items, demands, tolerance=TOLERANCE, market=market, timer=fake,
+            backend=jax_be)]
+        jax_rec["selections_equal_numpy"] = all(
+            (a is None) == (b is None) and (a is None or
+                                            a.as_dict() == b.as_dict())
+            for a, b in zip(batched_pools, jax_pools))
+        jax_rec["batched_wall_s"] = round(
+            _best_of(lambda: batched_cycle(jax_be), repeat), 3)
+        jax_rec["speedup_vs_pr1"] = round(t_pr1 / jax_rec["batched_wall_s"],
+                                          2)
+
+    # homogeneous fleet tick for reference: identical decisions collapse to
+    # one unique solve (the regime PR 4's memo already handled)
+    t_homog = _best_of(lambda: bracketed_gss_many(
+        items, [base_pods] * n_dec, tolerance=TOLERANCE, market=market,
+        timer=fake, backend=numpy_be), repeat)
+
+    speedups = {
+        "sequential_numpy": round(t_pr1 / t_seq, 2),
+        "batched_numpy": round(t_pr1 / t_batch_np, 2),
+        "batched_jax": jax_rec.get("speedup_vs_pr1"),
+        "batched_numpy_homogeneous": round(t_pr1 / t_homog, 2),
+    }
+    best_name = max((k for k, v in speedups.items() if isinstance(v, float)
+                     and k != "batched_numpy_homogeneous"),
+                    key=lambda k: speedups[k])
+    out = {
+        "benchmark": "bench_backend",
+        "python": platform.python_version(),
+        "numpy": np.__version__,
+        "machine": platform.machine(),
+        "n_items": n_items,
+        "base_pods": base_pods,
+        "n_decisions": n_dec,
+        "demand_jitter": 0.15,
+        "equality_checked": equality,
+        "target_speedup": TARGET_SPEEDUP,
+        "pr1_wall_s": round(t_pr1, 3),
+        "pr1_ms_per_decision": round(t_pr1 / n_dec * 1e3, 1),
+        "sequential_numpy_wall_s": round(t_seq, 3),
+        "batched_numpy_wall_s": round(t_batch_np, 3),
+        "batched_numpy_homogeneous_wall_s": round(t_homog, 3),
+        "jax": jax_rec,
+        "speedups_vs_pr1": speedups,
+        "headline": {
+            "best_config": best_name,
+            "best_speedup": speedups[best_name],
+            "meets_target": speedups[best_name] >= TARGET_SPEEDUP,
+            "jax_meets_target": (jax_rec.get("speedup_vs_pr1") or 0.0)
+            >= TARGET_SPEEDUP,
+        },
+    }
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(out, f, indent=2)
+    return out
+
+
+def main(argv: Optional[List[str]] = None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small market / few decisions (CI)")
+    ap.add_argument("--json", default="",
+                    help="output record path (e.g. BENCH_backend.json; "
+                         "default: don't write)")
+    ap.add_argument("--decisions", type=int, default=None,
+                    help="pending decisions per tick (default 32; 8 smoke)")
+    args = ap.parse_args(argv if argv is not None else [])
+    out = run(smoke=args.smoke, n_decisions=args.decisions,
+              json_path=args.json or None)
+    s = out["speedups_vs_pr1"]
+    h = out["headline"]
+    detail = (f"pr1:{out['pr1_ms_per_decision']}ms/dec"
+              f";seq:{s['sequential_numpy']}x"
+              f";batched:{s['batched_numpy']}x"
+              f";jax:{s['batched_jax']}x"
+              f";homog:{s['batched_numpy_homogeneous']}x"
+              f";target>={out['target_speedup']}x:"
+              f"{'met' if h['meets_target'] else 'MISSED'}"
+              f"(best={h['best_config']})")
+    us = round(out["batched_numpy_wall_s"] / out["n_decisions"] * 1e6)
+    print(f"bench_backend,{us},{detail}")
+    return out
+
+
+if __name__ == "__main__":
+    import sys
+    main(sys.argv[1:])

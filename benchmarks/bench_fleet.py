@@ -14,6 +14,13 @@ trajectory:
     draws genuinely diverge replicas and the memo collapses only
     coinciding (state, demand, exclusion) keys: the honest
     mid-hit-rate data point;
+  * ``hetero`` — the heterogeneous-demand scenario (per-replica demand
+    jitter, DESIGN.md §12): memo hit rate collapses below 50 %, so the
+    fleet pays O(unique ≈ R) solves per tick — the regime the
+    collect-then-solve batched tick phase targets.  Recorded as batched
+    tick phase ON vs OFF (OFF is the PR 4 per-replica sequential path
+    running on the current solver — a *stricter* baseline than PR 4
+    itself, whose older solver was slower per cycle);
   * per-scenario ``fleet_stats`` — memo hits/misses/unique solves and
     compiled-market cache hits, so cache effectiveness is asserted from
     counters, not inferred from timing;
@@ -39,11 +46,16 @@ from typing import List, Optional
 import numpy as np
 
 from repro.risk import backtest
-from repro.sim import FleetSim, run_replicas
+from repro.sim import FleetSim, heterogeneous_demand_scenario, run_replicas
 
 #: acceptance bar of the fleet engine (ISSUE 4): ≥20× replica throughput
 #: vs per-seed run_replicas at R=256 on the interrupt-storm scenario
 TARGET_SPEEDUP = 20.0
+
+#: acceptance bar of the batched tick phase (ISSUE 5): ≥3× replica
+#: throughput on the heterogeneous-demand scenario vs the PR 4 sequential
+#: tick phase (measured honestly as batched ON vs OFF on today's solver)
+TARGET_HETERO_SPEEDUP = 3.0
 
 
 def _decision_equality(scenario, seeds) -> bool:
@@ -94,19 +106,51 @@ def _bench_scenario(scenario, fleet_replicas: int, baseline_replicas: int,
     }
 
 
+def _bench_hetero(scenario, fleet_replicas: int) -> dict:
+    """Batched tick phase ON vs OFF on the low-memo-hit scenario."""
+    seeds = list(range(fleet_replicas))
+    t0 = time.perf_counter()
+    off = FleetSim(scenario, seeds, batch_decisions=False)
+    off.run()
+    off_wall = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    on = FleetSim(scenario, seeds)
+    on.run()
+    on_wall = time.perf_counter() - t0
+    stats = on.stats()
+    lookups = stats.get("memo_hits", 0) + stats.get("memo_misses", 0)
+    hit_rate = (stats.get("memo_hits", 0) / lookups) if lookups else None
+    return {
+        "scenario": scenario.name,
+        "catalog_offerings": scenario.max_offerings,
+        "demand_jitter": scenario.demand_jitter,
+        "replicas": fleet_replicas,
+        "batched_off_wall_s": round(off_wall, 3),
+        "batched_on_wall_s": round(on_wall, 3),
+        "batched_off_replicas_per_s": round(fleet_replicas / off_wall, 2),
+        "batched_on_replicas_per_s": round(fleet_replicas / on_wall, 2),
+        "speedup_on_vs_off": round(off_wall / on_wall, 2),
+        "memo_hit_rate": round(hit_rate, 4) if hit_rate is not None else None,
+        "fleet_stats": stats,
+    }
+
+
 def run(smoke: bool = False, fleet_replicas: Optional[int] = None,
         json_path: Optional[str] = None) -> dict:
     # smoke still runs a real fleet: R must stay large enough to amortize
     # the (shared) construction cost the speedup target is defined over
     R = fleet_replicas or (128 if smoke else 256)
     base_R = 2 if smoke else 8
+    hetero_R = min(R, 32 if smoke else 128)
     tweak = dict(max_offerings=120, duration_hours=24.0) if smoke \
         else dict(max_offerings=250)
     storm = backtest.interrupt_storm_scenario(**tweak)
     crunch = backtest.pressure_crunch_scenario(**tweak)
+    hetero = heterogeneous_demand_scenario(**tweak)
 
     equality = _decision_equality(storm, [0, 1]) \
-        and _decision_equality(crunch, [0, 1])
+        and _decision_equality(crunch, [0, 1]) \
+        and _decision_equality(hetero, [0, 1])
     if not equality:
         raise AssertionError("fleet ≠ run_replicas decision records — the "
                              "equality contract is broken; refusing to "
@@ -114,6 +158,7 @@ def run(smoke: bool = False, fleet_replicas: Optional[int] = None,
 
     storm_rec = _bench_scenario(storm, R, base_R)
     crunch_rec = _bench_scenario(crunch, R, base_R)
+    hetero_rec = _bench_hetero(hetero, hetero_R)
 
     out = {
         "benchmark": "bench_fleet",
@@ -122,14 +167,20 @@ def run(smoke: bool = False, fleet_replicas: Optional[int] = None,
         "machine": platform.machine(),
         "equality_checked": equality,
         "target_speedup": TARGET_SPEEDUP,
+        "target_hetero_speedup": TARGET_HETERO_SPEEDUP,
         "storm": storm_rec,
         "crunch": crunch_rec,
+        "hetero": hetero_rec,
         "headline": {
             "storm_speedup": storm_rec["speedup"],
             "storm_fleet_replicas_per_s": storm_rec["fleet_replicas_per_s"],
             "crunch_speedup": crunch_rec["speedup"],
             "crunch_memo_hit_rate": crunch_rec["memo_hit_rate"],
+            "hetero_memo_hit_rate": hetero_rec["memo_hit_rate"],
+            "hetero_batched_speedup": hetero_rec["speedup_on_vs_off"],
             "meets_target": storm_rec["speedup"] >= TARGET_SPEEDUP,
+            "hetero_meets_target": (hetero_rec["speedup_on_vs_off"]
+                                    >= TARGET_HETERO_SPEEDUP),
         },
     }
     if json_path:
@@ -154,6 +205,8 @@ def main(argv: Optional[List[str]] = None):
     detail = (f"storm:{h['storm_speedup']}x@R{out['storm']['fleet_replicas']}"
               f";crunch:{h['crunch_speedup']}x"
               f";crunch_hit_rate={h['crunch_memo_hit_rate']}"
+              f";hetero:{h['hetero_batched_speedup']}x"
+              f"@hit_rate={h['hetero_memo_hit_rate']}"
               f";target>={out['target_speedup']}x:"
               f"{'met' if h['meets_target'] else 'MISSED'}")
     us = round(out["storm"]["fleet_ms_per_replica"] * 1e3)

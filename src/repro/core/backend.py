@@ -1,0 +1,373 @@
+"""Pluggable solver backends for the min-plus cover DP (DESIGN.md §12).
+
+The ILP engine reduces every solve — single-α, a GSS prescan grid, or the
+cross-decision batches of ``solve_ilp_many`` — to one primitive: a forward
+min-plus value pass over a bundle sequence that also emits *improvement
+bits*, the per-(bundle, coverage) booleans the exact backtracker consumes.
+This module defines that primitive once, with two interchangeable
+implementations:
+
+* :class:`NumpyBackend` — the host path: a Python loop over bundles with
+  in-place vectorized row updates.  Always available; the reference for
+  the bit-identical-selection contract.
+* :class:`JaxBackend` — the accelerator path: the same recurrence as a
+  ``jax.lax.scan`` under ``jit``, batched over stacked solve groups with
+  bucketed padding so recompilation is bounded.  Optionally (``pallas``
+  flag) the inner relaxation step runs as a Pallas kernel — interpreted
+  on CPU, lowerable on TPU/GPU — for the jax_pallas north star.
+
+Canonical kernel semantics (both backends, float64):
+
+    dp[0] = 0, dp[j>0] = +inf
+    for b in 0..B-1:                       # bundle order is significant
+        cand[j] = dp[max(j - pods[b], 0)] + cost[b]      (j >= 1)
+        bits[b, j] = cand[j] < dp[j]                     (bits[b, 0] = False)
+        dp[j]    = min(dp[j], cand[j])                   (dp[0] pinned at 0)
+
+(The strict ``<`` needs no epsilon: dp values are exact subset-cost sums,
+so a strict improvement at (b, j) means every optimal solution of the
+bundle prefix uses b — the backtracker's take-rule — and equality means
+skipping b is optimal.  The seed solver's 1e-12 guard band protected a
+history matrix recomputed along a different float path; here bits and dp
+come from the same pass.)
+
+Every arithmetic step is an elementwise float64 op executed in the same
+order by both implementations, so the resulting ``dp``/``bits`` are
+bit-identical — which is what makes backend choice invisible to selections
+(the backtracker's tie-breaking reads only ``bits``).  The ``j``-prefix of
+``dp``/``bits`` does not depend on the padded target length, so solve
+groups that share (costs, kept bundles) can share one padded row.
+
+JAX is an *optional* dependency of this path: importing this module never
+imports ``jax``.  Requesting the jax backend without jax installed warns
+once and falls back to :class:`NumpyBackend`
+(``KUBEPACS_SOLVER_BACKEND=numpy|jax|jax:pallas`` overrides the default).
+"""
+
+from __future__ import annotations
+
+import os
+import warnings
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+#: one (bpods, costs, target) residual covering problem; ``bpods`` int64
+#: (all >= 1), ``costs`` float64 (may contain +inf), ``target`` >= 1
+CoverGroup = Tuple[np.ndarray, np.ndarray, int]
+
+
+class SolverBackend:
+    """Interface: batched cover-DP value passes with improvement bits."""
+
+    name = "abstract"
+
+    #: engine hint: decode in slices of at most this many DP groups so the
+    #: bits arrays of one slice die before the next is computed (the host
+    #: path is cache/allocator-sensitive; accelerator backends want the
+    #: whole stack in one dispatch and override with a large value)
+    max_group_batch = 1 << 30
+
+    def cover_bits(self, groups: Sequence[CoverGroup],
+                   ) -> List[Tuple[np.ndarray, np.ndarray]]:
+        """For each group return ``(dp, bits)`` — ``dp`` float64 of shape
+        ``(target+1,)`` and ``bits`` bool of shape ``(B, target+1)`` — per
+        the canonical kernel above.  Implementations may stack groups into
+        one padded dispatch; returned arrays are trimmed numpy arrays."""
+        raise NotImplementedError
+
+    def cover_values(self, groups: Sequence[CoverGroup]) -> List[np.ndarray]:
+        """Value-only variant: just each group's final ``dp`` vector (used
+        for the engine's core upper bounds, where bits are never read)."""
+        return [dp for dp, _bits in self.cover_bits(groups)]
+
+
+class NumpyBackend(SolverBackend):
+    """Host reference implementation (ragged — no padding waste).
+
+    Runs each group's forward pass with preallocated scratch rows (the
+    pass is memory-bandwidth-bound; allocator churn is the only other
+    cost worth removing) and skips +inf bundles outright — an inert
+    bundle's candidates never beat the running ``dp``, so skipping is
+    exact.
+    """
+
+    name = "numpy"
+    max_group_batch = 8      # keep the live bits working set cache-sized
+
+    def cover_bits(self, groups):
+        scratch = np.empty(max((g[2] for g in groups), default=0) + 1)
+        return [self._one(bpods, costs, target, scratch)
+                for bpods, costs, target in groups]
+
+    def cover_values(self, groups):
+        scratch = np.empty(max((g[2] for g in groups), default=0) + 1)
+        return [self._values(bpods, costs, target, scratch)
+                for bpods, costs, target in groups]
+
+    @staticmethod
+    def _values(bpods: np.ndarray, costs: np.ndarray, target: int,
+                scratch: Optional[np.ndarray] = None) -> np.ndarray:
+        if scratch is None:
+            scratch = np.empty(target + 1)
+        dp = np.full(target + 1, np.inf)
+        dp[0] = 0.0
+        for b in range(len(bpods)):
+            cb = costs[b]
+            if not np.isfinite(cb):
+                continue
+            pb = int(bpods[b])
+            if pb <= target:
+                k = target + 1 - pb
+                cand = np.add(dp[:k], cb, out=scratch[:k])
+                np.minimum(dp[pb:], cand, out=dp[pb:])
+                if pb > 1:
+                    np.minimum(dp[1:pb], cb, out=dp[1:pb])
+            else:
+                np.minimum(dp[1:], cb, out=dp[1:])
+        return dp
+
+    @staticmethod
+    def _one(bpods: np.ndarray, costs: np.ndarray, target: int,
+             scratch: Optional[np.ndarray] = None,
+             ) -> Tuple[np.ndarray, np.ndarray]:
+        B = len(bpods)
+        if scratch is None:
+            scratch = np.empty(target + 1)
+        dp = np.full(target + 1, np.inf)
+        dp[0] = 0.0
+        # every finite bundle's row is fully written below (j >= 1) and the
+        # j = 0 column is blanked at the end, so empty beats zeros here
+        bits = np.empty((B, target + 1), dtype=bool)
+        for b in range(B):
+            cb = costs[b]
+            if not np.isfinite(cb):
+                bits[b] = False   # cand = x + inf never beats dp
+                continue
+            pb = int(bpods[b])
+            if pb <= target:
+                # j in [pb, target]: cand = dp[j - pb] + cb (pre-update dp;
+                # the scratch row materializes before the in-place writes)
+                k = target + 1 - pb
+                cand = np.add(dp[:k], cb, out=scratch[:k])
+                np.less(cand, dp[pb:], out=bits[b, pb:])
+                np.minimum(dp[pb:], cand, out=dp[pb:])
+                if pb > 1:        # j in [1, pb-1]: cand = dp[0] + cb = cb
+                    np.less(cb, dp[1:pb], out=bits[b, 1:pb])
+                    np.minimum(dp[1:pb], cb, out=dp[1:pb])
+            else:                 # pb > target: cand = cb for every j >= 1
+                np.less(cb, dp[1:], out=bits[b, 1:])
+                np.minimum(dp[1:], cb, out=dp[1:])
+        bits[:, 0] = False
+        return dp, bits
+
+
+def _bucket(n: int, steps: Sequence[int]) -> int:
+    """Round ``n`` up to the smallest bucket (bounds jit recompilation)."""
+    for s in steps:
+        if n <= s:
+            return s
+    step = steps[-1]
+    return ((n + step - 1) // step) * step
+
+
+class JaxBackend(SolverBackend):
+    """``jax.lax.scan`` cover-DP, jitted, batched over padded groups.
+
+    Groups are stacked into one ``(G, B_pad, R_pad)`` dispatch per call;
+    pad bundles carry ``pods=1, cost=+inf`` (inert), pad target columns are
+    never read back (the kernel's ``j``-prefix is padding-independent).
+    ``G``/``B``/``R`` are bucketed so the jit cache stays small across the
+    varying shapes of a simulation run.  All arithmetic runs in float64
+    under a scoped ``enable_x64`` so results are bit-identical to
+    :class:`NumpyBackend` without flipping global precision for unrelated
+    jax users in the process.
+
+    ``pallas=True`` swaps the inner relaxation step for a Pallas kernel
+    (`repro.kernels` idiom); on CPU it runs in interpreter mode — a
+    correctness/bring-up path, not a fast one — while TPU/GPU lower it.
+    """
+
+    name = "jax"
+
+    #: bucket ladders: fine at small sizes, coarse (multiples of the last
+    #: step) beyond, keeping padding waste and recompiles both bounded
+    _G_STEPS = (1, 2, 4, 8, 16, 32, 64)
+    _B_STEPS = (16, 32, 64, 128, 256, 512)
+    _R_STEPS = (256, 512, 1024, 2048)
+
+    def __init__(self, pallas: bool = False):
+        import jax  # deferred: jax is optional for the solver path
+
+        self._jax = jax
+        self._jnp = jax.numpy
+        self.pallas = bool(pallas)
+        if pallas:
+            self.name = "jax:pallas"
+        self._jit_cache: dict = {}
+
+    # -- kernel construction -------------------------------------------------
+    def _step_fn(self, interpret: bool):
+        jnp = self._jnp
+        if not self.pallas:
+            def step(dp, xs):
+                pb, cb = xs                                  # (G,), (G,)
+                jidx = jnp.arange(dp.shape[1])
+                idx = jnp.maximum(jidx[None, :] - pb[:, None], 0)
+                cand = jnp.take_along_axis(dp, idx, axis=1) + cb[:, None]
+                cand = cand.at[:, 0].set(jnp.inf)            # dp[0] pinned
+                bit = cand < dp
+                return jnp.minimum(dp, cand), bit
+            return step
+
+        from jax.experimental import pallas as pl
+
+        def relax_kernel(dp_ref, pb_ref, cb_ref, out_ref, bit_ref):
+            dp = dp_ref[...]                                 # (G, R+1)
+            pb = pb_ref[...]                                 # (G, 1)
+            cb = cb_ref[...]                                 # (G, 1)
+            jidx = self._jax.lax.broadcasted_iota(
+                jnp.int64, dp.shape, dimension=1)
+            idx = jnp.maximum(jidx - pb, 0)
+            cand = jnp.take_along_axis(dp, idx, axis=1) + cb
+            cand = jnp.where(jidx == 0, jnp.inf, cand)
+            bit_ref[...] = cand < dp
+            out_ref[...] = jnp.minimum(dp, cand)
+
+        def step(dp, xs):
+            pb, cb = xs
+            new_dp, bit = pl.pallas_call(
+                relax_kernel,
+                out_shape=(
+                    self._jax.ShapeDtypeStruct(dp.shape, dp.dtype),
+                    self._jax.ShapeDtypeStruct(dp.shape, jnp.bool_),
+                ),
+                interpret=interpret,
+            )(dp, pb[:, None], cb[:, None].astype(dp.dtype))
+            return new_dp, bit
+        return step
+
+    def _compiled(self, G: int, B: int, R: int, with_bits: bool = True):
+        key = (G, B, R, with_bits)
+        fn = self._jit_cache.get(key)
+        if fn is None:
+            jax, jnp = self._jax, self._jnp
+            interpret = jax.default_backend() == "cpu"
+            step = self._step_fn(interpret)
+
+            def run(bpods, costs):                  # (G, B) int64 / float64
+                dp0 = jnp.full((G, R + 1), jnp.inf,
+                               dtype=jnp.float64).at[:, 0].set(0.0)
+                if with_bits:
+                    dp, bits = jax.lax.scan(step, dp0, (bpods.T, costs.T))
+                    return dp, jnp.moveaxis(bits, 0, 1)      # (G, B, R+1)
+                dp, _ = jax.lax.scan(
+                    lambda d, xs: (step(d, xs)[0], None), dp0,
+                    (bpods.T, costs.T))
+                return dp
+
+            fn = jax.jit(run)
+            self._jit_cache[key] = fn
+        return fn
+
+    # -- public API ----------------------------------------------------------
+    def cover_bits(self, groups):
+        return self._dispatch(groups, with_bits=True)
+
+    def cover_values(self, groups):
+        return self._dispatch(groups, with_bits=False)
+
+    def _dispatch(self, groups, with_bits: bool):
+        if not groups:
+            return []
+        from jax.experimental import enable_x64
+
+        # partition groups into (B, R) shape buckets so one outlier group
+        # does not pad every other dispatch up to its size
+        buckets: dict = {}
+        for i, (bp, _bc, t) in enumerate(groups):
+            key = (_bucket(len(bp), self._B_STEPS),
+                   _bucket(t, self._R_STEPS))
+            buckets.setdefault(key, []).append(i)
+        out: List = [None] * len(groups)
+        with enable_x64():
+            for (B, R), idxs in buckets.items():
+                G = _bucket(len(idxs), self._G_STEPS)
+                bpods = np.ones((G, B), dtype=np.int64)
+                costs = np.full((G, B), np.inf)
+                for g, i in enumerate(idxs):
+                    bp, bc, _t = groups[i]
+                    bpods[g, :len(bp)] = bp
+                    costs[g, :len(bc)] = bc
+                res = self._compiled(G, B, R, with_bits)(bpods, costs)
+                if with_bits:
+                    dp = np.asarray(res[0])
+                    bits = np.asarray(res[1])
+                    for g, i in enumerate(idxs):
+                        bp, _bc, t = groups[i]
+                        out[i] = (dp[g, :t + 1], bits[g, :len(bp), :t + 1])
+                else:
+                    dp = np.asarray(res)
+                    for g, i in enumerate(idxs):
+                        out[i] = dp[g, :groups[i][2] + 1]
+        return out
+
+
+# ---------------------------------------------------------------------------
+# Default-backend registry (env-overridable, numpy fallback with a warning)
+# ---------------------------------------------------------------------------
+
+_DEFAULT: Optional[SolverBackend] = None
+_WARNED = False
+
+
+def jax_available() -> bool:
+    try:
+        import jax  # noqa: F401
+        return True
+    except Exception:
+        return False
+
+
+def make_backend(spec: str) -> SolverBackend:
+    """Build a backend from a spec string: ``numpy`` | ``jax`` |
+    ``jax:pallas``.  A jax spec without jax installed warns once and
+    returns the numpy backend (the solver path treats jax as optional)."""
+    global _WARNED
+    if spec == "numpy":
+        return NumpyBackend()
+    if spec in ("jax", "jax:pallas"):
+        try:
+            return JaxBackend(pallas=spec.endswith(":pallas"))
+        except ImportError:
+            if not _WARNED:
+                warnings.warn(
+                    "KubePACS solver backend %r requested but jax is not "
+                    "installed; falling back to the NumPy backend (install "
+                    "jax, or set KUBEPACS_SOLVER_BACKEND=numpy to silence "
+                    "this)" % spec, RuntimeWarning, stacklevel=2)
+                _WARNED = True
+            return NumpyBackend()
+    raise ValueError(f"unknown solver backend spec {spec!r} "
+                     "(expected numpy | jax | jax:pallas)")
+
+
+def get_backend() -> SolverBackend:
+    """The process-default backend: ``KUBEPACS_SOLVER_BACKEND`` if set,
+    else numpy (selections are backend-invariant; numpy keeps the default
+    dependency surface of the control plane at exactly numpy)."""
+    global _DEFAULT
+    if _DEFAULT is None:
+        _DEFAULT = make_backend(
+            os.environ.get("KUBEPACS_SOLVER_BACKEND", "numpy"))
+    return _DEFAULT
+
+
+def set_backend(backend: Optional[SolverBackend | str]) -> SolverBackend:
+    """Override the process default (string specs accepted); ``None``
+    resets to the environment/default resolution on next use."""
+    global _DEFAULT
+    if isinstance(backend, str):
+        backend = make_backend(backend)
+    _DEFAULT = backend
+    return get_backend() if backend is None else backend

@@ -196,7 +196,17 @@ def e_total_batch(perf: np.ndarray, price: np.ndarray, pods: np.ndarray,
     Vectorized equivalent of scoring each row with :func:`e_total`; rows
     that underfill the demand (or cost nothing) score 0, matching the
     scalar path.  Used by the batched GSS prescan and the benchmarks.
+
+    Backend note (DESIGN.md §12): inputs are coerced with ``np.asarray``
+    so accelerator-backend outputs (e.g. jax device arrays) score without
+    copy ceremony, but the reductions themselves deliberately stay on the
+    host BLAS path — scores feed GSS bracket *comparisons*, and the
+    batched search promises bit-identical decisions to the sequential
+    one, which pins the summation shapes (see :func:`score_counts_many`).
     """
+    perf = np.asarray(perf, dtype=np.float64)
+    price = np.asarray(price, dtype=np.float64)
+    pods = np.asarray(pods, dtype=np.float64)
     counts = np.asarray(counts, dtype=np.float64)
     perf_sum = counts @ perf
     cost_sum = counts @ price
@@ -234,3 +244,21 @@ def score_counts_batch(items: Sequence[CandidateItem],
             out.append(float(scores[fi]))
             fi += 1
     return out
+
+
+def score_counts_many(items: Sequence[CandidateItem],
+                      counts_lists: Sequence[Sequence[Optional[Sequence[int]]]],
+                      req_pods_list: Sequence[int],
+                      none_score: float = 0.0,
+                      arrays: Optional[tuple] = None) -> List[List[float]]:
+    """Score the stacked per-decision outputs of ``solve_ilp_many``.
+
+    Deliberately one :func:`score_counts_batch` call *per decision* (not
+    one flattened matmul): BLAS reduction order can depend on operand
+    shape, and the cross-decision batched GSS (DESIGN.md §12) promises
+    every decision the bit-identical scores the sequential path computes
+    — so each decision is scored with exactly the sequential call shape.
+    """
+    return [score_counts_batch(items, counts_d, req, none_score=none_score,
+                               arrays=arrays)
+            for counts_d, req in zip(counts_lists, req_pods_list)]

@@ -3,27 +3,35 @@
     minimize   Σ_i ( -α·Perf_i/Perf_min + (1-α)·SP_i/SP_min ) · x_i
     subject to Σ_i Pod_i·x_i ≥ Req_pod,   0 ≤ x_i ≤ T3_i,   x_i ∈ ℤ
 
-Three interchangeable solvers (all exact):
+One exact engine behind three entry points (DESIGN.md §8 + §12):
 
-* :func:`solve_ilp` — the production path.  Items with negative objective
-  coefficient are saturated at their T3 bound (any ILP optimum does this; it
-  is exactly the high-α over-provisioning collapse of Table 2), and the
-  residual min-cost covering problem over non-negative items is a bounded
-  knapsack solved exactly by a memory-flat DP: LP-bound bundle pruning, a
-  forward value pass, and min-plus divide-and-conquer backtracking that
-  reconstructs the optimal counts in O(bundles + residual) peak memory
-  (the seed implementation materialised an O(bundles × residual) float64
-  history matrix — ≈80 MB at 500 bundles × 20k pods).  See DESIGN.md §8.
-* :func:`solve_ilp_batch` — one vectorized (n_α × R+1) numpy DP evaluating
-  *all* α of a GSS prescan at once.  Bundle structure (pods, bounds, binary
-  splits) is α-independent; only the objective coefficients vary, so the DP
-  shift pattern is shared across the α axis and per-α saturation masks are
-  computed by broadcasting :func:`objective_coefficients` over the α grid.
-* :func:`solve_ilp_pulp` — the paper's actual tool (PuLP/CBC), used to
-  cross-validate the DP in tests and available as a drop-in backend.
+* :func:`solve_ilp` — single (α, demand) solve.  Items with negative
+  objective coefficient are saturated at their T3 bound (any ILP optimum
+  does this; it is exactly the high-α over-provisioning collapse of
+  Table 2); the residual min-cost covering problem over non-negative items
+  is a bounded knapsack solved exactly by LP-bound bundle pruning plus one
+  forward min-plus value pass that emits *improvement bits*, from which
+  the optimal counts are reconstructed in O(bundles) — the value pass runs
+  on a pluggable :mod:`repro.core.backend` (numpy or JAX-jitted).
+* :func:`solve_ilp_batch` — all α of a GSS prescan grid for one demand.
+* :func:`solve_ilp_many` — the cross-decision batch: every pending
+  decision of a FleetSim tick (each with its own demand, α grid, and §4.1
+  exclusion mask) stacked into one engine invocation.  Rows that share
+  (exclusion mask, α) share one objective row with its saturation
+  analysis and rate ordering; rows that additionally share the residual
+  share the whole plan — one LP prune, one DP, one decode per unique
+  (objective, residual) pair, dispatched to the backend in stacked
+  slices (accelerator backends take the stack whole, the host backend
+  keeps each slice's working set cache-sized).
+
+All three produce *bit-identical selections* for a given row regardless of
+batching and backend: the value pass is a fixed sequence of elementwise
+float64 ops (see :mod:`repro.core.backend`) and tie-breaking lives entirely
+in the shared improvement-bit backtracker.
 
 :func:`solve_ilp_reference` preserves the seed history-matrix solver
-verbatim for cross-validation tests and as the benchmark baseline.
+verbatim for cross-validation tests and as the benchmark baseline;
+:func:`solve_ilp_pulp` wraps the paper's actual tool (PuLP/CBC).
 
 All count-returning entry points return per-item integers, or ``None`` when
 demand exceeds the total bounded capacity (the paper assumes the cloud
@@ -39,19 +47,14 @@ provisioner-level cache.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Sequence, Tuple
+from typing import Hashable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from .backend import SolverBackend, get_backend
 from .efficiency import CandidateItem
 
 _INF = float("inf")
-
-#: below this many bundles (or this small a target) the D&C backtracker
-#: switches to a dense history DP — the matrix is tiny there and the switch
-#: caps recursion overhead.
-_DENSE_BUNDLES = 16
-_DENSE_TARGET = 512
 
 
 @dataclasses.dataclass(frozen=True)
@@ -132,17 +135,20 @@ class CompiledMarket:
         """(Perf_i, SP_i, Pod_i) float64 triple for ``score_counts_batch``."""
         return self.perf, self.price, self.pods.astype(np.float64)
 
-    def coefficients(self, alphas: np.ndarray,
-                     exclude: Optional[np.ndarray] = None) -> np.ndarray:
-        """Broadcast Eq. 4–5 over an α grid: (n_alpha, n_items).
+    def norms(self, exclude: Optional[np.ndarray] = None,
+              ) -> Tuple[np.ndarray, np.ndarray]:
+        """(Perf_i/Perf_min, SP_i/SP_min) normalised objective vectors.
 
         With an ``exclude`` mask the Perf_min/SP_min normalisation is taken
         over the surviving candidates only — identical to rebuilding the
         candidate set without the excluded offerings (§4.1 cache semantics).
+        GSS evaluators cache this pair once per (market, mask) and rebuild
+        per-α coefficient rows as ``-α·pn + (1-α)·qn`` — the same
+        elementwise float64 ops :meth:`coefficients` performs, so the
+        cached path is bit-identical to the uncached one.
         """
-        a = np.asarray(alphas, dtype=np.float64).reshape(-1, 1)
         if exclude is None or not np.any(exclude):
-            return -a * self.perf_norm + (1.0 - a) * self.price_norm
+            return self.perf_norm, self.price_norm
         m = ~exclude
         perf_pos = self.perf[m & (self.perf > 0)]
         perf_min = float(perf_pos.min()) if perf_pos.size else 1.0
@@ -150,7 +156,14 @@ class CompiledMarket:
         sp_min = float(prices.min()) if prices.size else 1.0
         if sp_min <= 0:
             raise ValueError("spot prices must be positive")
-        return -a * (self.perf / perf_min) + (1.0 - a) * (self.price / sp_min)
+        return self.perf / perf_min, self.price / sp_min
+
+    def coefficients(self, alphas: np.ndarray,
+                     exclude: Optional[np.ndarray] = None) -> np.ndarray:
+        """Broadcast Eq. 4–5 over an α grid: (n_alpha, n_items)."""
+        a = np.asarray(alphas, dtype=np.float64).reshape(-1, 1)
+        perf_norm, price_norm = self.norms(exclude)
+        return -a * perf_norm + (1.0 - a) * price_norm
 
 
 def compile_market(items: Sequence[CandidateItem]) -> CompiledMarket:
@@ -224,64 +237,73 @@ def reweight_market(market: CompiledMarket, perf: np.ndarray,
 
 
 # ---------------------------------------------------------------------------
-# Memory-flat covering knapsack: value pass, LP pruning, D&C backtracking
+# Covering knapsack: LP pruning + backend value pass + improvement-bit decode
 # ---------------------------------------------------------------------------
 
 def _cover_dp(bpods: np.ndarray, bcosts: np.ndarray, target: int,
               ) -> np.ndarray:
-    """Forward value pass: dp[j] = min cost of a bundle subset with ≥ j pods.
-
-    O(target) memory; the 0/1 semantics hold because ``dp[:-pb] + cb`` is
-    materialised before the in-place minimum writes back.
+    """Reference forward value pass: dp[j] = min cost of a bundle subset
+    with ≥ j pods.  Kept as the plain-numpy spec of the backend kernel
+    (``repro.core.backend``) for tests; the production path uses the
+    backend's fused value-pass-with-bits instead.
     """
     dp = np.full(target + 1, _INF)
     dp[0] = 0.0
+    scratch = np.empty(target + 1)
     for b in range(len(bpods)):
         pb = int(bpods[b])
         cb = bcosts[b]
-        if pb > target:
-            np.minimum(dp, cb, out=dp)
+        if not np.isfinite(cb):
             continue
-        np.minimum(dp[pb:], dp[:-pb] + cb, out=dp[pb:])
+        if pb > target:
+            np.minimum(dp[1:], cb, out=dp[1:])
+            continue
+        k = target + 1 - pb
+        cand = np.add(dp[:k], cb, out=scratch[:k])
+        np.minimum(dp[pb:], cand, out=dp[pb:])
         if pb > 1:
             np.minimum(dp[1:pb], dp[0] + cb, out=dp[1:pb])
     return dp
 
 
-def _cover_dp_batch(bpods: np.ndarray, costs: np.ndarray, target: int,
-                    ) -> np.ndarray:
-    """Vectorized (n_alpha × target+1) value pass over a shared bundle set.
-
-    The shift pattern (``bpods``) is α-independent, so a single pass over
-    the bundle axis updates every α row at once; rows where a bundle is
-    masked out carry +inf cost and never win the minimum.
-    """
-    n_rows = costs.shape[0]
-    dp = np.full((n_rows, target + 1), _INF)
-    dp[:, 0] = 0.0
-    col = np.empty((n_rows, 1))
-    for b in range(len(bpods)):
-        pb = int(bpods[b])
-        col[:, 0] = costs[:, b]
-        if pb > target:
-            np.minimum(dp, col, out=dp)
-            continue
-        np.minimum(dp[:, pb:], dp[:, :-pb] + col, out=dp[:, pb:])
-        if pb > 1:
-            np.minimum(dp[:, 1:pb], dp[:, :1] + col, out=dp[:, 1:pb])
-    return dp
+#: core-DP upper-bound tuning for :func:`_lp_prune`: the DP runs over the
+#: best-rate ``max(k_greedy + _CORE_PAD, _CORE_MIN)`` bundles (the knapsack
+#: "core", where optimal solutions live in practice), and only at all when
+#: the greedy bound alone leaves more than ``_CORE_TRIGGER`` bundles alive
+#: (a near-optimal UB is what makes the LP filter bite; a cheap loose one
+#: measurably does not).
+_CORE_PAD = 33
+_CORE_MIN = 96
+_CORE_TRIGGER = 160
 
 
 def _lp_prune(bpods: np.ndarray, bcosts: np.ndarray, target: int,
-              ) -> np.ndarray:
+              ub_cache: Optional[dict] = None) -> np.ndarray:
     """Exact LP-bound pruning: drop bundles no optimal solution can use.
 
     Sort by unit cost; the fractional greedy gives a lower bound LP(j) for
     covering j pods and the integral greedy a feasible upper bound UB.  Any
     solution containing bundle b costs ≥ c_b + LP(target − p_b), so bundles
     with c_b + LP(target − p_b) > UB are provably absent from *every*
-    optimum and can be removed before the DP.  All optimal solutions
-    survive, hence the pruned instance stays feasible and exact.
+    optimum and can be removed before the decode DP.  All optimal solutions
+    survive for any valid UB, hence the pruned instance stays feasible and
+    exact.
+
+    The greedy prefix can overshoot badly at awkward targets (a loose UB
+    lets almost every bundle survive), so when it leaves more than
+    ``_CORE_TRIGGER`` bundles alive the bound is tightened by a *core DP*:
+    the exact cover DP over the best-rate core bundles (which contain the
+    greedy prefix, so the core optimum covers the target and its cost is a
+    valid — near-optimal in practice — UB).  ``ub_cache`` memoises the
+    core bound per target across repeated calls on one objective.
+
+    This standalone function is the reference statement of the prune rule
+    (and the form the test suite exercises); the production engine inlines
+    the same ingredients in :func:`_solve_rows`, where the argsort and
+    cumulative arrays are shared across every residual of an objective.
+    Every ingredient is a deterministic function of (costs, target), so
+    pruning — like everything else in the engine — is
+    batch-composition-invariant.
     """
     B = len(bpods)
     if B == 0 or target <= 0:
@@ -307,79 +329,237 @@ def _lp_prune(bpods: np.ndarray, bcosts: np.ndarray, target: int,
     lp = prev_c + (resid - prev_p) * (c_sorted[k] / p_sorted[k])
     lp[resid <= 0] = 0.0
     keep = bcosts + lp <= ub * (1.0 + 1e-12) + 1e-9
+    if int(np.sum(keep)) <= _CORE_TRIGGER:
+        return keep
+
+    core_ub = ub_cache.get(target) if ub_cache is not None else None
+    if core_ub is None:
+        K = min(B, max(k_ub + _CORE_PAD, _CORE_MIN))
+        core_ub = float(_cover_dp(bpods[order[:K]], c_sorted[:K],
+                                  target)[target])
+        if ub_cache is not None:
+            ub_cache[target] = core_ub
+    if core_ub < ub:
+        keep = bcosts + lp <= core_ub * (1.0 + 1e-12) + 1e-9
     return keep
 
 
-def _dense_backtrack(bpods: np.ndarray, bcosts: np.ndarray, target: int,
-                     ) -> np.ndarray:
-    """Seed-style history DP for small sub-problems (bounded matrix size)."""
-    B = len(bpods)
-    take = np.zeros(B, dtype=bool)
-    if target <= 0:
-        return take
-    dp = np.full(target + 1, _INF)
-    dp[0] = 0.0
-    history = np.empty((B + 1, target + 1))
-    history[0] = dp
-    for b in range(B):
-        pb = int(bpods[b])
-        cut = min(pb, target + 1)
-        shifted = np.empty(target + 1)
-        shifted[:cut] = dp[0]
-        if cut <= target:
-            shifted[cut:] = dp[: target + 1 - pb]
-        dp = np.minimum(dp, shifted + bcosts[b])
-        history[b + 1] = dp
+def _backtrack_bits(bits: np.ndarray, bpods: np.ndarray, target: int,
+                    ) -> np.ndarray:
+    """Greedy improvement-bit backtrack (the seed backtracker's rule).
+
+    Walking bundles last-to-first with remaining target ``j``: bundle ``b``
+    is taken iff it *strictly improved* (plain ``<``, no epsilon — dp
+    values are exact) the value at coverage ``j`` when the forward pass
+    processed it — equivalently, every optimal solution over bundles
+    ``0..b`` uses it.
+    This single rule is the engine's entire tie-breaking: backends produce
+    bit-identical ``bits``, so selections are backend-invariant
+    (DESIGN.md §12).
+    """
+    take = np.zeros(len(bpods), dtype=bool)
     j = target
-    for b in range(B - 1, -1, -1):
+    for b in range(len(bpods) - 1, -1, -1):
         if j == 0:
             break
-        if history[b + 1][j] < history[b][j] - 1e-12:
+        if bits[b, j]:
             take[b] = True
             j = max(0, j - int(bpods[b]))
     return take
 
 
-def _dc_backtrack(bpods: np.ndarray, bcosts: np.ndarray, target: int,
-                  ) -> np.ndarray:
-    """Min-plus divide-and-conquer backtracking in O(B + target) memory.
+# ---------------------------------------------------------------------------
+# The row engine: every public solver is a view over _solve_rows
+# ---------------------------------------------------------------------------
 
-    dp over a disjoint union L ⊎ R satisfies
-        dp[t] = min_j dp_L[j] + dp_R[t − j],
-    so the split of the target between the two halves is recoverable from
-    two value passes and an O(t) min-convolution — no history matrix.  Work
-    telescopes to ≈2 full value passes (targets shrink geometrically).
+@dataclasses.dataclass
+class SolveRow:
+    """One (demand, objective) instance of the stacked engine invocation.
+
+    ``key`` identifies the objective: rows with equal ``key`` MUST carry
+    identical ``coef``/``active`` arrays (the caller's contract) and then
+    share saturation analysis, bundle compaction, and — when their
+    LP-pruned bundle sets coincide — one padded backend DP row.
     """
-    B = len(bpods)
-    if target <= 0:
-        return np.zeros(B, dtype=bool)
-    if B <= _DENSE_BUNDLES or target <= _DENSE_TARGET:
-        return _dense_backtrack(bpods, bcosts, target)
-    mid = B // 2
-    dp_l = _cover_dp(bpods[:mid], bcosts[:mid], target)
-    dp_r = _cover_dp(bpods[mid:], bcosts[mid:], target)
-    tot = dp_l + dp_r[::-1]
-    j1 = int(np.argmin(tot))
-    if not np.isfinite(tot[j1]):
-        raise RuntimeError("D&C backtracking hit an infeasible split")
-    take = np.empty(B, dtype=bool)
-    take[:mid] = _dc_backtrack(bpods[:mid], bcosts[:mid], j1)
-    take[mid:] = _dc_backtrack(bpods[mid:], bcosts[mid:], target - j1)
-    return take
+
+    req_pods: int
+    alpha: float
+    coef: np.ndarray                       # (n,) Eq. 4–5 objective row
+    active: np.ndarray                     # (n,) structural & ~exclude
+    key: Hashable                          # objective identity for grouping
 
 
-def _solve_residual(bpods: np.ndarray, bcosts: np.ndarray, target: int,
-                    ) -> Tuple[np.ndarray, int]:
-    """Exact counts (bundle take-mask) for the residual covering knapsack.
+def _solve_rows(market: CompiledMarket, rows: Sequence[SolveRow],
+                backend: Optional[SolverBackend] = None,
+                ) -> Tuple[List[Optional[List[int]]], List[IlpStats]]:
+    """Solve every row exactly, deduplicating shared structure.
 
-    Returns (take mask over the given bundles, number of bundles that
-    survived LP pruning).  Assumes feasibility was checked by the caller.
+    Pipeline (DESIGN.md §12).  Per objective key: saturation mask, covered
+    capacity, residual-DP bundle compaction, and one rate-order argsort.
+    Per unique (key, residual): LP pruning — any bundle b with
+    ``c_b + LP(residual − p_b)`` above a feasible upper bound is provably
+    in no optimal solution.  The bound starts as the integral greedy
+    prefix; when that alone leaves more than ``_CORE_TRIGGER`` bundles
+    alive, a *core DP* (value-only, over the ``max(k_greedy + _CORE_PAD,
+    _CORE_MIN)`` best-rate bundles, where optimal solutions live in
+    practice) tightens it to near-optimal, and the surviving set of the
+    tighter test is re-derived (always a subset of the greedy keep).  The
+    final improvement-bit DP then runs over each plan's kept bundles in
+    market order and its bits decode the selection.  Both backend phases
+    stack all plans into one dispatch each.  Every choice is a
+    deterministic function of (objective, residual), so a row's selection
+    is independent of what else shares the batch — the scalar path IS the
+    one-row batch.
     """
-    keep = _lp_prune(bpods, bcosts, target)
-    kept_idx = np.flatnonzero(keep)
-    take = np.zeros(len(bpods), dtype=bool)
-    take[kept_idx] = _dc_backtrack(bpods[kept_idx], bcosts[kept_idx], target)
-    return take, len(kept_idx)
+    backend = backend or get_backend()
+    n = market.n
+    results: List[Optional[List[int]]] = [None] * len(rows)
+    stats: List[Optional[IlpStats]] = [None] * len(rows)
+
+    # -- per-objective saturation analysis ---------------------------------
+    obj_cache: dict = {}                   # key -> per-objective dict
+    for r in rows:
+        o = obj_cache.get(r.key)
+        if o is None:
+            neg = (r.coef < 0) & r.active
+            covered = int(np.sum(market.pods[neg] * market.bound[neg]))
+            in_dp = r.active & ~neg
+            capacity = int(np.sum(market.pods[in_dp] * market.bound[in_dp]))
+            obj_cache[r.key] = o = {
+                "neg": neg, "covered": covered, "in_dp": in_dp,
+                "capacity": capacity, "coef": r.coef, "sat_counts": None,
+                "sat_obj": None, "bundles": None, "rate": None,
+            }
+
+    def _saturated(o) -> Tuple[np.ndarray, float]:
+        if o["sat_counts"] is None:
+            counts = np.zeros(n, dtype=np.int64)
+            counts[o["neg"]] = market.bound[o["neg"]]
+            o["sat_counts"] = counts
+            o["sat_obj"] = float(np.sum(o["coef"][o["neg"]]
+                                        * market.bound[o["neg"]]))
+        return o["sat_counts"], o["sat_obj"]
+
+    def _bundles(o) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        if o["bundles"] is None:
+            bidx = np.flatnonzero(o["in_dp"][market.b_item])
+            o["bundles"] = (bidx, market.b_pods[bidx],
+                            o["coef"][market.b_item[bidx]]
+                            * market.b_copies[bidx])
+        return o["bundles"]
+
+    def _rate(o):
+        """Rate-order view of the objective's DP bundles (argsort shared
+        across every residual of the objective)."""
+        if o["rate"] is None:
+            _, bpods, bcosts = _bundles(o)
+            order = np.argsort(bcosts / bpods, kind="stable")
+            p_sorted = bpods[order].astype(np.float64)
+            c_sorted = bcosts[order]
+            o["rate"] = (order, p_sorted, c_sorted,
+                         np.cumsum(p_sorted), np.cumsum(c_sorted))
+        return o["rate"]
+
+    def _lp_bound(o, residual: int) -> np.ndarray:
+        """Fractional greedy lower bound LP(residual − p_b) per bundle."""
+        _, bpods, _bc = _bundles(o)
+        order, p_sorted, c_sorted, cum_p, cum_c = _rate(o)
+        rb = np.maximum(residual - bpods, 0).astype(np.float64)
+        kk = np.searchsorted(cum_p, rb)
+        prev_p = np.where(kk > 0, cum_p[np.maximum(kk - 1, 0)], 0.0)
+        prev_c = np.where(kk > 0, cum_c[np.maximum(kk - 1, 0)], 0.0)
+        lp = prev_c + (rb - prev_p) * (c_sorted[kk] / p_sorted[kk])
+        lp[rb <= 0] = 0.0
+        return lp
+
+    # -- classify rows; one plan per unique (objective, residual) ----------
+    plans: dict = {}
+    row_plan: List = []       # per row: (kind, obj-or-plan, residual)
+    for r in rows:
+        o = obj_cache[r.key]
+        residual = max(0, r.req_pods - o["covered"])
+        if residual == 0:
+            row_plan.append(("sat", o, 0))
+            continue
+        if o["capacity"] < residual:
+            row_plan.append(("none", o, residual))
+            continue
+        pkey = (r.key, residual)
+        plan = plans.get(pkey)
+        if plan is None:
+            order, _p, _c, cum_p, cum_c = _rate(o)
+            k_ub = int(np.searchsorted(cum_p, residual))
+            lp = _lp_bound(o, residual)
+            _, _bp, bcosts = _bundles(o)
+            ub = float(cum_c[k_ub])            # integral greedy prefix
+            keep = bcosts + lp <= ub * (1.0 + 1e-12) + 1e-9
+            core = None
+            if int(np.sum(keep)) > _CORE_TRIGGER:
+                # loose greedy bound: plan a core DP to tighten it first
+                K = min(len(order), max(k_ub + _CORE_PAD, _CORE_MIN))
+                core = order[:K]
+            plans[pkey] = plan = {
+                "o": o, "resid": residual, "lp": lp, "ub": ub,
+                "core": core, "keep": keep, "counts": None,
+                "objective": _INF, "n_bundles": 0}
+        row_plan.append(("dp", plan, residual))
+
+    plan_list = list(plans.values())
+
+    # -- phase 1: core upper bounds (value-only, one dispatch) -------------
+    cored = [p for p in plan_list if p["core"] is not None]
+    if cored:
+        reqs = []
+        for p in cored:
+            _, bpods, bcosts = _bundles(p["o"])
+            reqs.append((bpods[p["core"]], bcosts[p["core"]], p["resid"]))
+        for p, dp in zip(cored, backend.cover_values(reqs)):
+            # the core contains the greedy cover prefix, so its optimum is
+            # finite and ≤ the greedy bound; survivors of the tighter test
+            # are a subset of the greedy keep
+            core_ub = float(dp[p["resid"]])
+            if core_ub < p["ub"]:
+                p["ub"] = core_ub
+                _, _bp, bcosts = _bundles(p["o"])
+                p["keep"] = bcosts + p["lp"] <= core_ub * (1.0 + 1e-12) + 1e-9
+
+    # -- phase 2: the decode DP over each plan's kept set ------------------
+    # dispatched in backend-preferred slices: the host backend keeps the
+    # live bits working set small, accelerator backends take it all at once
+    chunk = max(1, getattr(backend, "max_group_batch", len(plan_list) or 1))
+    for lo in range(0, len(plan_list), chunk):
+        part = plan_list[lo:lo + chunk]
+        reqs = []
+        for p in part:
+            _, bpods, bcosts = _bundles(p["o"])
+            p["kept"] = np.flatnonzero(p["keep"])    # market bundle order
+            p["n_bundles"] = len(p["kept"])
+            reqs.append((bpods[p["kept"]], bcosts[p["kept"]], p["resid"]))
+        for p, (dp, bits) in zip(part, backend.cover_bits(reqs)):
+            bidx, bpods, _bc = _bundles(p["o"])
+            take = _backtrack_bits(bits, bpods[p["kept"]], p["resid"])
+            p["counts"] = bidx[p["kept"][take]]
+            p["objective"] = float(dp[p["resid"]])
+
+    # -- assemble rows (duplicates share decoded plans) --------------------
+    for i, (r, (kind, ctx, residual)) in enumerate(zip(rows, row_plan)):
+        o = ctx if kind != "dp" else ctx["o"]
+        if kind == "none":
+            stats[i] = IlpStats(n, 0, residual, _INF)
+            continue
+        sat_counts, sat_obj = _saturated(o)
+        if kind == "sat":
+            results[i] = list(map(int, sat_counts))
+            stats[i] = IlpStats(n, 0, 0, sat_obj)
+            continue
+        plan = ctx
+        counts = sat_counts.copy()
+        taken = plan["counts"]
+        np.add.at(counts, market.b_item[taken], market.b_copies[taken])
+        results[i] = list(map(int, counts))
+        stats[i] = IlpStats(n, plan["n_bundles"], residual,
+                            sat_obj + plan["objective"])
+    return results, stats
 
 
 # ---------------------------------------------------------------------------
@@ -392,63 +572,44 @@ def _empty_market_result(req_pods: int, return_stats: bool):
     return (result, stats) if return_stats else result
 
 
+def _checked_market(items: Sequence[CandidateItem],
+                    market: Optional[CompiledMarket]) -> CompiledMarket:
+    if market is None:
+        return compile_market(items)
+    if market.n != len(items):
+        raise ValueError(f"market was compiled from {market.n} items but "
+                         f"{len(items)} were passed — stale CompiledMarket?")
+    return market
+
+
 def solve_ilp(items: Sequence[CandidateItem], req_pods: int, alpha: float,
               return_stats: bool = False,
               market: Optional[CompiledMarket] = None,
               exclude: Optional[np.ndarray] = None,
+              backend: Optional[SolverBackend] = None,
+              coef: Optional[np.ndarray] = None,
               ) -> Optional[List[int]] | Tuple[Optional[List[int]], IlpStats]:
     """Exact solver for Eq. 5.  Returns x_i per item (None if infeasible).
 
     ``market`` reuses a :class:`CompiledMarket` (skips preprocessing);
     ``exclude`` is a per-item boolean mask of offerings barred from the
     solution (the §4.1 interrupted-offerings cache), applied at solve time
-    so the compiled market survives interrupt churn.
+    so the compiled market survives interrupt churn.  ``coef`` optionally
+    supplies the precomputed objective row (GSS evaluators cache
+    ``market.norms(exclude)`` and rebuild rows per probe — bit-identical
+    to the uncached path); it must equal
+    ``market.coefficients([alpha], exclude)[0]``.
     """
-    if market is None:
-        market = compile_market(items)
-    elif market.n != len(items):
-        raise ValueError(f"market was compiled from {market.n} items but "
-                         f"{len(items)} were passed — stale CompiledMarket?")
+    market = _checked_market(items, market)
     if market.n == 0:
         return _empty_market_result(req_pods, return_stats)
-
-    coef = market.coefficients(np.array([alpha]), exclude)[0]
-    counts, stats = _solve_compiled(market, req_pods, coef, exclude)
-    return (counts, stats) if return_stats else counts
-
-
-def _solve_compiled(market: CompiledMarket, req_pods: int, coef: np.ndarray,
-                    exclude: Optional[np.ndarray],
-                    ) -> Tuple[Optional[List[int]], IlpStats]:
-    """Single-α solve against a compiled market (saturate → prune → DP)."""
-    n = market.n
+    if coef is None:
+        coef = market.coefficients(np.array([alpha]), exclude)[0]
     active = market.structural if exclude is None else (
         market.structural & ~exclude)
-
-    counts = np.zeros(n, dtype=np.int64)
-    neg = (coef < 0) & active
-    counts[neg] = market.bound[neg]
-    covered = int(np.sum(market.pods[neg] * market.bound[neg]))
-    objective = float(np.sum(coef[neg] * market.bound[neg]))
-
-    residual = max(0, req_pods - covered)
-    if residual == 0:
-        return list(map(int, counts)), IlpStats(n, 0, 0, objective)
-
-    in_dp = active & ~neg
-    if int(np.sum(market.pods[in_dp] * market.bound[in_dp])) < residual:
-        return None, IlpStats(n, 0, residual, _INF)
-
-    b_mask = in_dp[market.b_item]
-    bidx = np.flatnonzero(b_mask)
-    bpods = market.b_pods[bidx]
-    bcosts = coef[market.b_item[bidx]] * market.b_copies[bidx]
-    take, n_bundles = _solve_residual(bpods, bcosts, residual)
-    taken = bidx[take]
-    np.add.at(counts, market.b_item[taken], market.b_copies[taken])
-    objective += float(np.sum(coef[market.b_item[taken]]
-                              * market.b_copies[taken]))
-    return list(map(int, counts)), IlpStats(n, n_bundles, residual, objective)
+    results, stats = _solve_rows(
+        market, [SolveRow(req_pods, alpha, coef, active, key=0)], backend)
+    return (results[0], stats[0]) if return_stats else results[0]
 
 
 def solve_ilp_batch(items: Sequence[CandidateItem], req_pods: int,
@@ -456,95 +617,123 @@ def solve_ilp_batch(items: Sequence[CandidateItem], req_pods: int,
                     market: Optional[CompiledMarket] = None,
                     exclude: Optional[np.ndarray] = None,
                     return_stats: bool = False,
+                    backend: Optional[SolverBackend] = None,
                     ) -> List[Optional[List[int]]] | Tuple[
                         List[Optional[List[int]]], List[IlpStats]]:
-    """Solve Eq. 5 for every α of a prescan grid in one vectorized pass.
+    """Solve Eq. 5 for every α of a prescan grid in one engine invocation.
 
-    The bundle structure is α-independent; only objective coefficients vary.
-    Per-α saturation masks come from broadcasting the coefficient formula
-    over the α grid; feasibility is a shared capacity comparison; counts
-    are decoded per α with the memory-flat D&C backtracker on the LP-pruned
-    union bundle set.  With ``return_stats`` the per-α objectives come from
-    a single vectorized (n_alpha × R_max+1) numpy DP whose shift pattern is
-    the common bundle pod-size vector — the test suite cross-checks those
-    objectives against the decoded counts.
+    The bundle structure is α-independent; only objective coefficients vary
+    (one broadcast over the grid).  Rows that saturate the demand skip the
+    DP entirely; the rest share LP-pruned backend DP rows wherever their
+    pruned bundle sets coincide (:func:`_solve_rows`).
     """
-    alphas = np.asarray(list(alphas), dtype=np.float64)
-    if market is None:
-        market = compile_market(items)
-    elif market.n != len(items):
-        raise ValueError(f"market was compiled from {market.n} items but "
-                         f"{len(items)} were passed — stale CompiledMarket?")
-    n_alpha = len(alphas)
+    grid = [float(a) for a in alphas]
+    market = _checked_market(items, market)
     if market.n == 0:
         single = _empty_market_result(req_pods, True)
-        results = [single[0] for _ in range(n_alpha)]
-        stats = [single[1] for _ in range(n_alpha)]
+        results = [single[0] for _ in grid]
+        stats = [single[1] for _ in grid]
         return (results, stats) if return_stats else results
-
+    coef2d = market.coefficients(np.asarray(grid, dtype=np.float64), exclude)
     active = market.structural if exclude is None else (
         market.structural & ~exclude)
-    coef2d = market.coefficients(alphas, exclude)            # (A, n)
-    neg2d = (coef2d < 0) & active                            # saturation masks
-    pods_x_bound = (market.pods * market.bound).astype(np.float64)
-    covered = neg2d @ pods_x_bound                           # (A,)
-    sat_obj = np.sum(np.where(neg2d, coef2d * market.bound, 0.0), axis=1)
-    residual = np.maximum(0, req_pods - covered).astype(np.int64)
-    in_dp = active & ~neg2d
-    capacity = in_dp @ pods_x_bound
-    feasible = capacity >= residual
-
-    need_dp = feasible & (residual > 0)
-    results: List[Optional[List[int]]] = [None] * n_alpha
-    stats: List[IlpStats] = [IlpStats(market.n, 0, int(residual[a]), _INF)
-                             for a in range(n_alpha)]
-
-    # rows solved by saturation alone
-    for a in np.flatnonzero(feasible & (residual == 0)):
-        counts = np.zeros(market.n, dtype=np.int64)
-        counts[neg2d[a]] = market.bound[neg2d[a]]
-        results[a] = list(map(int, counts))
-        stats[a] = IlpStats(market.n, 0, 0, float(sat_obj[a]))
-
-    rows = np.flatnonzero(need_dp)
-    if rows.size:
-        r_max = int(residual[rows].max())
-        # per-row bundle costs over the shared bundle set; masked rows -> inf
-        b_coef = coef2d[np.ix_(rows, market.b_item)]         # (rows, B)
-        b_costs = b_coef * market.b_copies
-        b_costs[~in_dp[np.ix_(rows, market.b_item)]] = _INF
-        # union LP prune across rows: keep a bundle if any row keeps it
-        keep_union = np.zeros(market.n_bundles, dtype=bool)
-        keeps = []
-        for ri, a in enumerate(rows):
-            keep = np.zeros(market.n_bundles, dtype=bool)
-            row_ok = np.isfinite(b_costs[ri])
-            ok_idx = np.flatnonzero(row_ok)
-            keep[ok_idx] = _lp_prune(market.b_pods[ok_idx],
-                                     b_costs[ri, ok_idx], int(residual[a]))
-            keeps.append(keep)
-            keep_union |= keep
-        dp = None
-        if return_stats:    # objectives ride one vectorized (A × R+1) DP
-            union_idx = np.flatnonzero(keep_union)
-            dp = _cover_dp_batch(market.b_pods[union_idx],
-                                 b_costs[:, union_idx], r_max)
-
-        for ri, a in enumerate(rows):
-            r = int(residual[a])
-            counts = np.zeros(market.n, dtype=np.int64)
-            counts[neg2d[a]] = market.bound[neg2d[a]]
-            row_idx = np.flatnonzero(keeps[ri])
-            take = _dc_backtrack(market.b_pods[row_idx],
-                                 b_costs[ri, row_idx], r)
-            taken = row_idx[take]
-            np.add.at(counts, market.b_item[taken], market.b_copies[taken])
-            results[a] = list(map(int, counts))
-            if dp is not None:
-                obj = float(sat_obj[a]) + float(dp[ri, r])
-                stats[a] = IlpStats(market.n, len(row_idx), r, obj)
-
+    rows = [SolveRow(req_pods, a, coef2d[k], active, key=a)
+            for k, a in enumerate(grid)]
+    results, stats = _solve_rows(market, rows, backend)
     return (results, stats) if return_stats else results
+
+
+def solve_ilp_many(items: Sequence[CandidateItem],
+                   requests: Sequence[int],
+                   alphas: Sequence[float] | Sequence[Sequence[float]],
+                   market: Optional[CompiledMarket] = None,
+                   excludes: Optional[Sequence[Optional[np.ndarray]]] = None,
+                   backend: Optional[SolverBackend] = None,
+                   return_stats: bool = False,
+                   ) -> List[List[Optional[List[int]]]] | Tuple[
+                       List[List[Optional[List[int]]]], List[List[IlpStats]]]:
+    """The cross-decision batch (DESIGN.md §12): solve every (decision, α)
+    pair of a FleetSim tick in one engine invocation.
+
+    ``requests[d]`` is decision ``d``'s demand, ``alphas`` either one grid
+    shared by all decisions or a per-decision list of grids, and
+    ``excludes[d]`` its §4.1 exclusion mask (or None).  Decisions that
+    share (mask, α) share one objective row and saturation analysis;
+    those additionally sharing the residual share the entire prune + DP +
+    decode plan — the (n_decisions × n_α) stack collapses to its unique
+    (objective, residual) pairs before the backend dispatches.  Per-row
+    selections are bit-identical to per-decision :func:`solve_ilp_batch`
+    calls.
+
+    Returns one list of per-α count vectors (``None`` = infeasible) per
+    decision, ``alphas``-shaped.
+    """
+    n_dec = len(requests)
+    shared_grid = not n_dec or np.isscalar(alphas[0]) or isinstance(
+        alphas[0], (int, float))
+    grids: List[List[float]] = (
+        [[float(a) for a in alphas]] * n_dec if shared_grid
+        else [[float(a) for a in g] for g in alphas])
+    if len(grids) != n_dec:
+        raise ValueError("per-decision alphas must match len(requests)")
+    if excludes is None:
+        excludes = [None] * n_dec
+    if len(excludes) != n_dec:
+        raise ValueError("excludes must match len(requests)")
+    market = _checked_market(items, market)
+
+    if market.n == 0:
+        out, st = [], []
+        for d in range(n_dec):
+            single = _empty_market_result(requests[d], True)
+            out.append([single[0] for _ in grids[d]])
+            st.append([single[1] for _ in grids[d]])
+        return (out, st) if return_stats else out
+
+    # dedupe masks -> tokens; per (token, α) one coefficient row
+    mask_tokens: dict = {}
+    masks: List[Optional[np.ndarray]] = []
+    token_of: List[int] = []
+    for ex in excludes:
+        mkey = None if ex is None else ex.tobytes()
+        tok = mask_tokens.get(mkey)
+        if tok is None:
+            tok = len(masks)
+            mask_tokens[mkey] = tok
+            masks.append(ex)
+        token_of.append(tok)
+    per_tok_alphas: List[List[float]] = [[] for _ in masks]
+    per_tok_seen: List[dict] = [{} for _ in masks]
+    for d in range(n_dec):
+        tok = token_of[d]
+        for a in grids[d]:
+            if a not in per_tok_seen[tok]:
+                per_tok_seen[tok][a] = len(per_tok_alphas[tok])
+                per_tok_alphas[tok].append(a)
+    coef_rows: List[np.ndarray] = []
+    actives: List[np.ndarray] = []
+    for tok, mask in enumerate(masks):
+        coef_rows.append(market.coefficients(
+            np.asarray(per_tok_alphas[tok], dtype=np.float64), mask))
+        actives.append(market.structural if mask is None
+                       else market.structural & ~mask)
+
+    rows: List[SolveRow] = []
+    for d in range(n_dec):
+        tok = token_of[d]
+        for a in grids[d]:
+            rows.append(SolveRow(
+                requests[d], a, coef_rows[tok][per_tok_seen[tok][a]],
+                actives[tok], key=(tok, a)))
+    flat, flat_stats = _solve_rows(market, rows, backend)
+
+    out, st, pos = [], [], 0
+    for d in range(n_dec):
+        k = len(grids[d])
+        out.append(flat[pos:pos + k])
+        st.append(flat_stats[pos:pos + k])
+        pos += k
+    return (out, st) if return_stats else out
 
 
 # ---------------------------------------------------------------------------

@@ -23,9 +23,11 @@ from typing import (Callable, Dict, Iterable, List, Optional, Sequence, Set,
 
 import numpy as np
 
+from .backend import SolverBackend
 from .efficiency import (CandidateItem, NodePool, Request, decision_metrics,
                          pods_per_instance)
-from .gss import GssTrace, bracketed_gss, golden_section_search
+from .gss import (GssTrace, bracketed_gss, bracketed_gss_many,
+                  golden_section_search)
 from .ilp import CompiledMarket, compile_market
 from .market import InterruptEvent, Offering
 from .scaling import build_base_price_index, scaled_benchmark_score
@@ -125,6 +127,13 @@ class DecisionMemo:
     def store(self, key, decision: ProvisioningDecision) -> None:
         self._store[key] = decision
 
+    def count_hit(self) -> None:
+        """Record a hit served outside :meth:`fetch` — the collect-then-solve
+        batch path counts a duplicate pending key as a memo hit, keeping the
+        hit/miss counters identical to the sequential path's
+        (DESIGN.md §12)."""
+        self.hits += 1
+
     @property
     def unique_solves(self) -> int:
         return len(self._store)
@@ -132,6 +141,103 @@ class DecisionMemo:
     def stats(self) -> Dict[str, int]:
         return {"memo_hits": self.hits, "memo_misses": self.misses,
                 "memo_unique_solves": self.unique_solves}
+
+
+class PendingDecision:
+    """Placeholder for a decision whose GSS×ILP solve was deferred into a
+    :class:`SolveBatch` (the fleet engine's collect-then-solve tick phase,
+    DESIGN.md §12).  ``resolve()`` is valid only after the owning batch's
+    :meth:`SolveBatch.execute` ran; a *hit* token (duplicate memo key) gets
+    the shared decision re-stamped exactly like a sequential memo hit."""
+
+    __slots__ = ("_job", "_hit", "_wall")
+
+    def __init__(self, job: "_SolveJob", hit: bool, wall: float):
+        self._job = job
+        self._hit = hit
+        self._wall = wall
+
+    def resolve(self) -> ProvisioningDecision:
+        if self._job.decision is None:
+            raise RuntimeError("PendingDecision.resolve() before "
+                               "SolveBatch.execute() — the collect phase "
+                               "must run the batch before launching")
+        if self._hit:
+            return dataclasses.replace(self._job.decision,
+                                       wall_seconds=self._wall,
+                                       cache={"memo_hit": 1.0})
+        return self._job.decision
+
+
+@dataclasses.dataclass
+class _SolveJob:
+    """One deferred guarded-GSS solve plus its decision-builder."""
+
+    items: List[CandidateItem]
+    market: CompiledMarket
+    req_pods: int
+    exclude: Optional[np.ndarray]
+    tolerance: float
+    timer: Callable[[], float]
+    finish: Callable[[Optional[NodePool], GssTrace], ProvisioningDecision]
+    decision: Optional[ProvisioningDecision] = None
+
+
+class SolveBatch:
+    """Collect-then-solve executor (DESIGN.md §12).
+
+    During a fleet tick's collect phase, provisioners with a batch attached
+    enqueue their memo-miss solves here instead of running them inline;
+    duplicate memo keys collapse onto the first job (and count as memo
+    hits, exactly like the sequential path).  ``execute()`` groups the
+    collected jobs by compiled market and runs each group through one
+    :func:`~repro.core.gss.bracketed_gss_many` — every decision's pools and
+    traces are bit-identical to inline solving because the batched search
+    *is* the sequential search at dispatch granularity.
+    """
+
+    def __init__(self, backend: Optional[SolverBackend] = None):
+        self.backend = backend
+        self._jobs: List[_SolveJob] = []
+        self._by_key: Dict = {}
+
+    def __len__(self) -> int:
+        return len(self._jobs)
+
+    def pending(self, key, wall: float) -> Optional[PendingDecision]:
+        """A hit token for an already-enqueued key, else None."""
+        job = self._by_key.get(key)
+        if job is None:
+            return None
+        return PendingDecision(job, hit=True, wall=wall)
+
+    def enqueue(self, key, *, items, market, req_pods, exclude, tolerance,
+                timer, finish) -> PendingDecision:
+        job = _SolveJob(items=items, market=market, req_pods=req_pods,
+                        exclude=exclude, tolerance=tolerance, timer=timer,
+                        finish=finish)
+        self._jobs.append(job)
+        if key is not None:
+            self._by_key[key] = job
+        return PendingDecision(job, hit=False, wall=0.0)
+
+    def execute(self) -> int:
+        """Solve every collected job (one batched search per compiled
+        market) and build their decisions.  Returns the job count."""
+        jobs, self._jobs, self._by_key = self._jobs, [], {}
+        groups: Dict = {}
+        for job in jobs:
+            gkey = (id(job.market), job.tolerance, id(job.timer))
+            groups.setdefault(gkey, []).append(job)
+        for group in groups.values():
+            results = bracketed_gss_many(
+                group[0].items, [j.req_pods for j in group],
+                tolerance=group[0].tolerance, market=group[0].market,
+                excludes=[j.exclude for j in group], timer=group[0].timer,
+                backend=self.backend)
+            for job, (pool, trace) in zip(group, results):
+                job.decision = job.finish(pool, trace)
+        return len(jobs)
 
 
 def exclusion_mask(items: Sequence[CandidateItem],
@@ -191,6 +297,10 @@ class KubePACSProvisioner:
         # cross-replica decision memo (attached by the fleet engine; None =
         # standalone operation, memo lookups disabled)
         self.decision_memo: Optional[DecisionMemo] = None
+        # collect-then-solve batch (attached by the fleet engine; None =
+        # inline solving).  Only the guarded-GSS path batches; the
+        # unguarded search solves inline regardless (DESIGN.md §12).
+        self.solve_batch: Optional[SolveBatch] = None
 
     def _compiled(self, request: Request, catalog: Sequence[Offering],
                   precompiled: Optional[Tuple[List[CandidateItem],
@@ -217,20 +327,46 @@ class KubePACSProvisioner:
     def provision(self, request: Request, catalog: Sequence[Offering],
                   precompiled: Optional[Tuple[List[CandidateItem],
                                               CompiledMarket]] = None,
-                  ) -> ProvisioningDecision:
+                  ) -> ProvisioningDecision | PendingDecision:
+        """One optimization cycle.  With a :class:`SolveBatch` attached (the
+        fleet engine's collect phase) a memo-miss returns a
+        :class:`PendingDecision` token instead of solving inline; the
+        engine resolves tokens after ``SolveBatch.execute()``."""
         t0 = self.timer()
         excluded = self.cache.excluded(self.clock)
         memo = self.decision_memo
         mkey = memo.key(request, excluded) if memo is not None else None
+        batch = self.solve_batch if self.guarded_gss else None
         if mkey is not None:
+            if batch is not None:
+                tok = batch.pending(mkey, self.timer() - t0)
+                if tok is not None:      # same key already collected this
+                    memo.count_hit()     # phase: a memo hit, shared solve
+                    return tok
             hit = memo.fetch(mkey, self.timer() - t0)
             if hit is not None:
                 return hit
         items, market = self._compiled(request, catalog, precompiled)
         exclude = exclusion_mask(items, excluded)
+        if batch is not None:
+            def finish(pool, trace, _request=request, _excluded=excluded,
+                       _mkey=mkey, _t0=t0):
+                return self._finalize(_request, _excluded, pool, trace,
+                                      _t0, _mkey)
+            return batch.enqueue(mkey, items=items, market=market,
+                                 req_pods=request.pods, exclude=exclude,
+                                 tolerance=self.tolerance, timer=self.timer,
+                                 finish=finish)
         search = bracketed_gss if self.guarded_gss else golden_section_search
         pool, trace = search(items, request.pods, tolerance=self.tolerance,
                              market=market, exclude=exclude, timer=self.timer)
+        return self._finalize(request, excluded, pool, trace, t0, mkey)
+
+    def _finalize(self, request: Request, excluded: Set[str],
+                  pool: Optional[NodePool], trace: GssTrace, t0: float,
+                  mkey) -> ProvisioningDecision:
+        """Post-search decision assembly, shared by the inline path and the
+        batch ``finish`` callbacks so both build identical decisions."""
         wall = self.timer() - t0
         if pool is None:   # demand exceeds bounded capacity: surface it
             pool = NodePool(items=[], counts=[], request=request)
@@ -244,7 +380,7 @@ class KubePACSProvisioner:
                                         excluded_offerings=excluded,
                                         metrics=metrics)
         if mkey is not None:
-            memo.store(mkey, decision)
+            self.decision_memo.store(mkey, decision)
         return decision
 
     # -- §4.1 reactive loop ---------------------------------------------------
@@ -257,7 +393,7 @@ class KubePACSProvisioner:
                           surviving_pods: int = 0,
                           precompiled: Optional[Tuple[List[CandidateItem],
                                                       CompiledMarket]] = None,
-                          ) -> Optional[ProvisioningDecision]:
+                          ) -> Optional[ProvisioningDecision | PendingDecision]:
         """Drain the queue, cache interrupted offerings, re-optimize.
 
         ``surviving_pods`` is the capacity still alive in the cluster; the

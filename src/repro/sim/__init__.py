@@ -11,7 +11,7 @@ from .interrupts import (InterruptModel, NullInterruptModel,
                          RebalanceRecommendationModel, make_interrupt_model)
 from .policy import (FixedAlphaPolicy, KarpenterLikePolicy, KubePACSPolicy,
                      KubePACSRiskPolicy, Policy, make_policy)
-from .scenario import Scenario, Shock
+from .scenario import Scenario, Shock, heterogeneous_demand_scenario
 from .trace import TraceRecorder, load_trace, loads_trace
 from .engine import (ClusterSim, LiveMarketSource, ReplaySource,
                      ScriptedMarketSource, SimResult, SimRound, run_replicas,
@@ -24,7 +24,8 @@ __all__ = [
     "PriceCrossingInterruptModel", "RebalanceRecommendationModel",
     "make_interrupt_model", "Policy", "KubePACSPolicy", "KubePACSRiskPolicy",
     "KarpenterLikePolicy",
-    "FixedAlphaPolicy", "make_policy", "Scenario", "Shock", "TraceRecorder",
+    "FixedAlphaPolicy", "make_policy", "Scenario", "Shock",
+    "heterogeneous_demand_scenario", "TraceRecorder",
     "load_trace", "loads_trace", "ClusterSim", "LiveMarketSource",
     "ReplaySource", "ScriptedMarketSource", "SimResult", "SimRound",
     "run_replicas", "script_market_states", "FleetSim", "run_fleet",

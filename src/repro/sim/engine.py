@@ -631,8 +631,12 @@ class ClusterSim:
         """Demand change: scale-ups provision only the shortfall and merge
         with the running pool (capacity is never discarded for free);
         scale-downs keep the pool over-provisioned — consolidation is a
-        billing optimization the paper leaves to Karpenter's own path."""
+        billing optimization the paper leaves to Karpenter's own path.
+        ``Scenario.demand_jitter`` perturbs the scheduled demand per
+        interruption seed (stream-free; identical across engines)."""
         self._accrue_cost(self.time)
+        pods = self.scenario.effective_pods(self.scenario.interrupt_seed,
+                                            self.time, pods)
         self.request = dataclasses.replace(self.request, pods=pods)
         self._record(demand_record(self.time, pods))
         shortfall = pods - self.pool.total_pods
@@ -649,6 +653,10 @@ class ClusterSim:
 
     # -- scenario run ------------------------------------------------------
     def _on_initial(self) -> None:
+        if self.scenario.demand_jitter:
+            self.request = dataclasses.replace(
+                self.request, pods=self.scenario.effective_pods(
+                    self.scenario.interrupt_seed, 0.0, self.scenario.pods))
         self._refresh()
         decision = self.policy.provision(self.request, self._snapshot,
                                          self.time,

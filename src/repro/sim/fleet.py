@@ -26,7 +26,17 @@ scripted market path:
   offerings, policy-state digest) share one GSS×ILP solve through the
   :class:`~repro.core.provisioner.DecisionMemo` hook.  In steady state
   most replicas collapse onto a handful of unique solves per tick,
-  turning O(R·solves) into O(unique·solves) + O(R) array work.
+  turning O(R·solves) into O(unique·solves) + O(R) array work;
+* **collect-then-solve tick phase** (DESIGN.md §12) — when replicas
+  *diverge* (heterogeneous demand, differing exclusions) and the memo
+  stops collapsing, each event gathers every memo-miss decision into a
+  :class:`~repro.core.provisioner.SolveBatch` and solves them as one
+  cross-decision ``bracketed_gss_many`` — a single stacked engine
+  invocation per golden round, dispatched through the pluggable solver
+  backend (``backend=``, numpy or JAX) — before launching.  Decision
+  content is untouched: batched-on and batched-off runs produce
+  byte-identical traces (``batch_decisions=False`` restores the PR 4
+  sequential phase).
 
 Determinism / equality contract: for every seed, the fleet replica's
 ``ProvisioningDecision`` sequence, ``SimRound`` list, ``total_cost``,
@@ -51,10 +61,12 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from ..core.backend import SolverBackend
 from ..core.efficiency import NodePool, Request
 from ..core.market import Offering, pressure_interrupt_probability_batch
 from ..core.market import snapshot_with
-from ..core.provisioner import DecisionMemo, merge_pools
+from ..core.provisioner import (DecisionMemo, PendingDecision, SolveBatch,
+                                merge_pools)
 from .engine import (SimResult, SimRound, _EPS, _INITIAL, _apply_losses,
                      _schedule, _split_pending, accrual_increments,
                      script_market_states, shared_precompile, shock_affected,
@@ -73,7 +85,11 @@ from .trace import TraceRecorder
 
 @dataclasses.dataclass
 class _Replica:
-    """Per-seed state the fleet cannot share: pool, RNG, policy, totals."""
+    """Per-seed state the fleet cannot share: pool, RNG, policy, totals.
+
+    ``request`` is per-replica because ``Scenario.demand_jitter`` makes the
+    demand itself seed-dependent (heterogeneous-demand scenarios); without
+    jitter every replica carries an equal copy of the shared request."""
 
     row: int                              # row in the fleet count matrix
     seed: int
@@ -82,6 +98,7 @@ class _Replica:
     observers: List
     recorder: Optional[TraceRecorder]
     pool: NodePool
+    request: Optional[Request] = None
     pending: List[InterruptNotice] = dataclasses.field(default_factory=list)
     total_cost: float = 0.0
     total_perf_hours: float = 0.0
@@ -113,7 +130,8 @@ class FleetSim:
                  record_traces: bool = False, keep_snapshots: bool = False,
                  observer_factory: Optional[Callable] = None,
                  clock: Optional[Callable[[], float]] = None,
-                 memoize: bool = True):
+                 memoize: bool = True, batch_decisions: bool = True,
+                 backend: Optional[SolverBackend] = None):
         if scenario.apply_fulfillment:
             raise ValueError(
                 "FleetSim does not support apply_fulfillment scenarios: "
@@ -129,6 +147,12 @@ class FleetSim:
         self.states = script_market_states(scenario, self.catalog)
         self.request = scenario.request()
         self.memo: Optional[DecisionMemo] = DecisionMemo() if memoize else None
+        # collect-then-solve tick phase (DESIGN.md §12): decisions whose
+        # policies support batching are gathered per event and solved as
+        # one cross-decision bracketed_gss_many dispatch; decision content
+        # is unchanged (tests prove batched-on ≡ batched-off traces)
+        self.solve_batch: Optional[SolveBatch] = (
+            SolveBatch(backend=backend) if batch_decisions else None)
         self.compile_cache: Dict = {}
         self.cache_stats: Dict[str, int] = {"compile_hits": 0,
                                             "compile_misses": 0}
@@ -155,6 +179,8 @@ class FleetSim:
                                  **policy_kwargs)
             policy.bind(self.catalog)
             policy.set_decision_memo(self.memo)
+            if self.solve_batch is not None:
+                policy.set_solve_batch(self.solve_batch)
             model = make_interrupt_model(scenario.interrupt_model)
             model.reset(self.catalog, int(seed))
             extra = list(observer_factory(self.catalog)) \
@@ -168,7 +194,8 @@ class FleetSim:
             self.replicas.append(_Replica(
                 row=row, seed=int(seed), policy=policy, model=model,
                 observers=[policy, *extra], recorder=recorder,
-                pool=NodePool(items=[], counts=[])))
+                pool=NodePool(items=[], counts=[]),
+                request=self.request))
         # array-resident pool state: counts per (replica, offering), the
         # substrate of the fleet-wide batched interrupt sampling
         self.counts = np.zeros((len(self.replicas), len(self.catalog)),
@@ -212,7 +239,9 @@ class FleetSim:
     def _decide(self, rep: _Replica, call: Callable):
         """Run one replica's decision with the memo context bound to
         (shared market state, policy name, policy-state digest) — the
-        per-replica part of the memo key contract (DESIGN.md §11)."""
+        per-replica part of the memo key contract (DESIGN.md §11).  Under
+        the collect phase the result may be a :class:`PendingDecision`
+        token; :meth:`_resolved` materializes it after the batch runs."""
         if self.memo is None:
             return call()
         self.memo.context = (self._state_idx, rep.policy.name,
@@ -222,11 +251,21 @@ class FleetSim:
         finally:
             self.memo.context = None
 
+    def _execute_batch(self) -> None:
+        if self.solve_batch is not None and len(self.solve_batch):
+            self.solve_batch.execute()
+
+    @staticmethod
+    def _resolved(decision):
+        if isinstance(decision, PendingDecision):
+            return decision.resolve()
+        return decision
+
     # -- per-replica accounting (ClusterSim's exact float sequence, via the
     # shared engine helpers) ------------------------------------------------
     def _accrue_cost(self, rep: _Replica, now: float) -> None:
         dt = now - rep.cost_accrued_to
-        cost, perf = accrual_increments(rep.pool, self.request.pods, dt)
+        cost, perf = accrual_increments(rep.pool, rep.request.pods, dt)
         rep.total_cost += cost
         rep.total_perf_hours += perf
         rep.cost_accrued_to = now
@@ -243,14 +282,23 @@ class FleetSim:
         else:
             self._set_pool(rep, decision.pool)
 
-    # -- events -------------------------------------------------------------
+    # -- events (each: collect decisions → execute batch → launch) ----------
     def _on_initial(self) -> None:
         self._refresh()
-        pre = self._precompiled(self.request)
+        staged = []
         for rep in self.replicas:
-            decision = self._decide(rep, lambda: rep.policy.provision(
-                self.request, self._snapshot, self.time, precompiled=pre))
-            self._launch(rep, decision, "initial")
+            if self.scenario.demand_jitter:
+                rep.request = dataclasses.replace(
+                    rep.request, pods=self.scenario.effective_pods(
+                        rep.seed, 0.0, self.scenario.pods))
+            pre = self._precompiled(rep.request)
+            decision = self._decide(
+                rep, lambda rep=rep, pre=pre: rep.policy.provision(
+                    rep.request, self._snapshot, self.time, precompiled=pre))
+            staged.append((rep, decision))
+        self._execute_batch()
+        for rep, decision in staged:
+            self._launch(rep, self._resolved(decision), "initial")
 
     def _on_shock(self, shock: Shock) -> None:
         if self.record_traces:
@@ -264,17 +312,26 @@ class FleetSim:
         for rep in self.replicas:
             self._accrue_cost(rep, self.time)
         self.request = dataclasses.replace(self.request, pods=pods)
-        self._record_all(demand_record(self.time, pods))
+        staged = []
         for rep in self.replicas:
-            shortfall = pods - rep.pool.total_pods
+            rpods = self.scenario.effective_pods(rep.seed, self.time, pods)
+            rep.request = dataclasses.replace(rep.request, pods=rpods)
+            if rep.recorder is not None:
+                rep.recorder.write(demand_record(self.time, rpods))
+            shortfall = rpods - rep.pool.total_pods
             if shortfall <= 0 and rep.pool.total_nodes:
                 continue
-            repl_request = (dataclasses.replace(self.request, pods=shortfall)
-                            if rep.pool.total_nodes else self.request)
+            repl_request = (dataclasses.replace(rep.request, pods=shortfall)
+                            if rep.pool.total_nodes else rep.request)
             pre = self._precompiled(repl_request)
-            decision = self._decide(rep, lambda: rep.policy.provision(
-                repl_request, self._snapshot, self.time, precompiled=pre))
-            self._launch(rep, decision, "demand",
+            decision = self._decide(
+                rep, lambda rep=rep, req=repl_request, pre=pre:
+                rep.policy.provision(req, self._snapshot, self.time,
+                                     precompiled=pre))
+            staged.append((rep, decision))
+        self._execute_batch()
+        for rep, decision in staged:
+            self._launch(rep, self._resolved(decision), "demand",
                          base_pool=rep.pool if rep.pool.total_nodes else None)
 
     def _on_tick(self, t: float, dt: float) -> None:
@@ -282,12 +339,13 @@ class FleetSim:
         scales = []
         for rep in self.replicas:
             scales.append(useful_scale(rep.pool,     # interval's pool
-                                       self.request.pods))
+                                       rep.request.pods))
             self._accrue_cost(rep, t)
         self._record_all(tick_record(t, dt))
         self._refresh()
         pool_dicts = [rep.pool.as_dict() for rep in self.replicas]
         sampled_fleet = self._sample_fleet(dt, t, pool_dicts)
+        staged = []
         for rep, scale, sampled, pool_dict in zip(self.replicas, scales,
                                                   sampled_fleet, pool_dicts):
             matured = any(n.effective_time <= t + _EPS for n in rep.pending)
@@ -308,12 +366,20 @@ class FleetSim:
             rep.interrupted_nodes += lost_nodes
             decision, shortfall = None, 0
             if effective:
-                shortfall = max(0, self.request.pods - survivors.total_pods)
-                pre = self._precompiled(self.request)
+                shortfall = max(0, rep.request.pods - survivors.total_pods)
+                pre = self._precompiled(rep.request)
                 decision = self._decide(
-                    rep, lambda: rep.policy.on_interrupts(
-                        effective, self.request, self._snapshot,
-                        survivors.total_pods, t, precompiled=pre))
+                    rep, lambda rep=rep, eff=effective, surv=survivors,
+                    pre=pre: rep.policy.on_interrupts(
+                        eff, rep.request, self._snapshot,
+                        surv.total_pods, t, precompiled=pre))
+            staged.append((rep, sampled, effective, survivors, lost_nodes,
+                           lost_pods, lost_perf, shortfall, decision))
+        self._execute_batch()
+        for (rep, sampled, effective, survivors, lost_nodes, lost_pods,
+             lost_perf, shortfall, decision) in staged:
+            decision = self._resolved(decision)
+            if effective:
                 self._set_pool(rep, survivors)
                 if decision is not None:
                     self._launch(rep, decision, "interrupt",
@@ -452,7 +518,8 @@ def run_fleet(scenario: Scenario, interrupt_seeds: Sequence[int], *,
               record_traces: bool = False, keep_snapshots: bool = False,
               observer_factory: Optional[Callable] = None,
               clock: Optional[Callable[[], float]] = None,
-              memoize: bool = True) -> List[SimResult]:
+              memoize: bool = True, batch_decisions: bool = True,
+              backend: Optional[SolverBackend] = None) -> List[SimResult]:
     """Accelerated ``run_replicas``: one :class:`SimResult` per seed,
     per-seed identical to standalone ``ClusterSim`` runs — decisions,
     rounds, and float totals always; the JSONL trace too, but **only with
@@ -464,4 +531,5 @@ def run_fleet(scenario: Scenario, interrupt_seeds: Sequence[int], *,
                     record_traces=record_traces,
                     keep_snapshots=keep_snapshots,
                     observer_factory=observer_factory, clock=clock,
-                    memoize=memoize).run()
+                    memoize=memoize, batch_decisions=batch_decisions,
+                    backend=backend).run()

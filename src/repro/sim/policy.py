@@ -97,6 +97,12 @@ class Policy:
         memo key captures as the resolved excluded frozenset)."""
         return None
 
+    def set_solve_batch(self, batch) -> None:
+        """Attach the fleet engine's collect-then-solve :class:`SolveBatch`
+        (DESIGN.md §12).  Base implementation: no-op — policies without a
+        batchable guarded-GSS solve path simply keep solving inline, which
+        is always correct (batching changes execution, never content)."""
+
     # -- engine observer hooks (no-ops for stateless policies) --------------
     def bind(self, catalog: Sequence[Offering]) -> None:
         """Called once by the engine with the static offering universe."""
@@ -133,6 +139,11 @@ class KubePACSPolicy(Policy):
     def set_decision_memo(self, memo):
         self.decision_memo = memo
         self.provisioner.decision_memo = memo
+
+    def set_solve_batch(self, batch):
+        # the provisioner's guarded path defers memo-miss solves into the
+        # batch; the unguarded variant ignores it (provisioner-side check)
+        self.provisioner.solve_batch = batch
 
     def provision(self, request, snapshot, now, precompiled=None):
         self.provisioner.clock = now

@@ -14,6 +14,8 @@ from __future__ import annotations
 import dataclasses
 from typing import List, Tuple
 
+import numpy as np
+
 from ..core.efficiency import Request
 from ..core.market import Offering, generate_catalog
 
@@ -80,6 +82,8 @@ class Scenario:
     inject_if_idle: bool = False        # §5.4.3 fault injection: if a tick
     #                                     samples no interrupt, kill the
     #                                     largest allocation deterministically
+    demand_jitter: float = 0.0          # per-replica demand jitter amplitude
+    #                                     (fraction; see effective_pods)
 
     def __post_init__(self):
         # normalize order-insensitive and numeric fields so construction
@@ -92,6 +96,30 @@ class Scenario:
                                  for t, p in self.demand_schedule))
         object.__setattr__(self, "duration_hours", float(self.duration_hours))
         object.__setattr__(self, "step_hours", float(self.step_hours))
+        object.__setattr__(self, "demand_jitter", float(self.demand_jitter))
+
+    def effective_pods(self, seed: int, time: float, pods: int) -> int:
+        """Per-replica demand for a (initial or scheduled) demand event.
+
+        With ``demand_jitter`` = j > 0 the base ``pods`` is scaled by a
+        factor drawn uniformly from [1−j, 1+j] — *stream-free*: the draw
+        seeds a fresh generator from (interruption seed, event time, base
+        pods), so it is a pure function of those values, consumes no RNG
+        stream anywhere, and therefore reproduces identically in
+        ``ClusterSim``, ``run_replicas``, ``FleetSim``, and trace replay
+        (the per-seed equality contract, DESIGN.md §12).  Replicas at
+        different seeds see different demands — the heterogeneous-demand
+        regime where the cross-replica DecisionMemo stops collapsing
+        solves and the collect-then-solve batch must carry the load.
+        With ``demand_jitter == 0`` (the default) the base demand passes
+        through untouched, keeping every pre-existing scenario byte-exact.
+        """
+        if not self.demand_jitter:
+            return int(pods)
+        rng = np.random.default_rng(
+            (int(seed) & 0xFFFFFFFF, int(round(time * 3600.0)), int(pods)))
+        factor = 1.0 + self.demand_jitter * (2.0 * rng.random() - 1.0)
+        return max(1, int(round(pods * factor)))
 
     def request(self) -> Request:
         return Request(pods=self.pods, cpu_per_pod=self.cpu_per_pod,
@@ -118,3 +146,27 @@ class Scenario:
             tuple(x) for x in d.get("demand_schedule", ()))
         d["shocks"] = tuple(Shock(**s) for s in d.get("shocks", ()))
         return cls(**d)   # __post_init__ normalizes numerics/order
+
+
+def heterogeneous_demand_scenario(**overrides) -> Scenario:
+    """Standard low-memo-hit stress scenario (DESIGN.md §12).
+
+    Per-replica demand jitter (±15 % at the initial provisioning and at
+    every scheduled demand change) makes each replica's requested pod
+    count unique, so the cross-replica DecisionMemo's keys almost never
+    coincide — the regime the PR 4 fleet engine is weakest in and the
+    collect-then-solve batched tick phase exists for.  Pressure-sampled
+    interrupts plus a mid-run capacity crunch keep the §4.1 exclusion /
+    shortfall machinery exercised while replicas diverge.
+    """
+    base = dict(
+        name="heterogeneous_demand", duration_hours=48.0, step_hours=6.0,
+        pods=160, cpu_per_pod=2.0, mem_per_pod=2.0,
+        demand_schedule=((6.0, 220), (18.0, 140), (30.0, 260)),
+        demand_jitter=0.15,
+        interrupt_model="pressure",
+        shocks=(Shock(time=24.0, kind="capacity", factor=0.7),),
+        policy="kubepacs", catalog_seed=17, max_offerings=200,
+        market_seed=17, interrupt_seed=17)
+    base.update(overrides)
+    return Scenario(**base)

@@ -1,18 +1,35 @@
-"""Optional test dependencies: a drop-in shim for ``hypothesis``.
+"""Optional test dependencies: drop-in shims for ``hypothesis`` and ``jax``.
 
 The property-based tests are a bonus layer on top of the deterministic
 suite; when ``hypothesis`` is missing they should *skip*, not take their
 whole module down at collection time.  Importing ``given``/``settings``/
 ``st`` from here instead of from ``hypothesis`` makes each ``@given`` test
 an individual skip while every deterministic test in the module still runs.
+
+``jax`` is likewise optional for the *solver* path (the control plane's
+only hard dependency is numpy — ``repro.core.backend`` falls back with a
+warning).  ``HAVE_JAX`` / ``requires_jax`` let backend-equivalence tests
+skip individually, and modules that are jax-native (kernels, models,
+roofline) use ``pytest.importorskip("jax")`` to skip at collection on the
+no-jax CI leg.
 """
+
+import pytest
+
+try:
+    import jax  # noqa: F401
+    HAVE_JAX = True
+except ImportError:                                    # pragma: no cover
+    jax = None
+    HAVE_JAX = False
+
+requires_jax = pytest.mark.skipif(not HAVE_JAX,
+                                  reason="jax not installed")
 
 try:
     from hypothesis import given, settings, strategies as st
     HAVE_HYPOTHESIS = True
 except ImportError:                                    # pragma: no cover
-    import pytest
-
     HAVE_HYPOTHESIS = False
 
     def given(*_args, **_kwargs):
@@ -36,4 +53,5 @@ except ImportError:                                    # pragma: no cover
 
     st = _StrategyStub()
 
-__all__ = ["HAVE_HYPOTHESIS", "given", "settings", "st"]
+__all__ = ["HAVE_HYPOTHESIS", "HAVE_JAX", "given", "jax", "requires_jax",
+           "settings", "st"]

@@ -1,0 +1,334 @@
+"""Solver-backend layer (DESIGN.md §12): numpy ≡ jax at the level of
+*selected pools*, cross-decision batching ≡ per-decision solving, the
+collect-then-solve fleet tick phase ≡ the sequential one, the NumPy
+fallback when jax is absent, and the heterogeneous-demand jitter contract.
+"""
+
+import dataclasses
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core import (CandidateItem, NumpyBackend, Offering, Request,
+                        compile_market, preprocess, generate_catalog,
+                        make_backend, objective_coefficients, solve_ilp,
+                        solve_ilp_batch, solve_ilp_many)
+from repro.core import backend as backend_mod
+from repro.core.gss import bracketed_gss, bracketed_gss_many
+from repro.sim import (ClusterSim, FleetSim, run_replicas,
+                       heterogeneous_demand_scenario)
+
+from ._optional import HAVE_JAX, requires_jax
+
+NUMPY = NumpyBackend()
+JAX = make_backend("jax") if HAVE_JAX else None
+
+
+def _mk_item(i, pods, bs, sp, t3):
+    o = Offering(offering_id=f"t{i}@az", instance_type=f"t{i}", family="m",
+                 generation=6, vendor="i", specialization="general",
+                 size="large", region="r", az="az", vcpus=2, mem_gib=8.0,
+                 od_price=sp * 3, spot_price=sp, bs_core=bs, sps_single=3,
+                 t3=t3, interruption_freq=1)
+    return CandidateItem(offering=o, pods=pods, bs=bs, spot_price=sp, t3=t3)
+
+
+def _random_market(rng, max_items=12, max_t3=9):
+    n = int(rng.integers(1, max_items + 1))
+    return [_mk_item(i, int(rng.integers(1, 9)),
+                     float(rng.uniform(1e3, 1e5)),
+                     float(rng.uniform(0.01, 3.0)),
+                     int(rng.integers(0, max_t3)))
+            for i in range(n)]
+
+
+def _random_exclude(rng, n):
+    if n == 0 or rng.random() < 0.4:
+        return None
+    mask = rng.random(n) < 0.3
+    return mask if mask.any() else None
+
+
+# ---------------------------------------------------------- numpy ≡ jax ----
+
+@requires_jax
+def test_jax_equals_numpy_selected_pools_100_markets():
+    """≥100 randomized markets × α grid incl. {0, 1} edges, with and
+    without exclusion masks, empty and infeasible targets: the jax backend
+    must return the *identical count vectors* (not merely equal
+    objectives) as the numpy backend — the bit-identical-selection
+    contract."""
+    rng = np.random.default_rng(11)
+    n_markets = 110
+    n_infeasible = n_masked = 0
+    for _ in range(n_markets):
+        items = _random_market(rng)
+        market = compile_market(items)
+        req = int(rng.integers(0, 90))
+        exclude = _random_exclude(rng, len(items))
+        if exclude is not None:
+            n_masked += 1
+        alphas = [0.0, 1.0] + [float(a) for a in rng.uniform(0, 1, size=3)]
+        got_n = solve_ilp_batch(items, req, alphas, market=market,
+                                exclude=exclude, backend=NUMPY)
+        got_j = solve_ilp_batch(items, req, alphas, market=market,
+                                exclude=exclude, backend=JAX)
+        assert got_n == got_j
+        n_infeasible += sum(c is None for c in got_n)
+    assert n_infeasible > 0 and n_masked > 10
+
+
+@requires_jax
+def test_jax_equals_numpy_empty_market():
+    assert solve_ilp([], 0, 0.5, backend=JAX) == []
+    assert solve_ilp([], 5, 0.5, backend=JAX) is None
+
+
+@requires_jax
+def test_jax_backend_on_real_catalog_cycle():
+    """A full guarded-GSS cycle on a generated catalog returns the same
+    pool and trace through either backend."""
+    cat = generate_catalog(seed=3, max_offerings=150)
+    items = preprocess(cat, Request(pods=800, cpu_per_pod=2, mem_per_pod=2))
+    market = compile_market(items)
+    fake = lambda: 0.0                                     # noqa: E731
+    (pn, tn), = bracketed_gss_many(items, [800], market=market, timer=fake,
+                                   backend=NUMPY)
+    (pj, tj), = bracketed_gss_many(items, [800], market=market, timer=fake,
+                                   backend=JAX)
+    assert pn.as_dict() == pj.as_dict() and pn.alpha == pj.alpha
+    assert tn.alphas == tj.alphas and tn.e_totals == tj.e_totals
+
+
+@requires_jax
+def test_pallas_flag_matches_plain_jax():
+    """The Pallas step kernel (interpret mode on CPU) is bit-identical to
+    the plain scan step."""
+    pallas = make_backend("jax:pallas")
+    rng = np.random.default_rng(5)
+    bpods = rng.integers(1, 40, size=24).astype(np.int64)
+    costs = rng.uniform(0, 3, size=24)
+    costs[rng.random(24) < 0.2] = np.inf
+    (dp_j, bits_j), = JAX.cover_bits([(bpods, costs, 120)])
+    (dp_p, bits_p), = pallas.cover_bits([(bpods, costs, 120)])
+    (dp_n, bits_n), = NUMPY.cover_bits([(bpods, costs, 120)])
+    assert np.array_equal(dp_j, dp_n) and np.array_equal(dp_p, dp_n)
+    assert np.array_equal(bits_j, bits_n) and np.array_equal(bits_p, bits_n)
+
+
+@requires_jax
+def test_jax_cover_values_matches_cover_bits_dp():
+    rng = np.random.default_rng(9)
+    groups = [(rng.integers(1, 30, size=17).astype(np.int64),
+               rng.uniform(0, 2, size=17), int(rng.integers(1, 200)))
+              for _ in range(5)]
+    dps = JAX.cover_values(groups)
+    full = JAX.cover_bits(groups)
+    for dp, (dp2, _bits) in zip(dps, full):
+        assert np.array_equal(dp, dp2)
+
+
+# ------------------------------------------------- cross-decision batch ----
+
+def test_solve_ilp_many_equals_per_decision_batches():
+    """solve_ilp_many over heterogeneous (demand, α grid, mask) decisions
+    returns exactly the per-decision solve_ilp_batch results."""
+    rng = np.random.default_rng(23)
+    for _ in range(25):
+        items = _random_market(rng, max_items=10)
+        market = compile_market(items)
+        n_dec = int(rng.integers(1, 6))
+        reqs = [int(rng.integers(0, 70)) for _ in range(n_dec)]
+        grids = [[0.0, 1.0] + [float(a) for a in rng.uniform(0, 1, size=2)]
+                 for _ in range(n_dec)]
+        excludes = [_random_exclude(rng, len(items)) for _ in range(n_dec)]
+        many = solve_ilp_many(items, reqs, grids, market=market,
+                              excludes=excludes, backend=NUMPY)
+        per = [solve_ilp_batch(items, r, g, market=market, exclude=e,
+                               backend=NUMPY)
+               for r, g, e in zip(reqs, grids, excludes)]
+        assert many == per
+
+
+def test_solve_ilp_many_shared_grid_and_stats():
+    items = _random_market(np.random.default_rng(1), max_items=8)
+    market = compile_market(items)
+    many, stats = solve_ilp_many(items, [10, 25], [0.0, 0.5, 1.0],
+                                 market=market, return_stats=True)
+    assert len(many) == 2 and all(len(row) == 3 for row in many)
+    for d, req in enumerate([10, 25]):
+        for a, alpha in enumerate([0.0, 0.5, 1.0]):
+            counts = many[d][a]
+            if counts is None:
+                assert not np.isfinite(stats[d][a].objective)
+                continue
+            obj = float(np.dot(objective_coefficients(items, alpha), counts))
+            assert stats[d][a].objective == pytest.approx(obj, abs=1e-8)
+            assert sum(c * it.pods for c, it in zip(counts, items)) >= req
+
+
+def test_bracketed_gss_many_equals_sequential():
+    """Lockstep batched GSS ≡ sequential bracketed_gss per decision:
+    pools, α*, and full trace content."""
+    cat = generate_catalog(seed=7, max_offerings=120)
+    items = preprocess(cat, Request(pods=300, cpu_per_pod=2, mem_per_pod=2))
+    market = compile_market(items)
+    rng = np.random.default_rng(2)
+    reqs = [int(300 * (1 + 0.2 * (2 * rng.random() - 1))) for _ in range(7)]
+    excludes = [None, None, *(_random_exclude(rng, len(items))
+                              for _ in range(5))]
+    fake = lambda: 0.0                                     # noqa: E731
+    seq = [bracketed_gss(items, r, market=market, exclude=e, timer=fake)
+           for r, e in zip(reqs, excludes)]
+    many = bracketed_gss_many(items, reqs, market=market, excludes=excludes,
+                              timer=fake)
+    for (p1, t1), (p2, t2) in zip(seq, many):
+        assert (p1 is None) == (p2 is None)
+        if p1 is not None:
+            assert p1.as_dict() == p2.as_dict() and p1.alpha == p2.alpha
+        assert t1.alphas == t2.alphas
+        assert t1.e_totals == t2.e_totals
+        assert t1.ilp_solves == t2.ilp_solves
+
+
+# -------------------------------------------- collect-then-solve fleet ----
+
+def test_fleet_batched_tick_phase_trace_equality():
+    """FleetSim with the collect-then-solve batch on vs off: byte-identical
+    JSONL traces on the heterogeneous-demand scenario (low memo-hit) and on
+    a deterministic-storm scenario (high memo-hit)."""
+    from repro.risk import backtest
+    seeds = [0, 1, 2]
+    for sc in (heterogeneous_demand_scenario(duration_hours=24.0,
+                                             max_offerings=80),
+               backtest.interrupt_storm_scenario(duration_hours=24.0,
+                                                 max_offerings=80)):
+        on = FleetSim(sc, seeds, record_traces=True).run()
+        off = FleetSim(sc, seeds, record_traces=True,
+                       batch_decisions=False).run()
+        for a, b in zip(on, off):
+            assert a.recorder.dumps() == b.recorder.dumps()
+
+
+def test_fleet_batched_memo_counters_match_sequential():
+    """Duplicate pending keys count as memo hits, so the PR 4 counter
+    semantics survive batching (8 identical storm replicas → 1 miss +
+    7 hits per decision event)."""
+    from repro.risk import backtest
+    sc = backtest.interrupt_storm_scenario(duration_hours=24.0,
+                                           max_offerings=80)
+    on = FleetSim(sc, list(range(8)))
+    on.run()
+    off = FleetSim(sc, list(range(8)), batch_decisions=False)
+    off.run()
+    s_on, s_off = on.stats(), off.stats()
+    for k in ("memo_hits", "memo_misses", "memo_unique_solves"):
+        assert s_on[k] == s_off[k]
+    assert s_on["memo_hits"] == 7 * s_on["memo_misses"]
+
+
+def test_fleet_hetero_matches_standalone_bit_for_bit():
+    """Heterogeneous-demand: every fleet replica (batched) is identical to
+    a standalone ClusterSim at the same seed — traces and float totals."""
+    sc = heterogeneous_demand_scenario(duration_hours=24.0, max_offerings=80)
+    seeds = [0, 1, 2]
+    fleet = FleetSim(sc, seeds, record_traces=True).run()
+    per_seed = run_replicas(sc, seeds)
+    for seed, f, p in zip(seeds, fleet, per_seed):
+        single = ClusterSim(
+            dataclasses.replace(sc, interrupt_seed=seed)).run()
+        assert f.recorder.dumps() == single.recorder.dumps()
+        assert f.total_cost == single.total_cost
+        assert f.total_perf_hours == single.total_perf_hours
+        assert f.decision_records() == p.decision_records()
+
+
+def test_fleet_hetero_defeats_memo():
+    """The scenario does its job: per-replica jitter drives the memo hit
+    rate below 50 % (the regime the batched tick phase targets)."""
+    sc = heterogeneous_demand_scenario(duration_hours=24.0, max_offerings=80)
+    sim = FleetSim(sc, list(range(8)))
+    sim.run()
+    stats = sim.stats()
+    lookups = stats["memo_hits"] + stats["memo_misses"]
+    assert lookups > 0
+    assert stats["memo_hits"] / lookups < 0.5
+
+
+# ------------------------------------------------ demand-jitter contract ----
+
+def test_effective_pods_deterministic_and_seed_dependent():
+    sc = heterogeneous_demand_scenario()
+    a = sc.effective_pods(3, 6.0, 220)
+    assert a == sc.effective_pods(3, 6.0, 220)         # pure function
+    assert a != 220 or sc.effective_pods(4, 6.0, 220) != 220
+    vals = {sc.effective_pods(s, 6.0, 220) for s in range(16)}
+    assert len(vals) > 8                               # replicas diverge
+    assert all(1 <= v <= 220 * 1.2 for v in vals)
+    zero = dataclasses.replace(sc, demand_jitter=0.0)
+    assert zero.effective_pods(3, 6.0, 220) == 220     # exact passthrough
+
+
+def test_scenario_roundtrip_keeps_jitter():
+    sc = heterogeneous_demand_scenario()
+    from repro.sim import Scenario
+    assert Scenario.from_dict(sc.to_dict()) == sc
+    # pre-jitter trace headers (no key) still load
+    d = sc.to_dict()
+    del d["demand_jitter"]
+    assert Scenario.from_dict(d).demand_jitter == 0.0
+
+
+def test_jitter_replay_reproduces_decisions():
+    """A recorded heterogeneous-demand trace replays to the identical
+    decision sequence (jitter is re-derived from the header scenario)."""
+    sc = heterogeneous_demand_scenario(duration_hours=18.0, max_offerings=60)
+    res = ClusterSim(sc).run()
+    replay = ClusterSim.replay(res.records).run()
+    assert res.decision_records() == replay.decision_records()
+
+
+# ---------------------------------------------------------- jax fallback ----
+
+def test_backend_falls_back_to_numpy_with_warning(monkeypatch):
+    """Requesting the jax backend without jax installed warns once and
+    returns the numpy backend — core/ilp.py never imports jax itself."""
+    import builtins
+    real_import = builtins.__import__
+
+    def no_jax(name, *args, **kwargs):
+        if name == "jax" or name.startswith("jax."):
+            raise ImportError("no jax in this environment")
+        return real_import(name, *args, **kwargs)
+
+    monkeypatch.setattr(builtins, "__import__", no_jax)
+    monkeypatch.setattr(backend_mod, "_WARNED", False)
+    with pytest.warns(RuntimeWarning, match="falling back"):
+        be = backend_mod.make_backend("jax")
+    assert isinstance(be, NumpyBackend)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")        # second request: warn once
+        assert isinstance(backend_mod.make_backend("jax"), NumpyBackend)
+
+
+def test_env_selects_default_backend(monkeypatch):
+    monkeypatch.setenv("KUBEPACS_SOLVER_BACKEND", "numpy")
+    backend_mod.set_backend(None)
+    try:
+        assert isinstance(backend_mod.get_backend(), NumpyBackend)
+        with pytest.raises(ValueError, match="unknown solver backend"):
+            backend_mod.make_backend("torch")
+    finally:
+        backend_mod.set_backend("numpy")
+
+
+def test_solver_core_importable_without_jax(monkeypatch):
+    """repro.core.ilp/gss must not import jax at module import time: their
+    modules never hold a jax attribute."""
+    import repro.core.ilp as ilp_mod
+    import repro.core.gss as gss_mod
+    for mod in (ilp_mod, gss_mod, backend_mod):
+        assert not hasattr(mod, "jax")
+        src = open(mod.__file__).read().splitlines()
+        assert not any(line.startswith("import jax") for line in src)

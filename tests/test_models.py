@@ -5,7 +5,7 @@ import dataclasses
 
 import numpy as np
 import pytest
-import jax
+jax = pytest.importorskip("jax")  # jax-native module: skip wholesale without jax
 import jax.numpy as jnp
 
 from repro.configs import get_config, list_archs, SHAPES, shape_applicable

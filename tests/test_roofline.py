@@ -3,7 +3,7 @@ collective wire formulas."""
 
 import numpy as np
 import pytest
-import jax
+jax = pytest.importorskip("jax")  # jax-native module: skip wholesale without jax
 import jax.numpy as jnp
 
 from repro.roofline import (HBM_BW, LINK_BW, PEAK_FLOPS, Roofline,
