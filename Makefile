@@ -4,7 +4,7 @@
 PY := PYTHONPATH=src python
 
 .PHONY: verify test bench bench-solver bench-backend bench-risk bench-fleet \
-        docs-check
+        perf-gate docs-check
 
 ## tier-1 gate: full test suite + a smoke pass of the solver microbenchmark
 ## + the docs gate (README quickstart runs, DESIGN.md refs resolve)
@@ -28,11 +28,17 @@ bench:
 bench-solver:
 	$(PY) -m benchmarks.bench_solver --json BENCH_solver.json
 
-## decision-plane backend benchmark (PR 1 path vs batched numpy/jax
-## engines at 250 offerings x 5k pods, 32 jittered decisions); refreshes
-## BENCH_backend.json
+## decision-plane backend benchmark (PR 1 path vs batched numpy / per-
+## dispatch jax / fused device-resident engines; compile vs steady-state
+## split + catalog-size scaling column); refreshes BENCH_backend.json
 bench-backend:
 	$(PY) -m benchmarks.bench_backend --json BENCH_backend.json
+
+## ReFrame-style perf regression gate: re-run the cheap fleet-tick config,
+## compare ratio metrics against PERF_REFERENCE.json within tolerance
+## bands, append to PERF_trajectory.jsonl; `--update` refreshes references
+perf-gate:
+	$(PY) -m benchmarks.perf_gate
 
 ## risk-subsystem backtest (kubepacs_risk vs kubepacs + forecast
 ## calibration); refreshes BENCH_risk.json

@@ -1,0 +1,159 @@
+"""Minimal performance regression gate (the ReFrame pattern): re-run the
+cheap backend-bench config, compare each metric against the checked-in
+reference numbers in ``PERF_REFERENCE.json`` with per-metric tolerance
+bands, fail the build on regression, and append the measurement to a
+versioned trajectory file (``PERF_trajectory.jsonl``) so drift is
+inspectable across commits.
+
+Only *ratio* metrics are gated — speedups of one engine over another
+measured interleaved in the same process — because absolute wall times
+track the CI machine, not the code.  Correctness flags (selection
+equality, zero fused fallbacks) are hard assertions, not bands.
+
+Usage:
+  python -m benchmarks.perf_gate            # gate against references
+  python -m benchmarks.perf_gate --update   # refresh PERF_REFERENCE.json
+  python -m benchmarks.perf_gate --smoke    # fewer decisions (CI)
+
+``make perf-gate`` runs the gate; verify.yml wires it into tier-1.
+"""
+
+from __future__ import annotations
+
+import argparse
+import datetime
+import json
+import os
+import platform
+import sys
+from typing import List, Optional
+
+from benchmarks.bench_backend import bench_tick
+from repro.core import jax_available
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+REFERENCE_PATH = os.path.join(ROOT, "PERF_REFERENCE.json")
+TRAJECTORY_PATH = os.path.join(ROOT, "PERF_trajectory.jsonl")
+
+#: gate config: the FleetSim-shaped fleet tick (100 items × 1 k pods) —
+#: cheap enough for CI, and the regime the fused plane is built for
+GATE_ITEMS = 100
+GATE_PODS = 1000
+
+
+def measure(n_dec: int, repeat: int = 3) -> dict:
+    """One gate measurement: the ratio metrics + correctness flags."""
+    rec = bench_tick(GATE_ITEMS, GATE_PODS, n_dec, repeat=repeat)
+    metrics = {
+        "batched_numpy_speedup_vs_pr1":
+            rec["speedups_vs_pr1"]["batched_numpy"],
+    }
+    checks = {"pr1_equality": rec["equality_checked"]}
+    if rec["jax_available"]:
+        metrics["fused_vs_batched_numpy"] = rec["fused_vs_batched_numpy"]
+        metrics["fused_vs_per_dispatch_jax"] = round(
+            rec["batched_jax_wall_s"] / rec["fused_jax_wall_s"], 2)
+        checks["fused_selections_equal_numpy"] = \
+            rec["fused_jax_selections_equal_numpy"]
+        checks["jax_selections_equal_numpy"] = \
+            rec["batched_jax_selections_equal_numpy"]
+        checks["fused_zero_fallbacks"] = rec["fused_fallback_solves"] == 0
+    return {"config": {"n_items": GATE_ITEMS, "base_pods": GATE_PODS,
+                       "n_decisions": n_dec},
+            "metrics": metrics, "checks": checks,
+            "raw": {k: v for k, v in rec.items()
+                    if k.endswith(("_wall_s", "_compile_s",
+                                   "_ms_per_decision"))}}
+
+
+def gate(measured: dict, reference: dict) -> List[str]:
+    """ReFrame-style check: each measured metric must sit inside
+    ``ref * (1 - lower_tol) .. ref * (1 + upper_tol)`` (upper_tol null =
+    unbounded — being faster is never a regression).  Returns the list of
+    failures (empty = pass)."""
+    failures: List[str] = []
+    for name, ok in measured["checks"].items():
+        if not ok:
+            failures.append(f"correctness check failed: {name}")
+    for name, ref in reference["metrics"].items():
+        got = measured["metrics"].get(name)
+        if got is None:
+            if name.startswith("fused") and not jax_available():
+                continue                       # no-jax leg: ratio not run
+            failures.append(f"metric missing from measurement: {name}")
+            continue
+        lo = ref["value"] * (1.0 - ref["lower_tol"])
+        hi = (float("inf") if ref.get("upper_tol") is None
+              else ref["value"] * (1.0 + ref["upper_tol"]))
+        if not (lo <= got <= hi):
+            failures.append(
+                f"{name}: measured {got} outside "
+                f"[{round(lo, 2)}, {round(hi, 2) if hi != float('inf') else 'inf'}] "
+                f"(reference {ref['value']} -{ref['lower_tol'] * 100:.0f}%)")
+    return failures
+
+
+def _default_reference(measured: dict) -> dict:
+    """References from a fresh measurement.  Bands are deliberately wide
+    (-50 % on every speedup): the gate exists to catch the engine falling
+    off a cliff (a lost jit cache, a host round-trip creeping back into the
+    golden loop), not to police scheduler noise on shared CI hosts."""
+    return {
+        "benchmark": "perf_gate",
+        "config": measured["config"],
+        "machine": platform.machine(),
+        "metrics": {
+            name: {"value": value, "lower_tol": 0.5, "upper_tol": None}
+            for name, value in measured["metrics"].items()
+        },
+    }
+
+
+def run(update: bool = False, smoke: bool = False,
+        repeat: int = 3) -> int:
+    n_dec = 4 if smoke else 8
+    measured = measure(n_dec, repeat=repeat)
+    entry = {
+        "timestamp": datetime.datetime.now(
+            datetime.timezone.utc).isoformat(timespec="seconds"),
+        "python": platform.python_version(),
+        **measured,
+    }
+    with open(TRAJECTORY_PATH, "a") as f:
+        f.write(json.dumps(entry) + "\n")
+    if update or not os.path.exists(REFERENCE_PATH):
+        with open(REFERENCE_PATH, "w") as f:
+            json.dump(_default_reference(measured), f, indent=2)
+        print(f"perf_gate: reference refreshed → {REFERENCE_PATH}")
+        print(json.dumps(measured["metrics"], indent=2))
+        return 0
+    with open(REFERENCE_PATH) as f:
+        reference = json.load(f)
+    failures = gate(measured, reference)
+    for name, value in sorted(measured["metrics"].items()):
+        ref = reference["metrics"].get(name, {}).get("value")
+        print(f"perf_gate: {name} = {value} (reference {ref})")
+    for name, ok in sorted(measured["checks"].items()):
+        print(f"perf_gate: check {name}: {'ok' if ok else 'FAILED'}")
+    if failures:
+        print("perf_gate: REGRESSION")
+        for fail in failures:
+            print(f"  - {fail}")
+        return 1
+    print("perf_gate: pass")
+    return 0
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--update", action="store_true",
+                    help="refresh PERF_REFERENCE.json from this run")
+    ap.add_argument("--smoke", action="store_true",
+                    help="fewer decisions (CI)")
+    ap.add_argument("--repeat", type=int, default=3)
+    args = ap.parse_args(argv if argv is not None else [])
+    return run(update=args.update, smoke=args.smoke, repeat=args.repeat)
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

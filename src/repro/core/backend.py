@@ -15,6 +15,12 @@ implementations:
   bucketed padding so recompilation is bounded.  Optionally (``pallas``
   flag) the inner relaxation step runs as a Pallas kernel — interpreted
   on CPU, lowerable on TPU/GPU — for the jax_pallas north star.
+* :class:`FusedJaxBackend` (``jax:fused`` / ``jax:fused:pallas``) — the
+  device-resident decision plane (DESIGN.md §13): whole GSS batches run
+  as two jitted programs (prescan grid + golden ``lax.while_loop``) with
+  the cover DP, backtrack, and pool scoring fused on device, market
+  arrays uploaded once per content digest, and a host replay that keeps
+  selections bit-identical to NumPy by construction.
 
 Canonical kernel semantics (both backends, float64):
 
@@ -41,20 +47,32 @@ groups that share (costs, kept bundles) can share one padded row.
 JAX is an *optional* dependency of this path: importing this module never
 imports ``jax``.  Requesting the jax backend without jax installed warns
 once and falls back to :class:`NumpyBackend`
-(``KUBEPACS_SOLVER_BACKEND=numpy|jax|jax:pallas`` overrides the default).
+(``KUBEPACS_SOLVER_BACKEND=numpy|jax|jax:pallas|jax:fused|jax:fused:pallas``
+overrides the default).
 """
 
 from __future__ import annotations
 
+import collections
+import math
 import os
 import warnings
-from typing import List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 #: one (bpods, costs, target) residual covering problem; ``bpods`` int64
 #: (all >= 1), ``costs`` float64 (may contain +inf), ``target`` >= 1
 CoverGroup = Tuple[np.ndarray, np.ndarray, int]
+
+#: core-DP upper-bound tuning shared by the host engine (`repro.core.ilp`)
+#: and the fused device program, which must replicate the host's prune
+#: decisions exactly: the core DP runs over the best-rate
+#: ``max(k_greedy + _CORE_PAD, _CORE_MIN)`` bundles and only triggers when
+#: the greedy bound leaves more than ``_CORE_TRIGGER`` bundles alive.
+_CORE_PAD = 33
+_CORE_MIN = 96
+_CORE_TRIGGER = 160
 
 
 class SolverBackend:
@@ -178,10 +196,14 @@ class JaxBackend(SolverBackend):
     pad bundles carry ``pods=1, cost=+inf`` (inert), pad target columns are
     never read back (the kernel's ``j``-prefix is padding-independent).
     ``G``/``B``/``R`` are bucketed so the jit cache stays small across the
-    varying shapes of a simulation run.  All arithmetic runs in float64
-    under a scoped ``enable_x64`` so results are bit-identical to
-    :class:`NumpyBackend` without flipping global precision for unrelated
-    jax users in the process.
+    varying shapes of a simulation run.  All arithmetic runs in float64:
+    constructing any jax backend enables x64 *process-wide* once (an
+    idempotent ``jax.config.update`` at init).  The earlier per-dispatch
+    ``enable_x64`` scoping flipped global trace state between callers,
+    which forced jit re-traces of long-lived programs (the fused
+    ``while_loop`` below most of all) whenever a non-x64 caller ran in
+    between; a process-level init check costs nothing and keeps every
+    compiled program valid for the life of the process.
 
     ``pallas=True`` swaps the inner relaxation step for a Pallas kernel
     (`repro.kernels` idiom); on CPU it runs in interpreter mode — a
@@ -199,6 +221,8 @@ class JaxBackend(SolverBackend):
     def __init__(self, pallas: bool = False):
         import jax  # deferred: jax is optional for the solver path
 
+        if not jax.config.jax_enable_x64:
+            jax.config.update("jax_enable_x64", True)
         self._jax = jax
         self._jnp = jax.numpy
         self.pallas = bool(pallas)
@@ -280,8 +304,6 @@ class JaxBackend(SolverBackend):
     def _dispatch(self, groups, with_bits: bool):
         if not groups:
             return []
-        from jax.experimental import enable_x64
-
         # partition groups into (B, R) shape buckets so one outlier group
         # does not pad every other dispatch up to its size
         buckets: dict = {}
@@ -290,26 +312,873 @@ class JaxBackend(SolverBackend):
                    _bucket(t, self._R_STEPS))
             buckets.setdefault(key, []).append(i)
         out: List = [None] * len(groups)
-        with enable_x64():
-            for (B, R), idxs in buckets.items():
-                G = _bucket(len(idxs), self._G_STEPS)
-                bpods = np.ones((G, B), dtype=np.int64)
-                costs = np.full((G, B), np.inf)
+        for (B, R), idxs in buckets.items():
+            G = _bucket(len(idxs), self._G_STEPS)
+            bpods = np.ones((G, B), dtype=np.int64)
+            costs = np.full((G, B), np.inf)
+            for g, i in enumerate(idxs):
+                bp, bc, _t = groups[i]
+                bpods[g, :len(bp)] = bp
+                costs[g, :len(bc)] = bc
+            res = self._compiled(G, B, R, with_bits)(bpods, costs)
+            if with_bits:
+                dp = np.asarray(res[0])
+                bits = np.asarray(res[1])
                 for g, i in enumerate(idxs):
-                    bp, bc, _t = groups[i]
-                    bpods[g, :len(bp)] = bp
-                    costs[g, :len(bc)] = bc
-                res = self._compiled(G, B, R, with_bits)(bpods, costs)
-                if with_bits:
-                    dp = np.asarray(res[0])
-                    bits = np.asarray(res[1])
-                    for g, i in enumerate(idxs):
-                        bp, _bc, t = groups[i]
-                        out[i] = (dp[g, :t + 1], bits[g, :len(bp), :t + 1])
+                    bp, _bc, t = groups[i]
+                    out[i] = (dp[g, :t + 1], bits[g, :len(bp), :t + 1])
+            else:
+                dp = np.asarray(res)
+                for g, i in enumerate(idxs):
+                    out[i] = dp[g, :groups[i][2] + 1]
+        return out
+
+
+# ---------------------------------------------------------------------------
+# Fused device-resident decision plane (DESIGN.md §13)
+# ---------------------------------------------------------------------------
+
+#: golden ratio shrink factor — the same expression as ``repro.core.gss.PHI``
+#: (both evaluate ``(sqrt(5)-1)/2`` in float64, so the constants are
+#: bit-identical; gss cannot import it from here without a cycle)
+_PHI = (math.sqrt(5.0) - 1.0) / 2.0
+
+_MISS = object()      # lookup sentinel (stored values include None)
+
+
+def _rc_tiers(RC: int) -> List[int]:
+    """Geometric DP-width ladder ``129, 257, 513, …, RC``.
+
+    The cover DP is prefix-closed in the pod index ``j``: every value the
+    solver reads for a row with residual ``r`` lives in ``dp[: r + 1]``,
+    so running the recurrence at any width ``W > r`` yields bitwise the
+    same prefix.  Routing each row to the narrowest tier wider than its
+    residual mirrors the host solver's residual-sized dp rows instead of
+    paying the full ``RC``-wide vector ops for every probe.  x4 rungs:
+    golden probes cluster near the winning alpha, whose residual sits in
+    the top tier anyway, so finer rungs were measured compile-time-only.
+    """
+    tiers: List[int] = []
+    w = 129
+    while w < RC:
+        tiers.append(w)
+        w = (w - 1) * 4 + 1
+    tiers.append(RC)
+    return tiers
+
+#: device-market array order (one tuple per cache entry, jit-stable)
+_MD_FIELDS = ("pods", "bound", "perf", "price", "structural", "real",
+              "b_item", "b_pods", "b_podsf", "b_copies", "b_copiesf",
+              "b_struct")
+
+
+class FusedJaxBackend(JaxBackend):
+    """Fully device-resident decision plane (``make_backend("jax:fused")``).
+
+    Instead of dispatching one cover-DP per golden-section probe (the
+    per-round host↔device round-trips that made PR 5's jax path lose to
+    NumPy), this backend runs the *entire* bracketed GSS on device as two
+    jitted programs:
+
+    * **prescan** — every (decision, grid-α) objective row solved in one
+      program: saturation analysis, LP-bound bundle pruning, core-DP bound
+      tightening, the improvement-bit cover DP, and the bit backtrack are
+      all on-device stages under one ``jit``.
+    * **golden** — a single ``lax.while_loop`` over golden rounds advancing
+      all decisions in lockstep: per round one fused solve of each active
+      decision's probe α plus on-device pool scoring (the ``e_total``
+      formula) to steer the bracket update — no host round-trips between
+      probes.
+
+    **Bit-identical-by-construction contract.**  The device never *decides*
+    anything the host cannot check: every probe's (α, counts) pair is
+    recorded on device and read back once, and the host replay
+    (:class:`_FusedGssRecord` driven by ``bracketed_gss_many``) re-runs the
+    sequential control flow with exact host floats, consuming recorded
+    counts via exact-bitwise α lookup.  Recorded counts are bitwise equal to
+    the host engine's because every arithmetic step of the device row
+    solver mirrors ``repro.core.ilp._solve_rows`` op-for-op (same float64
+    elementwise ops in the same order — sequential-scan cumsums, stable
+    argsorts, identical prune thresholds), with one hazard actively
+    defused: XLA:CPU's LLVM backend contracts ``a*b`` feeding ``c+...``
+    into an FMA inside fused loops, which rounds once where NumPy rounds
+    twice.  Every value-critical product therefore goes through ``rmul`` —
+    round, then bitcast to int64 and XOR with a runtime-zero argument —
+    which is opaque to constant folding and instruction combining, so the
+    product reaches the add pre-rounded exactly like the host's.  A startup
+    self-check verifies this on the live XLA build and disables the fused
+    path (falling back to per-round dispatch) if it fails.  If device
+    control ever diverges from host control (speculation scores disagree
+    with exact scores on a bracket comparison), the host replay simply
+    misses a lookup and solves that α on the NumPy backend — a counted
+    performance event (``fallback_solves``), never a correctness one.
+
+    **Device residency.**  ``CompiledMarket`` arrays are uploaded once and
+    cached on device keyed by ``(market.digest, N_pad, B_pad)`` (LRU,
+    ``device_cache_info()`` exposes hit/miss counters), so FleetSim ticks
+    re-dispatch onto resident arrays; per-item state (masks, demands,
+    brackets) is the only per-tick upload.
+
+    ``pallas=True`` (spec ``"jax:fused:pallas"``) swaps the scan cover-DP
+    stage for a Pallas kernel — grid over bundle blocks, BlockSpec-tiled
+    value rows, improvement bits emitted in-kernel — plus a Pallas scoring
+    kernel; on CPU both run in interpreter mode (a bring-up path), on
+    GPU they lower (f64 Pallas does not lower on TPU).  With the default
+    ``"jax:fused"`` spec, Pallas is selected automatically off-CPU and the
+    ``lax.scan``/``while_loop`` path is the CPU fallback inside the same
+    fused program.
+    """
+
+    name = "jax:fused"
+    supports_fused_gss = True
+
+    #: fused-program bucket ladders.  R is deliberately finer than the base
+    #: backend's (512-multiples beyond 512): every vector op in the fused
+    #: row solver is O(R_pad), so 2048-jump padding would tax each row far
+    #: more than the extra recompiles cost.
+    _N_STEPS = (16, 32, 64, 128, 256, 512, 1024)
+    _BF_STEPS = (32, 64, 128, 192, 256, 384, 512, 640, 768, 896, 1024,
+                 1152, 1280, 1536, 2048)
+    _RF_STEPS = (128, 256, 512)
+    _D_STEPS = (1, 2, 4, 8, 16, 32, 64)
+    _MAX_MARKETS = 8
+
+    def __init__(self, pallas: bool = False):
+        super().__init__(pallas=False)   # base scan path stays the fallback
+        self.fused_pallas = bool(pallas)
+        if pallas:
+            self.name = "jax:fused:pallas"
+        self._market_cache: "collections.OrderedDict" = \
+            collections.OrderedDict()
+        self._fused_cache: dict = {}
+        self._host_fallback = NumpyBackend()
+        self.device_cache_hits = 0
+        self.device_cache_misses = 0
+        self.fallback_solves = 0
+        self.fused_records = 0
+        self.program_builds = 0
+        self._selfcheck_ok: Optional[bool] = None
+        self._record_warned = False
+
+    # -- device market cache -------------------------------------------------
+    def _device_market(self, market, N: int, B: int):
+        """Upload-once market arrays, keyed on (content digest, pad shape)."""
+        key = (market.digest, N, B)
+        ent = self._market_cache.get(key)
+        if ent is not None:
+            self.device_cache_hits += 1
+            self._market_cache.move_to_end(key)
+            return ent
+        self.device_cache_misses += 1
+        jnp = self._jnp
+        n, nb = market.n, market.n_bundles
+        pods = np.zeros(N, np.int64)
+        pods[:n] = market.pods
+        bound = np.zeros(N, np.int64)
+        bound[:n] = market.bound
+        perf = np.zeros(N)
+        perf[:n] = market.perf
+        price = np.ones(N)
+        price[:n] = market.price
+        structural = np.zeros(N, bool)
+        structural[:n] = market.structural
+        real = np.zeros(N, bool)
+        real[:n] = True
+        b_item = np.zeros(B, np.int64)
+        b_item[:nb] = market.b_item
+        b_pods = np.ones(B, np.int64)
+        b_pods[:nb] = market.b_pods
+        b_copies = np.zeros(B, np.int64)
+        b_copies[:nb] = market.b_copies
+        b_struct = np.zeros(B, bool)
+        b_struct[:nb] = True
+        ent = tuple(jnp.asarray(a) for a in (
+            pods, bound, perf, price, structural, real, b_item, b_pods,
+            b_pods.astype(np.float64), b_copies,
+            b_copies.astype(np.float64), b_struct))
+        self._market_cache[key] = ent
+        while len(self._market_cache) > self._MAX_MARKETS:
+            self._market_cache.popitem(last=False)
+        return ent
+
+    def device_cache_info(self) -> Dict[str, int]:
+        return {"hits": self.device_cache_hits,
+                "misses": self.device_cache_misses,
+                "entries": len(self._market_cache),
+                "fallback_solves": self.fallback_solves,
+                "program_builds": self.program_builds}
+
+    def _fused_flags(self) -> Tuple[bool, bool]:
+        on_cpu = self._jax.default_backend() == "cpu"
+        return (self.fused_pallas or not on_cpu), on_cpu
+
+    # -- the device row solver (traced context) ------------------------------
+    def _solver_core(self, md, z, N: int, B: int, RC: int,
+                     use_pallas: bool, interpret: bool):
+        """Build the traced-closure toolkit shared by both fused programs.
+
+        Returns ``(rmul, prep, solve_row, solve_rows, score)``.
+        ``solve_row(coef, active, req) -> (counts, feasible)`` replicates
+        one ``repro.core.ilp._solve_rows`` row end to end on device; every
+        float op mirrors the host op-for-op (see class docstring).
+        ``solve_rows`` is its batched form.
+        """
+        jax, jnp = self._jax, self._jnp
+        lax = jax.lax
+        (pods, bound, perf, price, structural, real, b_item, b_pods,
+         b_podsf, b_copies, b_copiesf, b_struct) = md
+        f64, i64, inf = jnp.float64, jnp.int64, jnp.inf
+
+        def rmul(x, y):
+            # correctly-rounded product exactly as the host computes it:
+            # the bitcast^z detour (z is a runtime int64 zero argument) is
+            # opaque to XLA/LLVM simplification, so the value reaching any
+            # downstream add is the *rounded* product — XLA:CPU's LLVM
+            # backend cannot contract the multiply into an FMA
+            t = x * y
+            return lax.bitcast_convert_type(
+                lax.bitcast_convert_type(t, i64) ^ z, f64)
+
+        def seqsum(v):
+            # np.cumsum semantics: strictly sequential left-to-right adds
+            # (jnp.cumsum reassociates above ~100 elements); unrolled so
+            # the scalar chain is not one XLA loop iteration per element
+            def step(c, x):
+                c = c + x
+                return c, c
+            return lax.scan(step, f64(0.0), v, unroll=64)[1]
+
+        def prep(excl):
+            # per-decision masked normalisation == CompiledMarket.norms:
+            # mins over ~exclude (perf restricted to positive entries),
+            # empty masks degrading to 1.0 exactly like the host
+            mreal = (~excl) & real[None, :]
+            pmask = mreal & (perf > 0.0)[None, :]
+            pmin = jnp.min(jnp.where(pmask, perf[None, :], inf), axis=1)
+            perf_min = jnp.where(jnp.any(pmask, axis=1), pmin, 1.0)
+            smin = jnp.min(jnp.where(mreal, price[None, :], inf), axis=1)
+            sp_min = jnp.where(jnp.isfinite(smin), smin, 1.0)
+            pn = perf[None, :] / perf_min[:, None]
+            qn = price[None, :] / sp_min[:, None]
+            active = structural[None, :] & ~excl
+            return pn, qn, active
+
+        # -- cover DP toolkit, one instance per residual-tier width ----------
+        # dp lives as the back half of a (2*W,) extended vector whose front
+        # half is zeros: the shifted read dp[j - pb] (with dp[0] = 0 for
+        # j < pb) becomes one dynamic_slice at start W - clip(pb) — no
+        # gather — and 0.0 + cb is bitwise the host's dp[0] + cb.  W is a
+        # static tier width > the row's residual (``_rc_tiers``): the DP
+        # recurrence is prefix-closed in j, so dp[j <= residual] — all a
+        # row ever reads — is identical at any W > residual, while the
+        # vector work per relax shrinks from O(RC) to O(W), matching the
+        # host engine's residual-sized dp rows.
+        def dp_tools(W):
+            ext0 = jnp.concatenate(
+                [jnp.zeros(W), jnp.full(W, inf).at[0].set(0.0)])
+            first = jnp.arange(W) == 0
+
+            def _relax(ext, pb, cb):
+                pbc = jnp.clip(pb, 0, W)
+                dp = lax.dynamic_slice(ext, (W,), (W,))
+                sh = lax.dynamic_slice(ext, (W - pbc,), (W,))
+                # dp[0] pinned at 0: where() fuses into the add pass
+                # (an .at[0].set copies the whole W vector per relax)
+                cand = jnp.where(first, inf, sh + cb)
+                bit = cand < dp
+                return lax.dynamic_update_slice(
+                    ext, jnp.minimum(dp, cand), (W,)), bit
+
+            def cover_values(pseq, cseq, trip, residual):
+                def body(st):
+                    i, ext = st
+                    ext, _bit = _relax(ext, pseq[i], cseq[i])
+                    return i + 1, ext
+                _i, ext = lax.while_loop(lambda st: st[0] < trip, body,
+                                         (i64(0), ext0))
+                return ext[W + residual]
+
+            def cover_bits_scan(kp, kc, trip, KB):
+                def body(st):
+                    i, ext, bits = st
+                    ext, bit = _relax(ext, kp[i], kc[i])
+                    bits = lax.dynamic_update_slice(bits, bit[None, :],
+                                                    (i, i64(0)))
+                    return i + 1, ext, bits
+                _i, _e, bits = lax.while_loop(
+                    lambda st: st[0] < trip, body,
+                    (i64(0), ext0, jnp.zeros((KB, W), dtype=bool)))
+                return bits
+
+            if not use_pallas:
+                return cover_values, cover_bits_scan, None
+
+            from jax.experimental import pallas as pl
+
+            block_b = min(B, 32)
+
+            def _cover_kernel(pb_ref, cb_ref, dp_ref, bits_ref):
+                # grid over bundle blocks; the dp value row is the (1, W)
+                # output block revisited every grid step (accumulator
+                # idiom), improvement bits are emitted in-kernel into the
+                # block's (block_b, W) tile.  Masked bundles (cost +inf)
+                # are inert: cand = sh + inf never beats dp.
+                @pl.when(pl.program_id(0) == 0)
+                def _init():
+                    dp_ref[...] = jnp.full((1, W), jnp.inf,
+                                           dtype=f64).at[0, 0].set(0.0)
+
+                jcol = lax.broadcasted_iota(jnp.int32, (1, W), 1)
+
+                def body(i, dp):
+                    pb = pb_ref[i]
+                    cb = cb_ref[i]
+                    pbc = jnp.clip(pb, 0, W).astype(jnp.int32)
+                    ext = jnp.concatenate(
+                        [jnp.zeros((1, W), f64), dp], axis=1)
+                    sh = lax.dynamic_slice(
+                        ext, (jnp.int32(0), W - pbc), (1, W))
+                    cand = jnp.where(jcol == 0, jnp.inf, sh + cb)
+                    bits_ref[i, :] = (cand < dp)[0]
+                    return jnp.minimum(dp, cand)
+
+                dp_ref[...] = lax.fori_loop(0, block_b, body, dp_ref[...])
+
+            def pallas_cover(pseq, cseq):
+                dp, bits = pl.pallas_call(
+                    _cover_kernel,
+                    grid=(B // block_b,),
+                    in_specs=[
+                        pl.BlockSpec((block_b,), lambda k: (k,)),
+                        pl.BlockSpec((block_b,), lambda k: (k,)),
+                    ],
+                    out_specs=(
+                        pl.BlockSpec((1, W), lambda k: (0, 0)),
+                        pl.BlockSpec((block_b, W), lambda k: (k, 0)),
+                    ),
+                    out_shape=(
+                        jax.ShapeDtypeStruct((1, W), f64),
+                        jax.ShapeDtypeStruct((B, W), jnp.bool_),
+                    ),
+                    interpret=interpret,
+                )(pseq, cseq)
+                return dp[0], bits
+
+            return cover_values, cover_bits_scan, pallas_cover
+
+        tiers = _rc_tiers(RC)
+        tier_tools = [dp_tools(W) for W in tiers]
+
+        # -- pool scoring ----------------------------------------------------
+        if use_pallas:
+            from jax.experimental import pallas as pl
+
+            def _score_kernel(cnt_ref, perf_ref, price_ref, pods_ref,
+                              req_ref, out_ref):
+                c = cnt_ref[0, :]
+                sp = jnp.sum(c * perf_ref[0, :])
+                sc = jnp.sum(c * price_ref[0, :])
+                sq = jnp.sum(c * pods_ref[0, :])
+                rq = req_ref[0]
+                ok = (sq >= rq) & (sc > 0.0) & (sq > 0.0)
+                out_ref[0] = jnp.where(ok, (sp / sc) * (rq / sq), 0.0)
+
+            def score(cnts, reqf):
+                D = cnts.shape[0]
+                return pl.pallas_call(
+                    _score_kernel,
+                    grid=(D,),
+                    in_specs=[
+                        pl.BlockSpec((1, N), lambda k: (k, 0)),
+                        pl.BlockSpec((1, N), lambda k: (0, 0)),
+                        pl.BlockSpec((1, N), lambda k: (0, 0)),
+                        pl.BlockSpec((1, N), lambda k: (0, 0)),
+                        pl.BlockSpec((1,), lambda k: (k,)),
+                    ],
+                    out_specs=pl.BlockSpec((1,), lambda k: (k,)),
+                    out_shape=jax.ShapeDtypeStruct((D,), f64),
+                    interpret=interpret,
+                )(cnts, perf[None, :], price[None, :],
+                  pods.astype(f64)[None, :], reqf)
+        else:
+            def score(cnts, reqf):
+                # speculation-only e_total: steers device bracket control,
+                # never replayed to the host (which rescores exactly)
+                sp = cnts @ perf
+                sc = cnts @ price
+                sq = cnts @ pods.astype(f64)
+                ok = (sq >= reqf) & (sc > 0.0) & (sq > 0.0)
+                return jnp.where(ok, (sp / sc) * (reqf / sq), 0.0)
+
+        # -- one engine row on device ----------------------------------------
+        def solve_row(coef, active, req):
+            neg = (coef < 0.0) & active
+            sat = jnp.where(neg, bound, i64(0))
+            covered = jnp.sum(jnp.where(neg, pods * bound, i64(0)))
+            residual = jnp.maximum(req - covered, 0)
+            in_dp = active & ~neg
+            capacity = jnp.sum(jnp.where(in_dp, pods * bound, i64(0)))
+
+            def make_dp_case(tools):
+                cover_values, cover_bits_scan, pallas_cover = tools
+
+                def dp_case(_):
+                    # masked-not-compacted: excluded/saturated bundles get
+                    # cost +inf, so their rate sorts to the end and the
+                    # finite sorted prefix (and its sequential cumsums) is
+                    # bitwise the host's compacted arrays while shapes
+                    # stay static
+                    bmask = in_dp[b_item] & b_struct
+                    bcosts = jnp.where(bmask,
+                                       rmul(coef[b_item], b_copiesf), inf)
+                    rate = bcosts / b_podsf
+                    order = jnp.argsort(rate, stable=True)
+                    p_sorted = b_podsf[order]
+                    c_sorted = bcosts[order]
+                    cum_p = seqsum(p_sorted)
+                    cum_c = seqsum(c_sorted)
+                    k_ub = jnp.searchsorted(cum_p, residual.astype(f64))
+                    ub = cum_c[k_ub]
+                    rb = jnp.maximum(residual - b_pods, 0).astype(f64)
+                    kk = jnp.searchsorted(cum_p, rb)
+                    km = jnp.maximum(kk - 1, 0)
+                    prev_p = jnp.where(kk > 0, cum_p[km], 0.0)
+                    prev_c = jnp.where(kk > 0, cum_c[km], 0.0)
+                    lp = prev_c + rmul(rb - prev_p,
+                                       c_sorted[kk] / p_sorted[kk])
+                    lp = jnp.where(rb <= 0.0, 0.0, lp)
+                    keep = (bcosts + lp) <= rmul(ub, 1.0 + 1e-12) + 1e-9
+                    n_active = jnp.sum(bmask)
+                    pods_ord = b_pods[order]
+
+                    def core_case(_o):
+                        K = jnp.minimum(
+                            n_active,
+                            jnp.maximum(k_ub + _CORE_PAD, _CORE_MIN))
+                        if use_pallas:
+                            ccosts = jnp.where(jnp.arange(B) < K,
+                                               c_sorted, inf)
+                            dp, _bits = pallas_cover(pods_ord, ccosts)
+                            return dp[residual]
+                        return cover_values(pods_ord, c_sorted, K,
+                                            residual)
+
+                    core_ub = lax.cond(jnp.sum(keep) > _CORE_TRIGGER,
+                                       core_case, lambda _o: inf, None)
+                    keep = jnp.where(
+                        core_ub < ub,
+                        (bcosts + lp) <= rmul(core_ub, 1.0 + 1e-12) + 1e-9,
+                        keep)
+
+                    # kept-first stable permutation preserves market bundle
+                    # order within the kept prefix — the decode order the
+                    # backtracker's tie-breaking contract depends on.
+                    # Built from two exact integer cumsums + one scatter
+                    # instead of a second stable argsort (~0.5 ms/row at
+                    # B=2048 on CPU)
+                    ki = jnp.cumsum(keep.astype(jnp.int64))
+                    ni = jnp.cumsum((~keep).astype(jnp.int64))
+                    kept_n = ki[B - 1]
+                    pos = jnp.where(keep, ki - 1, kept_n + ni - 1)
+                    perm = jnp.zeros(B, jnp.int64).at[pos].set(
+                        jnp.arange(B, dtype=jnp.int64))
+                    kp = b_pods[perm]
+                    kc = jnp.where(keep[perm], bcosts[perm], inf)
+
+                    def decode(KB):
+                        # bits buffer sized to a kept-bound rung, not B:
+                        # the decode working set mirrors the host's
+                        # (kept_n, residual)-sized bits rows
+                        def run(_o):
+                            kpk = kp[:KB]
+                            if use_pallas:
+                                _dp, bits = pallas_cover(kp, kc)
+                            else:
+                                bits = cover_bits_scan(
+                                    kpk, kc[:KB], kept_n, KB)
+
+                            def bt_body(st):
+                                i, j, take = st
+                                bit = bits[i, j]
+                                take = take.at[i].set(bit)
+                                j = jnp.where(
+                                    bit, jnp.maximum(j - kpk[i], 0), j)
+                                return i - 1, j, take
+
+                            _i, _j, take = lax.while_loop(
+                                lambda st: (st[0] >= 0) & (st[1] > 0),
+                                bt_body,
+                                (kept_n - 1, residual,
+                                 jnp.zeros(KB, dtype=bool)))
+                            return sat.at[b_item[perm[:KB]]].add(
+                                jnp.where(take, b_copies[perm[:KB]],
+                                          i64(0)))
+                        return run
+
+                    if use_pallas or B <= 256:
+                        counts = decode(B)(None)
+                    else:
+                        counts = lax.cond(kept_n <= 256,
+                                          decode(256), decode(B), None)
+                    return counts, jnp.bool_(True)
+
+                return dp_case
+
+            def after_sat(_):
+                # route the row to the narrowest tier wider than its
+                # residual; lax.map preserves real branching, so a row
+                # pays only its own tier's vector width
+                t_idx = jnp.searchsorted(
+                    jnp.asarray(tiers), residual, side="right")
+                t_idx = jnp.minimum(t_idx, len(tiers) - 1)
+                return lax.cond(
+                    capacity < residual,
+                    lambda _o: (sat, jnp.bool_(False)),
+                    lambda _o: lax.switch(
+                        t_idx, [make_dp_case(t) for t in tier_tools], _o),
+                    _)
+
+            return lax.cond(residual == 0,
+                            lambda _o: (sat, jnp.bool_(True)),
+                            after_sat, None)
+
+        # -- row batching ----------------------------------------------------
+        def solve_rows(coefs, actives, reqs):
+            """Solve a stack of engine rows sequentially (``lax.fori_loop``
+            writing into preallocated outputs — measured ~12% faster than
+            ``lax.map``'s scan plumbing).  Sequential, not vmapped, so real
+            ``lax.cond``/``lax.switch`` branching survives (the saturation
+            fast path and the residual-tier ladder) and every while_loop
+            carry stays un-batched, letting XLA update the dp/bits buffers
+            in place.  A vmapped row solver was measured ~200x slower here:
+            batching the dynamic-trip while_loops forces a masking
+            ``select`` copy of the (lanes, B, RC) bits carry on every
+            iteration."""
+            D = coefs.shape[0]
+            def body(i, out):
+                cnts, feas = out
+                c, f = solve_row(coefs[i], actives[i], reqs[i])
+                return cnts.at[i].set(c), feas.at[i].set(f)
+            return lax.fori_loop(
+                0, D, body,
+                (jnp.zeros((D, N), jnp.int64), jnp.zeros(D, bool)))
+
+        return rmul, prep, solve_row, solve_rows, score
+
+    # -- fused programs ------------------------------------------------------
+    def _prescan_compiled(self, N, B, RC, D, G):
+        key = ("prescan", N, B, RC, D, G) + self._fused_flags()
+        fn = self._fused_cache.get(key)
+        if fn is None:
+            jax, jnp = self._jax, self._jnp
+            lax = jax.lax
+            use_pallas, on_cpu = self._fused_flags()
+
+            def run(md, reqs, excl, alphas, z):
+                rmul, prep, _row, solve_rows, _score = self._solver_core(
+                    md, z, N, B, RC, use_pallas, on_cpu)
+                pn, qn, active = prep(excl)
+                di = jnp.arange(D * G) // G
+                a = alphas[jnp.arange(D * G) % G][:, None]
+                coefs = rmul(-a, pn[di]) + rmul(1.0 - a, qn[di])
+                counts, feas = solve_rows(coefs, active[di], reqs[di])
+                return counts.reshape(D, G, N), feas.reshape(D, G)
+
+            fn = jax.jit(run)
+            self._fused_cache[key] = fn
+            self.program_builds += 1
+        return fn
+
+    def _golden_compiled(self, N, B, RC, D, MAXR):
+        key = ("golden", N, B, RC, D, MAXR) + self._fused_flags()
+        fn = self._fused_cache.get(key)
+        if fn is None:
+            jax, jnp = self._jax, self._jnp
+            lax = jax.lax
+            use_pallas, on_cpu = self._fused_flags()
+            ME = MAXR + 2
+
+            def run(md, reqs, excl, a0, b0, tol, z):
+                rmul, prep, _row, solve_rows, score = self._solver_core(
+                    md, z, N, B, RC, use_pallas, on_cpu)
+                pn, qn, active = prep(excl)
+                reqf = reqs.astype(jnp.float64)
+                dn = jnp.arange(D)
+
+                def solve_vec(alphas, reqv):
+                    coefs = (rmul(-alphas[:, None], pn)
+                             + rmul(1.0 - alphas[:, None], qn))
+                    return solve_rows(coefs, active, reqv)
+
+                def spec(counts, feas):
+                    s = score(counts.astype(jnp.float64), reqf)
+                    return jnp.where(feas, s, -jnp.inf)
+
+                # bracket init: exactly the host's x1/x2 update formulas
+                # (rmul keeps PHI*(b-a) rounded before the subtract/add)
+                w0 = rmul(jnp.float64(_PHI), b0 - a0)
+                x1 = b0 - w0
+                x2 = a0 + w0
+                c1, fe1 = solve_vec(x1, reqs)
+                c2, fe2 = solve_vec(x2, reqs)
+                f1 = spec(c1, fe1)
+                f2 = spec(c2, fe2)
+
+                ev_a = (jnp.zeros((D, ME))
+                        .at[:, 0].set(x1).at[:, 1].set(x2))
+                ev_c = (jnp.zeros((D, ME, N), dtype=jnp.int64)
+                        .at[:, 0, :].set(c1).at[:, 1, :].set(c2))
+                ev_f = (jnp.zeros((D, ME), dtype=bool)
+                        .at[:, 0].set(fe1).at[:, 1].set(fe2))
+                evn = jnp.full((D,), 2, dtype=jnp.int64)
+
+                def cond(st):
+                    return (st[0] < MAXR) & jnp.any((st[2] - st[1]) > tol)
+
+                def body(st):
+                    (r, a, b, x1, x2, f1, f2,
+                     ev_a, ev_c, ev_f, evn) = st
+                    act = (b - a) > tol
+                    right = (f1 >= f2) & act     # shrink from the right
+                    left = act & ~(f1 >= f2)     # shrink from the left
+                    nb = jnp.where(right, x2, b)
+                    na = jnp.where(left, x1, a)
+                    w = rmul(jnp.float64(_PHI), nb - na)
+                    nx1 = jnp.where(right, nb - w, jnp.where(left, x2, x1))
+                    nx2 = jnp.where(left, na + w, jnp.where(right, x1, x2))
+                    pf1 = jnp.where(left, f2, f1)
+                    pf2 = jnp.where(right, f1, f2)
+                    probe = jnp.where(right, nx1,
+                                      jnp.where(left, nx2, 0.0))
+                    # inactive decisions re-solve req=0 (the cheap
+                    # saturation fast path) instead of a full row
+                    reqv = jnp.where(act, reqs, jnp.int64(0))
+                    cp, fep = solve_vec(probe, reqv)
+                    fp = spec(cp, fep)
+                    nf1 = jnp.where(right, fp, pf1)
+                    nf2 = jnp.where(left, fp, pf2)
+                    ev_a = ev_a.at[dn, evn].set(
+                        jnp.where(act, probe, ev_a[dn, evn]))
+                    ev_c = ev_c.at[dn, evn, :].set(
+                        jnp.where(act[:, None], cp, ev_c[dn, evn, :]))
+                    ev_f = ev_f.at[dn, evn].set(
+                        jnp.where(act, fep, ev_f[dn, evn]))
+                    evn = evn + act.astype(jnp.int64)
+                    return (r + 1, na, nb, nx1, nx2, nf1, nf2,
+                            ev_a, ev_c, ev_f, evn)
+
+                st = lax.while_loop(cond, body, (
+                    jnp.int64(0), a0, b0, x1, x2, f1, f2,
+                    ev_a, ev_c, ev_f, evn))
+                return st[7], st[8], st[9], st[10]
+
+            fn = jax.jit(run)
+            self._fused_cache[key] = fn
+            self.program_builds += 1
+        return fn
+
+    # -- host-side drivers ---------------------------------------------------
+    def _shape_key(self, market, reqs, n_dec):
+        N = _bucket(max(market.n, 1), self._N_STEPS)
+        B = _bucket(max(market.n_bundles, 1), self._BF_STEPS)
+        RC = _bucket(max(max(reqs, default=1), 1), self._RF_STEPS) + 1
+        D = _bucket(max(n_dec, 1), self._D_STEPS)
+        return N, B, RC, D
+
+    def _pad_decisions(self, market, reqs, excludes, N, D):
+        rq = np.zeros(D, np.int64)
+        rq[:len(reqs)] = reqs
+        ex = np.zeros((D, N), bool)
+        for d, mask in enumerate(excludes):
+            if mask is not None:
+                ex[d, :market.n] = mask
+        return rq, ex
+
+    def _run_prescan(self, market, reqs, excludes, grid):
+        Dr, G = len(reqs), len(grid)
+        N, B, RC, D = self._shape_key(market, reqs, Dr)
+        md = self._device_market(market, N, B)
+        rq, ex = self._pad_decisions(market, reqs, excludes, N, D)
+        fn = self._prescan_compiled(N, B, RC, D, G)
+        counts, feas = fn(md, rq, ex, np.asarray(grid, np.float64),
+                          np.int64(0))
+        return (np.asarray(counts)[:Dr, :, :market.n],
+                np.asarray(feas)[:Dr])
+
+    def _run_golden(self, market, reqs, excludes, a_list, b_list,
+                    tolerance):
+        Dr = len(reqs)
+        N, B, RC, D = self._shape_key(market, reqs, Dr)
+        md = self._device_market(market, N, B)
+        rq, ex = self._pad_decisions(market, reqs, excludes, N, D)
+        # round budget: any bracket is <= 1 wide and shrinks by PHI per
+        # round, so ceil(log(tol)/log(PHI)) rounds suffice (+2 slack)
+        MAXR = (int(math.ceil(math.log(tolerance) / math.log(_PHI))) + 2
+                if 0.0 < tolerance < 1.0 else 3)
+        a0 = np.zeros(D)
+        a0[:Dr] = a_list
+        b0 = np.zeros(D)
+        b0[:Dr] = b_list
+        fn = self._golden_compiled(N, B, RC, D, MAXR)
+        ev_a, ev_c, ev_f, evn = fn(md, rq, ex, a0, b0,
+                                   np.float64(tolerance), np.int64(0))
+        return (np.asarray(ev_a)[:Dr], np.asarray(ev_c)[:Dr, :, :market.n],
+                np.asarray(ev_f)[:Dr], np.asarray(evn)[:Dr])
+
+    # -- rounding self-check + record entry point ----------------------------
+    def _fused_ok(self) -> bool:
+        """One-time probe that this XLA build's rmul-guarded products are
+        bitwise the host's (the FMA-contraction defense holds)."""
+        if self._selfcheck_ok is None:
+            try:
+                self._selfcheck_ok = self._run_selfcheck()
+            except Exception as exc:   # pragma: no cover - defensive
+                warnings.warn(
+                    "fused jax decision plane disabled (self-check raised "
+                    f"{exc!r}); falling back to per-round dispatch",
+                    RuntimeWarning)
+                self._selfcheck_ok = False
+        return self._selfcheck_ok
+
+    def _run_selfcheck(self) -> bool:
+        jax, jnp = self._jax, self._jnp
+        lax = jax.lax
+        rng = np.random.default_rng(0)
+        pn = rng.uniform(0.5, 4.0, 64)
+        qn = rng.uniform(0.5, 4.0, 64)
+        alphas = rng.uniform(0.0, 1.0, 16)
+
+        def dev(a, p, q, z):
+            def rm(x, y):
+                t = x * y
+                return lax.bitcast_convert_type(
+                    lax.bitcast_convert_type(t, jnp.int64) ^ z,
+                    jnp.float64)
+            coef = (rm(-a[:, None], p[None, :])
+                    + rm(1.0 - a[:, None], q[None, :]))
+            thr = rm(coef, 1.0 + 1e-12) + 1e-9
+            w = a[:, None] - rm(jnp.float64(_PHI), coef)
+            return coef, thr, w
+
+        coef_d, thr_d, w_d = jax.jit(dev)(
+            jnp.asarray(alphas), jnp.asarray(pn), jnp.asarray(qn),
+            np.int64(0))
+        a2 = alphas[:, None]
+        coef_h = -a2 * pn[None, :] + (1.0 - a2) * qn[None, :]
+        thr_h = coef_h * (1.0 + 1e-12) + 1e-9
+        w_h = a2 - _PHI * coef_h
+        ok = (np.asarray(coef_d).tobytes() == coef_h.tobytes()
+              and np.asarray(thr_d).tobytes() == thr_h.tobytes()
+              and np.asarray(w_d).tobytes() == w_h.tobytes())
+        if not ok:   # pragma: no cover - depends on XLA build
+            warnings.warn(
+                "fused jax decision plane disabled: device float products "
+                "do not match host rounding on this XLA build; falling "
+                "back to per-round dispatch", RuntimeWarning)
+        return ok
+
+    def fused_gss_record(self, items, market, reqs, excludes, grid,
+                         tolerance) -> Optional["_FusedGssRecord"]:
+        """Run the device-resident prescan for a ``bracketed_gss_many``
+        batch and return the replay record, or None to decline (empty
+        market, failed self-check, or a device error — all of which leave
+        the caller on the ordinary per-round path)."""
+        if market.n == 0 or market.n_bundles == 0:
+            return None
+        if not self._fused_ok():
+            return None
+        try:
+            rec = _FusedGssRecord(self, items, market, reqs, excludes,
+                                  grid, tolerance)
+        except Exception as exc:
+            if not self._record_warned:
+                warnings.warn(
+                    f"fused GSS device path failed ({exc!r}); falling back "
+                    "to per-round dispatch", RuntimeWarning)
+                self._record_warned = True
+            return None
+        self.fused_records += 1
+        return rec
+
+
+class _FusedGssRecord:
+    """Replay record binding one device-resident GSS batch to its host
+    control loop (DESIGN.md §13).
+
+    Construction runs the fused prescan; :meth:`run_golden` runs the fused
+    golden program once the host has chosen brackets.  Both fill an
+    exact-bitwise α → counts lookup per decision.  The host replay
+    (``bracketed_gss_many``) then re-executes the sequential control flow
+    with exact host floats and resolves every probe through
+    :meth:`solve_many`: device-recorded counts on a hit, a counted NumPy
+    engine solve on a miss (device/host control divergence) — so a
+    speculation mismatch can only cost time, never change a selection.
+    """
+
+    def __init__(self, backend, items, market, reqs, excludes, grid,
+                 tolerance):
+        self._backend = backend
+        self._items = list(items)
+        self._market = market
+        self._reqs = [int(r) for r in reqs]
+        self._excludes = list(excludes)
+        self._tolerance = float(tolerance)
+        counts, feas = backend._run_prescan(market, self._reqs,
+                                            self._excludes, list(grid))
+        self.prescan = [
+            [list(map(int, counts[d, g])) if feas[d, g] else None
+             for g in range(len(grid))]
+            for d in range(len(self._reqs))]
+        self._lookup: List[dict] = [{} for _ in self._reqs]
+        for d, row in enumerate(self.prescan):
+            for a, c in zip(grid, row):
+                self._lookup[d].setdefault(float(a), c)
+
+    def run_golden(self, a_list, b_list) -> None:
+        ev_a, ev_c, ev_f, evn = self._backend._run_golden(
+            self._market, self._reqs, self._excludes,
+            [float(a) for a in a_list], [float(b) for b in b_list],
+            self._tolerance)
+        for d in range(len(self._reqs)):
+            lut = self._lookup[d]
+            for s in range(int(evn[d])):
+                cnt = (list(map(int, ev_c[d, s])) if ev_f[d, s] else None)
+                lut.setdefault(float(ev_a[d, s]), cnt)
+
+    def solve_many(self, idxs, alpha_lists):
+        """``solve_ilp_many``-shaped resolution of a golden round's probes:
+        one counts-or-None list per (decision index, α list) pair."""
+        out = [[None] * len(al) for al in alpha_lists]
+        miss_pos: List[Tuple[int, List[int]]] = []
+        miss_reqs: List[int] = []
+        miss_alphas: List[List[float]] = []
+        miss_excl: List[Optional[np.ndarray]] = []
+        for k, (d, alist) in enumerate(zip(idxs, alpha_lists)):
+            lut = self._lookup[d]
+            missing = []
+            for j, a in enumerate(alist):
+                hit = lut.get(float(a), _MISS)
+                if hit is _MISS:
+                    missing.append(j)
                 else:
-                    dp = np.asarray(res)
-                    for g, i in enumerate(idxs):
-                        out[i] = dp[g, :groups[i][2] + 1]
+                    out[k][j] = hit
+            if missing:
+                miss_pos.append((k, missing))
+                miss_reqs.append(self._reqs[d])
+                miss_alphas.append([alist[j] for j in missing])
+                miss_excl.append(self._excludes[d])
+        if miss_pos:
+            self._backend.fallback_solves += sum(
+                len(js) for _k, js in miss_pos)
+            from .ilp import solve_ilp_many   # deferred: no import cycle
+            solved = solve_ilp_many(
+                self._items, miss_reqs, miss_alphas, market=self._market,
+                excludes=miss_excl, backend=self._backend._host_fallback)
+            for (k, js), counts_d in zip(miss_pos, solved):
+                for j, c in zip(js, counts_d):
+                    out[k][j] = c
+                    self._lookup[idxs[k]].setdefault(
+                        float(alpha_lists[k][j]), c)
         return out
 
 
@@ -331,13 +1200,16 @@ def jax_available() -> bool:
 
 def make_backend(spec: str) -> SolverBackend:
     """Build a backend from a spec string: ``numpy`` | ``jax`` |
-    ``jax:pallas``.  A jax spec without jax installed warns once and
-    returns the numpy backend (the solver path treats jax as optional)."""
+    ``jax:pallas`` | ``jax:fused`` | ``jax:fused:pallas``.  A jax spec
+    without jax installed warns once and returns the numpy backend (the
+    solver path treats jax as optional)."""
     global _WARNED
     if spec == "numpy":
         return NumpyBackend()
-    if spec in ("jax", "jax:pallas"):
+    if spec in ("jax", "jax:pallas", "jax:fused", "jax:fused:pallas"):
         try:
+            if spec.startswith("jax:fused"):
+                return FusedJaxBackend(pallas=spec.endswith(":pallas"))
             return JaxBackend(pallas=spec.endswith(":pallas"))
         except ImportError:
             if not _WARNED:
@@ -349,7 +1221,8 @@ def make_backend(spec: str) -> SolverBackend:
                 _WARNED = True
             return NumpyBackend()
     raise ValueError(f"unknown solver backend spec {spec!r} "
-                     "(expected numpy | jax | jax:pallas)")
+                     "(expected numpy | jax | jax:pallas | jax:fused | "
+                     "jax:fused:pallas)")
 
 
 def get_backend() -> SolverBackend:

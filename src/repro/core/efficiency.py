@@ -24,6 +24,13 @@ completed pools.  Batch variants (:func:`e_total_batch`,
 :func:`score_counts_batch`) score (n_pools × n_items) count matrices in
 one vectorized pass for the batched GSS prescan (DESIGN.md §8) and the
 scenario engine's sweeps (DESIGN.md §9).
+
+This module is the *authoritative* scorer: the fused device plane
+(DESIGN.md §13) re-implements Eq. 3 on device only to steer its
+speculative bracket control — every score a decision, trace, or metric
+dict actually reports is recomputed here on host floats, so a device
+scoring discrepancy can cost a fallback solve but never change a
+selection.
 """
 
 from __future__ import annotations

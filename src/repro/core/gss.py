@@ -236,9 +236,10 @@ def bracketed_gss(
 class _GssState:
     """One decision's sequential-GSS state, advanced in lockstep."""
 
-    __slots__ = ("req", "exclude", "t0", "scan_trace", "trace", "cache",
-                 "scan_pool", "scan_f", "a", "b", "x1", "x2", "f1", "f2",
-                 "pool1", "pool2", "best_pool", "best_f", "done")
+    __slots__ = ("req", "exclude", "idx", "t0", "scan_trace", "trace",
+                 "cache", "scan_pool", "scan_f", "a", "b", "x1", "x2",
+                 "f1", "f2", "pool1", "pool2", "best_pool", "best_f",
+                 "done")
 
     def __init__(self, req: int, exclude: Optional[np.ndarray]):
         self.req = req
@@ -286,13 +287,27 @@ def bracketed_gss_many(
         market = compile_market(items)
 
     states = [_GssState(req, ex) for req, ex in zip(req_pods_list, excludes)]
-    for st in states:
+    for i, st in enumerate(states):
+        st.idx = i
         st.t0 = timer()
 
+    # -- fused device plane (DESIGN.md §13): backends that support it run
+    # the whole batch (prescan grid + speculative golden rounds) on device
+    # and hand back a replay record; the lockstep loop below then consumes
+    # recorded counts instead of dispatching per round.  Control flow,
+    # scoring, traces, and selections are the sequential path's either way.
+    record = None
+    if backend is not None and getattr(backend, "supports_fused_gss", False):
+        record = backend.fused_gss_record(items, market, list(req_pods_list),
+                                          list(excludes), grid, tolerance)
+
     # -- prescan: one stacked engine invocation over every (decision, α) --
-    all_counts = solve_ilp_many(items, list(req_pods_list), grid,
-                                market=market, excludes=list(excludes),
-                                backend=backend)
+    if record is not None:
+        all_counts = record.prescan
+    else:
+        all_counts = solve_ilp_many(items, list(req_pods_list), grid,
+                                    market=market, excludes=list(excludes),
+                                    backend=backend)
     all_scores = score_counts_many(items, all_counts, list(req_pods_list),
                                    none_score=float("-inf"),
                                    arrays=market.metric_arrays)
@@ -313,6 +328,12 @@ def bracketed_gss_many(
         st.b = grid[min(len(grid) - 1, best_idx + 1)]
         st.x1 = st.b - PHI * (st.b - st.a)
         st.x2 = st.a + PHI * (st.b - st.a)
+
+    if record is not None:
+        # speculative device golden rounds over the chosen brackets; the
+        # probe α sequence is re-derived exactly below, so every cache
+        # miss resolves from the record (host solve only on divergence)
+        record.run_golden([st.a for st in states], [st.b for st in states])
 
     # -- lockstep golden-section refinement --------------------------------
     def eval_round(requests: List[Tuple[_GssState, List[float]]]) -> None:
@@ -338,8 +359,13 @@ def bracketed_gss_many(
                 miss_excludes.append(st.exclude)
         if not miss_states:
             return
-        solved = solve_ilp_many(items, miss_reqs, miss_alphas, market=market,
-                                excludes=miss_excludes, backend=backend)
+        if record is not None:
+            solved = record.solve_many([st.idx for st in miss_states],
+                                       miss_alphas)
+        else:
+            solved = solve_ilp_many(items, miss_reqs, miss_alphas,
+                                    market=market, excludes=miss_excludes,
+                                    backend=backend)
         for st, alphas_d, counts_d in zip(miss_states, miss_alphas, solved):
             for alpha, counts in zip(alphas_d, counts_d):
                 st.trace.ilp_solves += 1

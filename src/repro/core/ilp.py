@@ -47,11 +47,14 @@ provisioner-level cache.
 from __future__ import annotations
 
 import dataclasses
+import functools
+import hashlib
 from typing import Hashable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from .backend import SolverBackend, get_backend
+from .backend import (_CORE_MIN, _CORE_PAD, _CORE_TRIGGER, SolverBackend,
+                      get_backend)
 from .efficiency import CandidateItem
 
 _INF = float("inf")
@@ -134,6 +137,21 @@ class CompiledMarket:
     def metric_arrays(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
         """(Perf_i, SP_i, Pod_i) float64 triple for ``score_counts_batch``."""
         return self.perf, self.price, self.pods.astype(np.float64)
+
+    @functools.cached_property
+    def digest(self) -> str:
+        """Content digest of every solver-relevant array — the device-cache
+        key of the fused backend (DESIGN.md §13): two markets with equal
+        digests produce identical device uploads, so a recompiled but
+        unchanged market re-uses its resident arrays, while any offering
+        change invalidates the entry.  (``cached_property`` writes straight
+        to ``__dict__``, which a frozen dataclass permits.)"""
+        h = hashlib.blake2b(digest_size=16)
+        for a in (self.pods, self.bound, self.perf, self.price,
+                  self.structural, self.b_item, self.b_pods,
+                  self.b_copies):
+            h.update(np.ascontiguousarray(a).tobytes())
+        return h.hexdigest()
 
     def norms(self, exclude: Optional[np.ndarray] = None,
               ) -> Tuple[np.ndarray, np.ndarray]:
@@ -266,15 +284,10 @@ def _cover_dp(bpods: np.ndarray, bcosts: np.ndarray, target: int,
     return dp
 
 
-#: core-DP upper-bound tuning for :func:`_lp_prune`: the DP runs over the
-#: best-rate ``max(k_greedy + _CORE_PAD, _CORE_MIN)`` bundles (the knapsack
-#: "core", where optimal solutions live in practice), and only at all when
-#: the greedy bound alone leaves more than ``_CORE_TRIGGER`` bundles alive
-#: (a near-optimal UB is what makes the LP filter bite; a cheap loose one
-#: measurably does not).
-_CORE_PAD = 33
-_CORE_MIN = 96
-_CORE_TRIGGER = 160
+#: core-DP upper-bound tuning for :func:`_lp_prune` (``_CORE_PAD``,
+#: ``_CORE_MIN``, ``_CORE_TRIGGER``) now lives in :mod:`repro.core.backend`
+#: — the fused device solver replicates the same pruning decisions and
+#: importing them from here would create a cycle.  Re-exported above.
 
 
 def _lp_prune(bpods: np.ndarray, bcosts: np.ndarray, target: int,

@@ -197,6 +197,9 @@ class SolveBatch:
     """
 
     def __init__(self, backend: Optional[SolverBackend] = None):
+        if isinstance(backend, str):
+            from .backend import make_backend
+            backend = make_backend(backend)
         self.backend = backend
         self._jobs: List[_SolveJob] = []
         self._by_key: Dict = {}

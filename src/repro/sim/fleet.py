@@ -61,7 +61,7 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from ..core.backend import SolverBackend
+from ..core.backend import SolverBackend, make_backend
 from ..core.efficiency import NodePool, Request
 from ..core.market import Offering, pressure_interrupt_probability_batch
 from ..core.market import snapshot_with
@@ -132,6 +132,10 @@ class FleetSim:
                  clock: Optional[Callable[[], float]] = None,
                  memoize: bool = True, batch_decisions: bool = True,
                  backend: Optional[SolverBackend] = None):
+        if isinstance(backend, str):
+            # convenience: FleetSim(..., backend="jax:fused") resolves the
+            # registry spec exactly like make_backend would
+            backend = make_backend(backend)
         if scenario.apply_fulfillment:
             raise ValueError(
                 "FleetSim does not support apply_fulfillment scenarios: "
@@ -510,6 +514,12 @@ class FleetSim:
         out["ticks"] = self.ticks
         if self.memo is not None:
             out.update(self.memo.stats())
+        if self.solve_batch is not None:
+            be = self.solve_batch.backend
+            info = getattr(be, "device_cache_info", None)
+            if callable(info):
+                for k, v in info().items():
+                    out[f"device_cache_{k}"] = v
         return out
 
 

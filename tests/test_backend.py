@@ -332,3 +332,132 @@ def test_solver_core_importable_without_jax(monkeypatch):
         assert not hasattr(mod, "jax")
         src = open(mod.__file__).read().splitlines()
         assert not any(line.startswith("import jax") for line in src)
+
+
+# ------------------------------------------------- fused decision plane ----
+
+FUSED = make_backend("jax:fused") if HAVE_JAX else None
+
+
+def _gss_summary(results):
+    """(pool dict, alpha, trace alphas, trace e_totals) per decision —
+    the full byte-comparable decision record."""
+    return [((None if p is None else p.as_dict()),
+             (None if p is None else p.alpha), t.alphas, t.e_totals)
+            for p, t in results]
+
+
+@requires_jax
+def test_fused_equals_numpy_pools_110_markets():
+    """The device-resident GSS (one jitted while_loop, counts read back
+    once) selects the identical pools/alphas/traces as the host engine and
+    the per-dispatch jax backend over 110 randomized markets with masks,
+    infeasible and zero demands — and resolves every probe from the device
+    record (zero host-fallback solves)."""
+    rng = np.random.default_rng(11)
+    fake = lambda: 0.0                                     # noqa: E731
+    base_fb = FUSED.device_cache_info()["fallback_solves"]
+    n_infeasible = n_masked = 0
+    for _ in range(110):
+        items = _random_market(rng)
+        market = compile_market(items)
+        reqs = [int(rng.integers(0, 90))
+                for _ in range(int(rng.integers(1, 4)))]
+        excludes = [_random_exclude(rng, len(items)) for _ in reqs]
+        n_masked += sum(e is not None for e in excludes)
+        got_n = bracketed_gss_many(items, reqs, market=market,
+                                   excludes=excludes, timer=fake,
+                                   backend=NUMPY)
+        got_f = bracketed_gss_many(items, reqs, market=market,
+                                   excludes=excludes, timer=fake,
+                                   backend=FUSED)
+        got_j = bracketed_gss_many(items, reqs, market=market,
+                                   excludes=excludes, timer=fake,
+                                   backend=JAX)
+        sn = _gss_summary(got_n)
+        assert sn == _gss_summary(got_f) == _gss_summary(got_j)
+        n_infeasible += sum(p is None for p, _t in got_n)
+    assert n_infeasible > 0 and n_masked > 10
+    assert FUSED.device_cache_info()["fallback_solves"] == base_fb
+
+
+@requires_jax
+def test_fused_empty_market_and_zero_demand():
+    fake = lambda: 0.0                                     # noqa: E731
+    (p0, _t), = bracketed_gss_many([], [0], timer=fake, backend=FUSED)
+    assert p0 is not None and p0.as_dict() == {}
+    (p1, _t), = bracketed_gss_many([], [5], timer=fake, backend=FUSED)
+    assert p1 is None
+
+
+@requires_jax
+def test_fused_pallas_spec_matches_numpy():
+    """``jax:fused:pallas`` (real cover-DP + scoring kernels, interpret
+    mode on CPU) selects the identical pools; small markets only — the
+    interpreter is slow."""
+    pallas = make_backend("jax:fused:pallas")
+    rng = np.random.default_rng(23)
+    fake = lambda: 0.0                                     # noqa: E731
+    for _ in range(3):
+        items = _random_market(rng, max_items=6, max_t3=4)
+        market = compile_market(items)
+        reqs = [int(rng.integers(0, 40))]
+        got_n = bracketed_gss_many(items, reqs, market=market, timer=fake,
+                                   backend=NUMPY)
+        got_p = bracketed_gss_many(items, reqs, market=market, timer=fake,
+                                   backend=pallas)
+        assert _gss_summary(got_n) == _gss_summary(got_p)
+
+
+@requires_jax
+def test_fused_device_cache_hit_and_invalidation():
+    """CompiledMarket arrays upload once per (digest, pad-shape): a repeat
+    dispatch is a cache hit, a changed market (new digest) is a miss, and
+    the LRU keeps serving the old entry if it returns."""
+    be = make_backend("jax:fused")
+    rng = np.random.default_rng(7)
+    fake = lambda: 0.0                                     # noqa: E731
+    items_a = _random_market(rng, max_items=6)
+    items_b = _random_market(rng, max_items=6)
+    market_a = compile_market(items_a)
+    market_b = compile_market(items_b)
+    assert market_a.digest != market_b.digest
+    bracketed_gss_many(items_a, [20], market=market_a, timer=fake,
+                       backend=be)
+    info0 = be.device_cache_info()
+    assert info0["misses"] >= 1
+    bracketed_gss_many(items_a, [25], market=market_a, timer=fake,
+                       backend=be)
+    info1 = be.device_cache_info()
+    assert info1["hits"] > info0["hits"]          # same digest: resident
+    assert info1["misses"] == info0["misses"]
+    bracketed_gss_many(items_b, [20], market=market_b, timer=fake,
+                       backend=be)
+    info2 = be.device_cache_info()
+    assert info2["misses"] > info1["misses"]      # new digest: re-upload
+
+
+@requires_jax
+def test_fleet_fused_traces_byte_identical():
+    """FleetSim with ``backend="jax:fused"`` (string spec resolved via
+    make_backend) produces byte-identical traces, decisions and float
+    totals to the default numpy plane, and surfaces the device-cache
+    counters in cache_stats."""
+    from repro.risk import backtest
+    from repro.sim import run_fleet
+    sc = backtest.price_shock_scenario(duration_hours=24.0,
+                                       max_offerings=60)
+    base = run_fleet(sc, [0, 1], record_traces=True)
+    fused = run_fleet(sc, [0, 1], record_traces=True,
+                      backend="jax:fused")
+    for a, b in zip(base, fused):
+        assert a.records == b.records
+        assert a.total_cost == b.total_cost
+        assert a.total_perf_hours == b.total_perf_hours
+        assert [(r, d.pool.as_dict(), d.alpha, d.metrics)
+                for r, d in a.decisions] == \
+               [(r, d.pool.as_dict(), d.alpha, d.metrics)
+                for r, d in b.decisions]
+    stats = fused[0].cache_stats
+    assert stats.get("device_cache_fallback_solves") == 0
+    assert stats.get("device_cache_entries", 0) >= 1
