@@ -111,6 +111,18 @@ def _default_reference(measured: dict) -> dict:
 
 def run(update: bool = False, smoke: bool = False,
         repeat: int = 3) -> int:
+    # references are only ever written under an explicit --update: a gate
+    # that auto-refreshes on a missing reference is a silent no-op pass in
+    # CI (a deleted or unshipped PERF_REFERENCE.json would mask every
+    # regression), so gate mode fails fast — before the measurement —
+    # when the file is absent
+    if not update and not os.path.exists(REFERENCE_PATH):
+        print(f"perf_gate: FAILED — reference file missing: "
+              f"{REFERENCE_PATH}")
+        print("perf_gate: a gate without references cannot detect "
+              "regressions; run `python -m benchmarks.perf_gate --update` "
+              "and commit the refreshed PERF_REFERENCE.json")
+        return 1
     n_dec = 4 if smoke else 8
     measured = measure(n_dec, repeat=repeat)
     entry = {
@@ -121,7 +133,7 @@ def run(update: bool = False, smoke: bool = False,
     }
     with open(TRAJECTORY_PATH, "a") as f:
         f.write(json.dumps(entry) + "\n")
-    if update or not os.path.exists(REFERENCE_PATH):
+    if update:
         with open(REFERENCE_PATH, "w") as f:
             json.dump(_default_reference(measured), f, indent=2)
         print(f"perf_gate: reference refreshed → {REFERENCE_PATH}")

@@ -189,6 +189,39 @@ def _bucket(n: int, steps: Sequence[int]) -> int:
     return ((n + step - 1) // step) * step
 
 
+_X64_WARNED = False
+
+
+def _ensure_x64(jax) -> None:
+    """Backend-init x64 check: the float64 kernel contract (module
+    docstring) requires ``jax_enable_x64``.  Enabling it is *process-wide*
+    — a global-config mutation co-resident JAX code in the embedding
+    application may not expect (float32 default semantics change, programs
+    compiled before the flip retrace) — so the flip is announced with a
+    one-time ``RuntimeWarning``, and ``KUBEPACS_JAX_X64=0`` forbids it
+    outright: the embedder must then enable x64 itself before constructing
+    a jax backend, and construction fails loudly rather than silently
+    running the solver outside its float64 contract."""
+    global _X64_WARNED
+    if jax.config.jax_enable_x64:
+        return
+    if os.environ.get("KUBEPACS_JAX_X64", "1").lower() in ("0", "false",
+                                                           "no"):
+        raise RuntimeError(
+            "KubePACS jax backends require jax_enable_x64, and "
+            "KUBEPACS_JAX_X64=0 forbids enabling it process-wide; run "
+            "jax.config.update('jax_enable_x64', True) in the embedding "
+            "application before constructing a jax backend")
+    if not _X64_WARNED:
+        warnings.warn(
+            "KubePACS jax backend is enabling jax_enable_x64 process-wide "
+            "(the solver's float64 bit-identity contract); set "
+            "KUBEPACS_JAX_X64=0 to forbid this and manage the flag in the "
+            "embedding application instead", RuntimeWarning, stacklevel=3)
+        _X64_WARNED = True
+    jax.config.update("jax_enable_x64", True)
+
+
 class JaxBackend(SolverBackend):
     """``jax.lax.scan`` cover-DP, jitted, batched over padded groups.
 
@@ -198,12 +231,15 @@ class JaxBackend(SolverBackend):
     ``G``/``B``/``R`` are bucketed so the jit cache stays small across the
     varying shapes of a simulation run.  All arithmetic runs in float64:
     constructing any jax backend enables x64 *process-wide* once (an
-    idempotent ``jax.config.update`` at init).  The earlier per-dispatch
-    ``enable_x64`` scoping flipped global trace state between callers,
-    which forced jit re-traces of long-lived programs (the fused
-    ``while_loop`` below most of all) whenever a non-x64 caller ran in
-    between; a process-level init check costs nothing and keeps every
-    compiled program valid for the life of the process.
+    idempotent ``jax.config.update`` at init, announced by a one-time
+    ``RuntimeWarning``; ``KUBEPACS_JAX_X64=0`` forbids the mutation and
+    makes the embedding application responsible for the flag — see
+    :func:`_ensure_x64`).  The earlier per-dispatch ``enable_x64`` scoping
+    flipped global trace state between callers, which forced jit re-traces
+    of long-lived programs (the fused ``while_loop`` below most of all)
+    whenever a non-x64 caller ran in between; a process-level init check
+    costs nothing and keeps every compiled program valid for the life of
+    the process.
 
     ``pallas=True`` swaps the inner relaxation step for a Pallas kernel
     (`repro.kernels` idiom); on CPU it runs in interpreter mode — a
@@ -221,8 +257,7 @@ class JaxBackend(SolverBackend):
     def __init__(self, pallas: bool = False):
         import jax  # deferred: jax is optional for the solver path
 
-        if not jax.config.jax_enable_x64:
-            jax.config.update("jax_enable_x64", True)
+        _ensure_x64(jax)
         self._jax = jax
         self._jnp = jax.numpy
         self.pallas = bool(pallas)
@@ -422,11 +457,19 @@ class FusedJaxBackend(JaxBackend):
     ``pallas=True`` (spec ``"jax:fused:pallas"``) swaps the scan cover-DP
     stage for a Pallas kernel — grid over bundle blocks, BlockSpec-tiled
     value rows, improvement bits emitted in-kernel — plus a Pallas scoring
-    kernel; on CPU both run in interpreter mode (a bring-up path), on
-    GPU they lower (f64 Pallas does not lower on TPU).  With the default
-    ``"jax:fused"`` spec, Pallas is selected automatically off-CPU and the
-    ``lax.scan``/``while_loop`` path is the CPU fallback inside the same
-    fused program.
+    kernel; on CPU both run in interpreter mode (a bring-up path), off-CPU
+    they lower (f64 Pallas does not lower on TPU).  With the default
+    ``"jax:fused"`` spec, Pallas is *requested* automatically off-CPU and
+    the ``lax.scan``/``while_loop`` path is the CPU fallback inside the
+    same fused program — but every Pallas request (auto or forced) is
+    gated on :meth:`_pallas_ok`, a one-time bitwise probe of the cover
+    kernel against the NumPy reference on the live lowering.  The cover
+    kernel's revisited-accumulator idiom requires *sequential* grid
+    execution, which interpret mode and TPU guarantee but the GPU (Triton)
+    lowering does not — there grid programs run concurrently and the
+    loop-carried dp row races — so a lowering that cannot reproduce the
+    host bitwise keeps the scan path instead of silently corrupting
+    selections.
     """
 
     name = "jax:fused"
@@ -457,7 +500,9 @@ class FusedJaxBackend(JaxBackend):
         self.fallback_solves = 0
         self.fused_records = 0
         self.program_builds = 0
+        self.verify_solves = 0
         self._selfcheck_ok: Optional[bool] = None
+        self._pallas_checked: Optional[bool] = None
         self._record_warned = False
 
     # -- device market cache -------------------------------------------------
@@ -506,11 +551,126 @@ class FusedJaxBackend(JaxBackend):
                 "misses": self.device_cache_misses,
                 "entries": len(self._market_cache),
                 "fallback_solves": self.fallback_solves,
+                "verify_solves": self.verify_solves,
                 "program_builds": self.program_builds}
 
     def _fused_flags(self) -> Tuple[bool, bool]:
         on_cpu = self._jax.default_backend() == "cpu"
-        return (self.fused_pallas or not on_cpu), on_cpu
+        want_pallas = self.fused_pallas or not on_cpu
+        return (want_pallas and self._pallas_ok(on_cpu)), on_cpu
+
+    # -- Pallas cover-DP kernel (shared by the fused programs and the
+    # kernel self-check) ------------------------------------------------------
+    def _pallas_cover_fn(self, W: int, B: int, interpret: bool):
+        """Build ``pallas_cover(pseq, cseq) -> (dp, bits)`` at tier width
+        ``W`` over ``B`` padded bundles: grid over bundle blocks, the
+        (1, W) dp value row revisited as the same output block every grid
+        step (accumulator idiom), improvement bits emitted in-kernel into
+        each block's (block_b, W) tile.  Masked bundles (cost +inf) are
+        inert: cand = sh + inf never beats dp.
+
+        The accumulator idiom makes grid steps *sequentially dependent* —
+        correct wherever the grid executes in order (interpret mode, TPU)
+        and racy under parallel-grid lowerings (GPU/Triton) — which is why
+        every production use is gated on :meth:`_pallas_ok`'s bitwise
+        probe of this very builder."""
+        jax, jnp = self._jax, self._jnp
+        lax = jax.lax
+        f64 = jnp.float64
+        from jax.experimental import pallas as pl
+
+        block_b = min(B, 32)
+        if B % block_b:
+            raise ValueError(
+                f"pallas cover kernel: bundle pad B={B} is not a multiple "
+                f"of block_b={block_b} — grid=(B // block_b,) would "
+                "silently drop the remainder bundles; every _BF_STEPS "
+                "rung (and the beyond-ladder rounding step) must stay a "
+                "multiple of 32")
+
+        def _cover_kernel(pb_ref, cb_ref, dp_ref, bits_ref):
+            @pl.when(pl.program_id(0) == 0)
+            def _init():
+                dp_ref[...] = jnp.full((1, W), jnp.inf,
+                                       dtype=f64).at[0, 0].set(0.0)
+
+            jcol = lax.broadcasted_iota(jnp.int32, (1, W), 1)
+
+            def body(i, dp):
+                pb = pb_ref[i]
+                cb = cb_ref[i]
+                pbc = jnp.clip(pb, 0, W).astype(jnp.int32)
+                ext = jnp.concatenate(
+                    [jnp.zeros((1, W), f64), dp], axis=1)
+                sh = lax.dynamic_slice(
+                    ext, (jnp.int32(0), W - pbc), (1, W))
+                cand = jnp.where(jcol == 0, jnp.inf, sh + cb)
+                bits_ref[i, :] = (cand < dp)[0]
+                return jnp.minimum(dp, cand)
+
+            dp_ref[...] = lax.fori_loop(0, block_b, body, dp_ref[...])
+
+        def pallas_cover(pseq, cseq):
+            dp, bits = pl.pallas_call(
+                _cover_kernel,
+                grid=(B // block_b,),
+                in_specs=[
+                    pl.BlockSpec((block_b,), lambda k: (k,)),
+                    pl.BlockSpec((block_b,), lambda k: (k,)),
+                ],
+                out_specs=(
+                    pl.BlockSpec((1, W), lambda k: (0, 0)),
+                    pl.BlockSpec((block_b, W), lambda k: (k, 0)),
+                ),
+                out_shape=(
+                    jax.ShapeDtypeStruct((1, W), f64),
+                    jax.ShapeDtypeStruct((B, W), jnp.bool_),
+                ),
+                interpret=interpret,
+            )(pseq, cseq)
+            return dp[0], bits
+
+        return pallas_cover
+
+    def _pallas_ok(self, interpret: bool) -> bool:
+        """One-time bitwise probe of the Pallas cover kernel on the live
+        lowering.  The kernel assumes sequential grid execution (see
+        :meth:`_pallas_cover_fn`); rather than hard-coding platform
+        assumptions, solve a reference bundle sequence through the real
+        kernel — same interpret flag as production — and require dp *and*
+        bits bitwise equal to the NumPy reference.  Any mismatch (e.g. a
+        parallel-grid GPU lowering racing the dp accumulator) or lowering
+        failure keeps the fused programs on the ``lax.scan`` path: same
+        selections, no Pallas."""
+        if self._pallas_checked is None:
+            try:
+                self._pallas_checked = self._run_pallas_check(interpret)
+            except Exception as exc:  # pragma: no cover - lowering-specific
+                warnings.warn(
+                    "pallas cover-DP kernel disabled (self-check raised "
+                    f"{exc!r}); fused programs use the lax.scan path",
+                    RuntimeWarning)
+                self._pallas_checked = False
+        return self._pallas_checked
+
+    def _run_pallas_check(self, interpret: bool) -> bool:
+        W, B = 129, 256     # 8 grid blocks: a parallel lowering must race
+        cover = self._jax.jit(self._pallas_cover_fn(W, B, interpret))
+        rng = np.random.default_rng(17)
+        pods = rng.integers(1, 200, size=B)     # > W rows hit the clip path
+        costs = rng.uniform(0.01, 3.0, size=B)
+        costs[rng.random(B) < 0.25] = np.inf
+        dp_d, bits_d = cover(pods.astype(np.int64), costs)
+        dp_h, bits_h = NumpyBackend._one(pods.astype(np.int64), costs, W - 1)
+        ok = (np.asarray(dp_d).tobytes() == dp_h.tobytes()
+              and np.array_equal(np.asarray(bits_d), bits_h))
+        if not ok:   # pragma: no cover - depends on lowering
+            warnings.warn(
+                "pallas cover-DP kernel disabled: device dp/bits do not "
+                "match the host reference on this backend (parallel grid "
+                "execution?); fused programs use the lax.scan path",
+                RuntimeWarning)
+        return ok
 
     # -- the device row solver (traced context) ------------------------------
     def _solver_core(self, md, z, N: int, B: int, RC: int,
@@ -612,59 +772,8 @@ class FusedJaxBackend(JaxBackend):
 
             if not use_pallas:
                 return cover_values, cover_bits_scan, None
-
-            from jax.experimental import pallas as pl
-
-            block_b = min(B, 32)
-
-            def _cover_kernel(pb_ref, cb_ref, dp_ref, bits_ref):
-                # grid over bundle blocks; the dp value row is the (1, W)
-                # output block revisited every grid step (accumulator
-                # idiom), improvement bits are emitted in-kernel into the
-                # block's (block_b, W) tile.  Masked bundles (cost +inf)
-                # are inert: cand = sh + inf never beats dp.
-                @pl.when(pl.program_id(0) == 0)
-                def _init():
-                    dp_ref[...] = jnp.full((1, W), jnp.inf,
-                                           dtype=f64).at[0, 0].set(0.0)
-
-                jcol = lax.broadcasted_iota(jnp.int32, (1, W), 1)
-
-                def body(i, dp):
-                    pb = pb_ref[i]
-                    cb = cb_ref[i]
-                    pbc = jnp.clip(pb, 0, W).astype(jnp.int32)
-                    ext = jnp.concatenate(
-                        [jnp.zeros((1, W), f64), dp], axis=1)
-                    sh = lax.dynamic_slice(
-                        ext, (jnp.int32(0), W - pbc), (1, W))
-                    cand = jnp.where(jcol == 0, jnp.inf, sh + cb)
-                    bits_ref[i, :] = (cand < dp)[0]
-                    return jnp.minimum(dp, cand)
-
-                dp_ref[...] = lax.fori_loop(0, block_b, body, dp_ref[...])
-
-            def pallas_cover(pseq, cseq):
-                dp, bits = pl.pallas_call(
-                    _cover_kernel,
-                    grid=(B // block_b,),
-                    in_specs=[
-                        pl.BlockSpec((block_b,), lambda k: (k,)),
-                        pl.BlockSpec((block_b,), lambda k: (k,)),
-                    ],
-                    out_specs=(
-                        pl.BlockSpec((1, W), lambda k: (0, 0)),
-                        pl.BlockSpec((block_b, W), lambda k: (k, 0)),
-                    ),
-                    out_shape=(
-                        jax.ShapeDtypeStruct((1, W), f64),
-                        jax.ShapeDtypeStruct((B, W), jnp.bool_),
-                    ),
-                    interpret=interpret,
-                )(pseq, cseq)
-                return dp[0], bits
-
-            return cover_values, cover_bits_scan, pallas_cover
+            return (cover_values, cover_bits_scan,
+                    self._pallas_cover_fn(W, B, interpret))
 
         tiers = _rc_tiers(RC)
         tier_tools = [dp_tools(W) for W in tiers]
@@ -1090,6 +1199,12 @@ class FusedJaxBackend(JaxBackend):
         try:
             rec = _FusedGssRecord(self, items, market, reqs, excludes,
                                   grid, tolerance)
+        except _PrescanMismatch:
+            # the sampled host cross-check failed: device counts cannot be
+            # trusted on this build — disable the fused path for the
+            # process (already warned in _verify_sample)
+            self._selfcheck_ok = False
+            return None
         except Exception as exc:
             if not self._record_warned:
                 warnings.warn(
@@ -1099,6 +1214,10 @@ class FusedJaxBackend(JaxBackend):
             return None
         self.fused_records += 1
         return rec
+
+
+class _PrescanMismatch(RuntimeError):
+    """Device prescan counts failed the sampled host cross-check."""
 
 
 class _FusedGssRecord:
@@ -1133,6 +1252,38 @@ class _FusedGssRecord:
         for d, row in enumerate(self.prescan):
             for a, c in zip(grid, row):
                 self._lookup[d].setdefault(float(a), c)
+        self._verify_sample(list(grid))
+
+    def _verify_sample(self, grid: List[float]) -> None:
+        """Prescan fail-safe, mirroring the golden phase's lookup-miss
+        host solve: before the record is trusted, one sampled
+        (decision, α) row per batch — rotated through decisions and grid
+        points by the backend's ``verify_solves`` counter — is re-solved
+        on the NumPy engine and compared exactly.  Any divergence (an
+        XLA build or lowering whose numerics the rmul/Pallas self-checks
+        did not anticipate) raises :class:`_PrescanMismatch`, which
+        permanently disables the fused path — a warned, counted event —
+        instead of silently changing selections."""
+        if not self._reqs or not grid:
+            return
+        be = self._backend
+        d = be.verify_solves % len(self._reqs)
+        g = be.verify_solves % len(grid)
+        be.verify_solves += 1
+        from .ilp import solve_ilp_many   # deferred: no import cycle
+        ref = solve_ilp_many(
+            self._items, [self._reqs[d]], [[float(grid[g])]],
+            market=self._market, excludes=[self._excludes[d]],
+            backend=be._host_fallback)[0][0]
+        if ref != self.prescan[d][g]:
+            warnings.warn(
+                "fused jax decision plane disabled: device prescan counts "
+                f"diverged from the host engine (decision {d}, alpha "
+                f"{float(grid[g])!r}); falling back to per-round dispatch",
+                RuntimeWarning)
+            raise _PrescanMismatch(
+                f"prescan verification mismatch at decision {d}, "
+                f"alpha {float(grid[g])!r}")
 
     def run_golden(self, a_list, b_list) -> None:
         ev_a, ev_c, ev_f, evn = self._backend._run_golden(

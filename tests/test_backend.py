@@ -334,6 +334,42 @@ def test_solver_core_importable_without_jax(monkeypatch):
         assert not any(line.startswith("import jax") for line in src)
 
 
+@requires_jax
+def test_x64_flip_env_opt_out_and_warning():
+    """Constructing a jax backend enables jax_enable_x64 process-wide —
+    announced by a one-time RuntimeWarning — and KUBEPACS_JAX_X64=0
+    forbids the global-config mutation outright (fresh subprocess: this
+    process flipped the flag long ago)."""
+    import os
+    import subprocess
+    import sys
+    src = os.path.dirname(os.path.dirname(os.path.dirname(
+        os.path.abspath(backend_mod.__file__))))
+    code = (
+        "import os, warnings\n"
+        "os.environ['KUBEPACS_JAX_X64'] = '0'\n"
+        "from repro.core import make_backend\n"
+        "try:\n"
+        "    make_backend('jax')\n"
+        "    raise SystemExit('opt-out did not refuse')\n"
+        "except RuntimeError as e:\n"
+        "    assert 'jax_enable_x64' in str(e)\n"
+        "    print('REFUSED')\n"
+        "del os.environ['KUBEPACS_JAX_X64']\n"
+        "with warnings.catch_warnings(record=True) as w:\n"
+        "    warnings.simplefilter('always')\n"
+        "    make_backend('jax')\n"
+        "assert any('x64' in str(x.message) for x in w)\n"
+        "print('WARNED')\n"
+    )
+    env = dict(os.environ, PYTHONPATH=src)
+    env.pop("KUBEPACS_JAX_X64", None)
+    res = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=300)
+    assert res.returncode == 0, res.stderr
+    assert "REFUSED" in res.stdout and "WARNED" in res.stdout
+
+
 # ------------------------------------------------- fused decision plane ----
 
 FUSED = make_backend("jax:fused") if HAVE_JAX else None
@@ -435,6 +471,82 @@ def test_fused_device_cache_hit_and_invalidation():
                        backend=be)
     info2 = be.device_cache_info()
     assert info2["misses"] > info1["misses"]      # new digest: re-upload
+
+
+@requires_jax
+def test_pallas_cover_block_divisibility_guard():
+    """A bundle pad that is not a multiple of the 32-wide kernel block
+    must fail loudly at build time, not silently truncate the grid."""
+    with pytest.raises(ValueError, match="multiple"):
+        FUSED._pallas_cover_fn(129, 33, True)
+    for rung in backend_mod.FusedJaxBackend._BF_STEPS:
+        assert rung % 32 == 0 or rung < 32   # the invariant the guard pins
+
+
+@requires_jax
+def test_pallas_kernel_selfcheck_bitwise_on_live_lowering():
+    """The cover kernel's sequential-grid accumulator idiom is only
+    trusted after a bitwise dp+bits probe against the NumPy reference on
+    the live lowering (interpret mode here); a failing probe silently
+    drops the fused programs back to the lax.scan path — selections
+    unchanged."""
+    be = make_backend("jax:fused:pallas")
+    assert be._run_pallas_check(interpret=True) is True
+    assert be._fused_flags() == (True, True)
+
+    # simulate a racy lowering (GPU/Triton parallel grid): the kernel is
+    # refused and the scan path still selects numpy's pools
+    be_bad = make_backend("jax:fused:pallas")
+    be_bad._run_pallas_check = lambda interpret: False
+    assert be_bad._fused_flags()[0] is False
+    rng = np.random.default_rng(31)
+    fake = lambda: 0.0                                     # noqa: E731
+    items = _random_market(rng, max_items=6, max_t3=4)
+    market = compile_market(items)
+    got_n = bracketed_gss_many(items, [15], market=market, timer=fake,
+                               backend=NUMPY)
+    got_b = bracketed_gss_many(items, [15], market=market, timer=fake,
+                               backend=be_bad)
+    assert _gss_summary(got_n) == _gss_summary(got_b)
+
+
+@requires_jax
+def test_prescan_host_crosscheck_disables_fused_on_divergence():
+    """Device prescan counts are never consumed unverified: each batch
+    cross-checks one sampled (decision, α) row against the NumPy engine,
+    and a mismatch warns, permanently disables the fused path, and leaves
+    selections on the host engine — bit-identical, never corrupted."""
+    be = make_backend("jax:fused")
+    orig = be._run_prescan
+
+    def corrupted(market, reqs, excludes, grid):
+        counts, feas = orig(market, reqs, excludes, grid)
+        counts = np.asarray(counts).copy()
+        counts[..., 0] += 1                  # silent device-side corruption
+        feas = np.ones_like(np.asarray(feas))
+        return counts, feas
+
+    be._run_prescan = corrupted
+    rng = np.random.default_rng(41)
+    fake = lambda: 0.0                                     # noqa: E731
+    items = _random_market(rng, max_items=6)
+    market = compile_market(items)
+    got_n = bracketed_gss_many(items, [20], market=market, timer=fake,
+                               backend=NUMPY)
+    with pytest.warns(RuntimeWarning, match="diverged"):
+        got_f = bracketed_gss_many(items, [20], market=market, timer=fake,
+                                   backend=be)
+    assert _gss_summary(got_n) == _gss_summary(got_f)
+    assert be._fused_ok() is False           # disabled for the process
+    # subsequent batches decline the fused path outright (no new warning,
+    # no record) and stay correct
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        got_f2 = bracketed_gss_many(items, [25], market=market, timer=fake,
+                                    backend=be)
+    got_n2 = bracketed_gss_many(items, [25], market=market, timer=fake,
+                                backend=NUMPY)
+    assert _gss_summary(got_n2) == _gss_summary(got_f2)
 
 
 @requires_jax

@@ -1,0 +1,49 @@
+"""Perf-gate harness behavior (benchmarks/perf_gate.py): the gate must
+fail loudly — not silently refresh and pass — when the checked-in
+reference file is absent, and only write references under an explicit
+``--update``."""
+
+import json
+import os
+
+import pytest
+
+from benchmarks import perf_gate
+
+
+def test_gate_mode_fails_fast_when_reference_missing(tmp_path, monkeypatch,
+                                                     capsys):
+    """A deleted or unshipped PERF_REFERENCE.json in CI must be a gate
+    failure (before any measurement runs), never a no-op pass."""
+    monkeypatch.setattr(perf_gate, "REFERENCE_PATH",
+                        str(tmp_path / "PERF_REFERENCE.json"))
+    monkeypatch.setattr(perf_gate, "TRAJECTORY_PATH",
+                        str(tmp_path / "PERF_trajectory.jsonl"))
+    monkeypatch.setattr(
+        perf_gate, "measure",
+        lambda *a, **k: pytest.fail("gate mode must not measure without "
+                                    "a reference file"))
+    assert perf_gate.run(update=False, smoke=True) == 1
+    out = capsys.readouterr().out
+    assert "reference file missing" in out and "--update" in out
+    assert not os.path.exists(perf_gate.REFERENCE_PATH)   # not auto-created
+    assert not os.path.exists(perf_gate.TRAJECTORY_PATH)  # nothing appended
+
+
+def test_update_mode_writes_reference(tmp_path, monkeypatch):
+    """--update is the only path that (re)creates the reference file."""
+    monkeypatch.setattr(perf_gate, "REFERENCE_PATH",
+                        str(tmp_path / "PERF_REFERENCE.json"))
+    monkeypatch.setattr(perf_gate, "TRAJECTORY_PATH",
+                        str(tmp_path / "PERF_trajectory.jsonl"))
+    fake = {"config": {"n_items": 1, "base_pods": 1, "n_decisions": 1},
+            "metrics": {"batched_numpy_speedup_vs_pr1": 2.0},
+            "checks": {"pr1_equality": True}, "raw": {}}
+    monkeypatch.setattr(perf_gate, "measure", lambda *a, **k: fake)
+    assert perf_gate.run(update=True, smoke=True) == 0
+    with open(perf_gate.REFERENCE_PATH) as f:
+        ref = json.load(f)
+    assert ref["metrics"]["batched_numpy_speedup_vs_pr1"]["value"] == 2.0
+    assert os.path.exists(perf_gate.TRAJECTORY_PATH)
+    # and the freshly written reference gates a repeat measurement green
+    assert perf_gate.run(update=False, smoke=True) == 0
