@@ -4,14 +4,20 @@
 PY := PYTHONPATH=src python
 
 .PHONY: verify test bench bench-solver bench-backend bench-risk bench-fleet \
-        perf-gate docs-check
+        bench-scale perf-gate docs-check check-skips
 
-## tier-1 gate: full test suite + a smoke pass of the solver microbenchmark
+## tier-1 gate: full test suite (junitxml-audited: every skip must be in
+## tests/skip_registry.py) + a smoke pass of the solver microbenchmark
 ## + the docs gate (README quickstart runs, DESIGN.md refs resolve)
 verify:
-	$(PY) -m pytest -x -q
+	$(PY) -m pytest -x -q --junitxml=.pytest-report.xml
+	$(PY) tools/check_skips.py .pytest-report.xml
 	$(PY) -m benchmarks.bench_solver --smoke --json ""
 	$(PY) tools/docs_check.py
+
+## audit the last test run's skips against the registered-skip table
+check-skips:
+	$(PY) tools/check_skips.py .pytest-report.xml
 
 ## smoke-run README quickstart code blocks; fail on dangling DESIGN.md §refs
 docs-check:
@@ -49,3 +55,9 @@ bench-risk:
 ## decision-memo effectiveness); refreshes BENCH_fleet.json
 bench-fleet:
 	$(PY) -m benchmarks.bench_fleet --json BENCH_fleet.json
+
+## demand-scale sweep 5k → 1M pods (coarsening ladder; in-bench
+## coarse≡exact verification at overlapping scales); refreshes
+## BENCH_scale.json
+bench-scale:
+	$(PY) -m benchmarks.bench_scale --json BENCH_scale.json

@@ -29,6 +29,7 @@ import sys
 from typing import List, Optional
 
 from benchmarks.bench_backend import bench_tick
+from benchmarks.bench_scale import gate_measurement as scale_measurement
 from repro.core import jax_available
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
@@ -58,12 +59,19 @@ def measure(n_dec: int, repeat: int = 3) -> dict:
         checks["jax_selections_equal_numpy"] = \
             rec["batched_jax_selections_equal_numpy"]
         checks["fused_zero_fallbacks"] = rec["fused_fallback_solves"] == 0
+    # demand-coarsening ladder (DESIGN.md §14): the 1M-vs-5k decision-wall
+    # ratio is the only lower-is-better metric in the gate (its reference
+    # carries a *bounded* upper_tol) and the gcd tier must stay bitwise
+    scale = scale_measurement(repeat=repeat)
+    metrics["scale_1m_vs_5k_ratio"] = scale["ratio"]
+    checks["scale_gcd_tier_bitwise"] = scale["gcd_bitwise_ok"]
+    raw = {k: v for k, v in rec.items()
+           if k.endswith(("_wall_s", "_compile_s", "_ms_per_decision"))}
+    raw["scale_wall_5k_s"] = scale["wall_5k_s"]
+    raw["scale_wall_1m_s"] = scale["wall_1m_s"]
     return {"config": {"n_items": GATE_ITEMS, "base_pods": GATE_PODS,
                        "n_decisions": n_dec},
-            "metrics": metrics, "checks": checks,
-            "raw": {k: v for k, v in rec.items()
-                    if k.endswith(("_wall_s", "_compile_s",
-                                   "_ms_per_decision"))}}
+            "metrics": metrics, "checks": checks, "raw": raw}
 
 
 def gate(measured: dict, reference: dict) -> List[str]:
@@ -97,13 +105,23 @@ def _default_reference(measured: dict) -> dict:
     """References from a fresh measurement.  Bands are deliberately wide
     (-50 % on every speedup): the gate exists to catch the engine falling
     off a cliff (a lost jit cache, a host round-trip creeping back into the
-    golden loop), not to police scheduler noise on shared CI hosts."""
+    golden loop), not to police scheduler noise on shared CI hosts.
+
+    Speedups are higher-is-better, so their upper_tol is None (being
+    faster is never a regression).  ``*_ratio`` metrics are
+    lower-is-better (the 1M-vs-5k scale ratio): they get a *bounded*
+    upper_tol instead — the ratio doubling over its reference means the
+    coarsening ladder stopped absorbing the demand scale — and an
+    unbounded lower side (a cheaper 1M decision is never a regression)."""
     return {
         "benchmark": "perf_gate",
         "config": measured["config"],
         "machine": platform.machine(),
         "metrics": {
-            name: {"value": value, "lower_tol": 0.5, "upper_tol": None}
+            name: ({"value": value, "lower_tol": 1.0, "upper_tol": 1.0}
+                   if name.endswith("_ratio")
+                   else {"value": value, "lower_tol": 0.5,
+                         "upper_tol": None})
             for name, value in measured["metrics"].items()
         },
     }

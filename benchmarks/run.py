@@ -16,11 +16,11 @@ import os
 import sys
 import traceback
 
-from . import (bench_backend, bench_fleet, bench_risk, bench_solver,
-               elastic_training, fig5_sota, fig5c_spotkube, fig6_alpha,
-               fig6b_cross_provider, fig7_tolerance, fig8_preferences,
-               fig9_t3_fulfillment, fig12_interrupts, roofline_report,
-               table2_fixed_alpha, table3_perf_dollar)
+from . import (bench_backend, bench_fleet, bench_risk, bench_scale,
+               bench_solver, elastic_training, fig5_sota, fig5c_spotkube,
+               fig6_alpha, fig6b_cross_provider, fig7_tolerance,
+               fig8_preferences, fig9_t3_fulfillment, fig12_interrupts,
+               roofline_report, table2_fixed_alpha, table3_perf_dollar)
 
 ALL = [
     ("fig5_sota", fig5_sota),
@@ -35,6 +35,7 @@ ALL = [
     ("table3_perf_dollar", table3_perf_dollar),
     ("bench_solver", bench_solver),
     ("bench_backend", bench_backend),
+    ("bench_scale", bench_scale),
     ("bench_risk", bench_risk),
     ("bench_fleet", bench_fleet),
     ("elastic_training", elastic_training),

@@ -10,7 +10,8 @@ from .efficiency import (Request, CandidateItem, NodePool, pods_per_instance,
                          reweight_items, score_counts_batch,
                          score_counts_many)
 from .scaling import scaled_benchmark_score, build_base_price_index, matches_intent
-from .backend import (JaxBackend, NumpyBackend, SolverBackend, get_backend,
+from .backend import (DEFAULT_COARSENING, CoarseningConfig, JaxBackend,
+                      NumpyBackend, SolverBackend, get_backend,
                       jax_available, make_backend, set_backend)
 from .ilp import (solve_ilp, solve_ilp_batch, solve_ilp_many, solve_ilp_pulp,
                   solve_ilp_reference, objective_coefficients,
@@ -41,4 +42,5 @@ __all__ = [
     "SolveBatch", "PendingDecision",
     "SolverBackend", "NumpyBackend", "JaxBackend", "get_backend",
     "set_backend", "make_backend", "jax_available",
+    "CoarseningConfig", "DEFAULT_COARSENING",
 ]

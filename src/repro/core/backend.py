@@ -54,6 +54,7 @@ overrides the default).
 from __future__ import annotations
 
 import collections
+import dataclasses
 import math
 import os
 import warnings
@@ -64,6 +65,53 @@ import numpy as np
 #: one (bpods, costs, target) residual covering problem; ``bpods`` int64
 #: (all >= 1), ``costs`` float64 (may contain +inf), ``target`` >= 1
 CoverGroup = Tuple[np.ndarray, np.ndarray, int]
+
+
+@dataclasses.dataclass(frozen=True)
+class CoarseningConfig:
+    """Demand-coarsening policy for the residual cover DP (DESIGN.md §14).
+
+    The engine solves residuals at or below ``threshold`` exactly — the
+    default keeps every paper-scale scenario (≤ 5 k pods) byte-identical to
+    the uncoarsened engine.  Above it:
+
+    * **gcd mode** (provably exact, bit-identical selections): when the
+      market's structural pod counts share a gcd ``g > 1`` and
+      ``ceil(residual / g) <= max_rows``, the DP runs at granularity ``g``
+      — same keep set (pruning stays unscaled), same improvement bits,
+      same backtrack, 1/g of the rows.
+    * **approx mode** (bounded suboptimality): otherwise, when
+      ``allow_approx``, a greedy rate-order prefix of whole bundles is
+      committed until at most ``approx_rows`` pods of demand remain, and
+      an *exact* cover DP over the remaining bundles closes that boundary
+      window — so the DP cost is that of an ``approx_rows``-pod residual
+      regardless of demand.  The only loss is committing whole prefix
+      bundles where the fractional optimum would split one, and the
+      returned objective carries an a-posteriori certificate
+      ``gap_bound = objective - LP(residual)`` (LP = the fractional-greedy
+      lower bound, so the true optimality gap is ≤ ``gap_bound``); if the
+      certificate exceeds ``rel_gap·|LP|`` the row is silently re-solved
+      exactly (``coarse == "approx_fallback"`` in
+      :class:`~repro.core.ilp.IlpStats`).
+
+    Lives in :mod:`repro.core.backend` (not ``ilp``) because the fused
+    device programs replicate the same per-row mode decision from traced
+    ``(threshold, max_rows, gcd)`` scalars; importing from ``ilp`` would
+    create a cycle.  Frozen + hashable so configs can key solve-batch
+    groups.
+    """
+
+    enabled: bool = True
+    threshold: int = 8192
+    max_rows: int = 4096
+    approx_rows: int = 4096
+    allow_approx: bool = True
+    rel_gap: float = 0.05
+
+
+#: process-wide default: coarsening on, but inert below 8192 residual pods,
+#: so every existing scale solves byte-identically to the exact engine
+DEFAULT_COARSENING = CoarseningConfig()
 
 #: core-DP upper-bound tuning shared by the host engine (`repro.core.ilp`)
 #: and the fused device program, which must replicate the host's prune
@@ -674,7 +722,7 @@ class FusedJaxBackend(JaxBackend):
 
     # -- the device row solver (traced context) ------------------------------
     def _solver_core(self, md, z, N: int, B: int, RC: int,
-                     use_pallas: bool, interpret: bool):
+                     use_pallas: bool, interpret: bool, coarse=None):
         """Build the traced-closure toolkit shared by both fused programs.
 
         Returns ``(rmul, prep, solve_row, solve_rows, score)``.
@@ -682,12 +730,28 @@ class FusedJaxBackend(JaxBackend):
         one ``repro.core.ilp._solve_rows`` row end to end on device; every
         float op mirrors the host op-for-op (see class docstring).
         ``solve_rows`` is its batched form.
+
+        ``coarse`` is the traced ``(threshold, max_rows, gcd)`` int64
+        triple of the active :class:`CoarseningConfig` (``None`` =
+        coarsening off).  Rows whose residual exceeds the threshold and
+        whose pods all share the market gcd run the DP stages at
+        granularity ``g`` — exactly the host engine's gcd mode, so
+        recorded counts stay bit-identical (prune math is deliberately
+        left unscaled, matching the host's identical keep sets; only the
+        core-bound DP, decode DP, and backtrack use scaled pods/targets,
+        which the gcd-exactness theorem makes bitwise equal to the
+        unscaled pass).  Traced scalars, not static: changing the config
+        or the market gcd never recompiles the programs.
         """
         jax, jnp = self._jax, self._jnp
         lax = jax.lax
         (pods, bound, perf, price, structural, real, b_item, b_pods,
          b_podsf, b_copies, b_copiesf, b_struct) = md
         f64, i64, inf = jnp.float64, jnp.int64, jnp.inf
+        if coarse is None:
+            c_thr, c_maxr, c_gcd = i64(2 ** 62), i64(1), i64(1)
+        else:
+            c_thr, c_maxr, c_gcd = (jnp.asarray(x, i64) for x in coarse)
 
         def rmul(x, y):
             # correctly-rounded product exactly as the host computes it:
@@ -828,6 +892,16 @@ class FusedJaxBackend(JaxBackend):
             in_dp = active & ~neg
             capacity = jnp.sum(jnp.where(in_dp, pods * bound, i64(0)))
 
+            # gcd-mode coarsening decision, mirroring the host engine's
+            # _plan_scale: the gcd divides every structural pod count, so
+            # scaled DP/backtrack columns are bitwise the unscaled ones
+            # (DESIGN.md §14) — eff_g stays 1 (an exact identity: x // 1)
+            # below the threshold, keeping pre-coarsening numerics intact
+            rs_g = (residual + c_gcd - 1) // c_gcd
+            use_g = (residual > c_thr) & (c_gcd > 1) & (rs_g <= c_maxr)
+            eff_g = jnp.where(use_g, c_gcd, i64(1))
+            eff_res = (residual + eff_g - 1) // eff_g
+
             def make_dp_case(tools):
                 cover_values, cover_bits_scan, pallas_cover = tools
 
@@ -858,7 +932,11 @@ class FusedJaxBackend(JaxBackend):
                     lp = jnp.where(rb <= 0.0, 0.0, lp)
                     keep = (bcosts + lp) <= rmul(ub, 1.0 + 1e-12) + 1e-9
                     n_active = jnp.sum(bmask)
-                    pods_ord = b_pods[order]
+                    # DP stages run at granularity eff_g (1 = exact); the
+                    # prune math above deliberately stays unscaled so the
+                    # keep set is the exact engine's
+                    b_pods_s = b_pods // eff_g
+                    pods_ord = b_pods_s[order]
 
                     def core_case(_o):
                         K = jnp.minimum(
@@ -868,9 +946,9 @@ class FusedJaxBackend(JaxBackend):
                             ccosts = jnp.where(jnp.arange(B) < K,
                                                c_sorted, inf)
                             dp, _bits = pallas_cover(pods_ord, ccosts)
-                            return dp[residual]
+                            return dp[eff_res]
                         return cover_values(pods_ord, c_sorted, K,
-                                            residual)
+                                            eff_res)
 
                     core_ub = lax.cond(jnp.sum(keep) > _CORE_TRIGGER,
                                        core_case, lambda _o: inf, None)
@@ -891,7 +969,7 @@ class FusedJaxBackend(JaxBackend):
                     pos = jnp.where(keep, ki - 1, kept_n + ni - 1)
                     perm = jnp.zeros(B, jnp.int64).at[pos].set(
                         jnp.arange(B, dtype=jnp.int64))
-                    kp = b_pods[perm]
+                    kp = b_pods_s[perm]
                     kc = jnp.where(keep[perm], bcosts[perm], inf)
 
                     def decode(KB):
@@ -917,7 +995,7 @@ class FusedJaxBackend(JaxBackend):
                             _i, _j, take = lax.while_loop(
                                 lambda st: (st[0] >= 0) & (st[1] > 0),
                                 bt_body,
-                                (kept_n - 1, residual,
+                                (kept_n - 1, eff_res,
                                  jnp.zeros(KB, dtype=bool)))
                             return sat.at[b_item[perm[:KB]]].add(
                                 jnp.where(take, b_copies[perm[:KB]],
@@ -935,10 +1013,10 @@ class FusedJaxBackend(JaxBackend):
 
             def after_sat(_):
                 # route the row to the narrowest tier wider than its
-                # residual; lax.map preserves real branching, so a row
-                # pays only its own tier's vector width
+                # *effective* (coarsened) residual; lax.map preserves real
+                # branching, so a row pays only its own tier's vector width
                 t_idx = jnp.searchsorted(
-                    jnp.asarray(tiers), residual, side="right")
+                    jnp.asarray(tiers), eff_res, side="right")
                 t_idx = jnp.minimum(t_idx, len(tiers) - 1)
                 return lax.cond(
                     capacity < residual,
@@ -983,9 +1061,10 @@ class FusedJaxBackend(JaxBackend):
             lax = jax.lax
             use_pallas, on_cpu = self._fused_flags()
 
-            def run(md, reqs, excl, alphas, z):
+            def run(md, reqs, excl, alphas, z, thr, maxr, gran):
                 rmul, prep, _row, solve_rows, _score = self._solver_core(
-                    md, z, N, B, RC, use_pallas, on_cpu)
+                    md, z, N, B, RC, use_pallas, on_cpu,
+                    coarse=(thr, maxr, gran))
                 pn, qn, active = prep(excl)
                 di = jnp.arange(D * G) // G
                 a = alphas[jnp.arange(D * G) % G][:, None]
@@ -1007,9 +1086,10 @@ class FusedJaxBackend(JaxBackend):
             use_pallas, on_cpu = self._fused_flags()
             ME = MAXR + 2
 
-            def run(md, reqs, excl, a0, b0, tol, z):
+            def run(md, reqs, excl, a0, b0, tol, z, thr, maxr, gran):
                 rmul, prep, _row, solve_rows, score = self._solver_core(
-                    md, z, N, B, RC, use_pallas, on_cpu)
+                    md, z, N, B, RC, use_pallas, on_cpu,
+                    coarse=(thr, maxr, gran))
                 pn, qn, active = prep(excl)
                 reqf = reqs.astype(jnp.float64)
                 dn = jnp.arange(D)
@@ -1087,12 +1167,31 @@ class FusedJaxBackend(JaxBackend):
         return fn
 
     # -- host-side drivers ---------------------------------------------------
-    def _shape_key(self, market, reqs, n_dec):
+    def _shape_key(self, market, reqs, n_dec, coarsening=None):
         N = _bucket(max(market.n, 1), self._N_STEPS)
         B = _bucket(max(market.n_bundles, 1), self._BF_STEPS)
-        RC = _bucket(max(max(reqs, default=1), 1), self._RF_STEPS) + 1
+        width = max(max(reqs, default=1), 1)
+        if (coarsening is not None and coarsening.enabled
+                and width > coarsening.threshold
+                and market.pods_gcd > 1):
+            # gcd-coarsened rows need ceil(req/g) DP rows; rows whose
+            # residual stays below the threshold need the threshold width
+            width = max(coarsening.threshold,
+                        -(-width // market.pods_gcd))
+        RC = _bucket(width, self._RF_STEPS) + 1
         D = _bucket(max(n_dec, 1), self._D_STEPS)
         return N, B, RC, D
+
+    def _coarse_scalars(self, market, coarsening):
+        """The ``(threshold, max_rows, gcd)`` int64 triple handed to the
+        compiled programs as *traced* scalars (config or market changes
+        never force a recompile).  Coarsening off → an unreachable
+        threshold, so every row takes the exact path."""
+        if coarsening is None or not coarsening.enabled:
+            return np.int64(2 ** 62), np.int64(1), np.int64(1)
+        return (np.int64(coarsening.threshold),
+                np.int64(coarsening.max_rows),
+                np.int64(max(market.pods_gcd, 1)))
 
     def _pad_decisions(self, market, reqs, excludes, N, D):
         rq = np.zeros(D, np.int64)
@@ -1103,23 +1202,25 @@ class FusedJaxBackend(JaxBackend):
                 ex[d, :market.n] = mask
         return rq, ex
 
-    def _run_prescan(self, market, reqs, excludes, grid):
+    def _run_prescan(self, market, reqs, excludes, grid, coarsening=None):
         Dr, G = len(reqs), len(grid)
-        N, B, RC, D = self._shape_key(market, reqs, Dr)
+        N, B, RC, D = self._shape_key(market, reqs, Dr, coarsening)
         md = self._device_market(market, N, B)
         rq, ex = self._pad_decisions(market, reqs, excludes, N, D)
+        thr, maxr, gran = self._coarse_scalars(market, coarsening)
         fn = self._prescan_compiled(N, B, RC, D, G)
         counts, feas = fn(md, rq, ex, np.asarray(grid, np.float64),
-                          np.int64(0))
+                          np.int64(0), thr, maxr, gran)
         return (np.asarray(counts)[:Dr, :, :market.n],
                 np.asarray(feas)[:Dr])
 
     def _run_golden(self, market, reqs, excludes, a_list, b_list,
-                    tolerance):
+                    tolerance, coarsening=None):
         Dr = len(reqs)
-        N, B, RC, D = self._shape_key(market, reqs, Dr)
+        N, B, RC, D = self._shape_key(market, reqs, Dr, coarsening)
         md = self._device_market(market, N, B)
         rq, ex = self._pad_decisions(market, reqs, excludes, N, D)
+        thr, maxr, gran = self._coarse_scalars(market, coarsening)
         # round budget: any bracket is <= 1 wide and shrinks by PHI per
         # round, so ceil(log(tol)/log(PHI)) rounds suffice (+2 slack)
         MAXR = (int(math.ceil(math.log(tolerance) / math.log(_PHI))) + 2
@@ -1130,7 +1231,8 @@ class FusedJaxBackend(JaxBackend):
         b0[:Dr] = b_list
         fn = self._golden_compiled(N, B, RC, D, MAXR)
         ev_a, ev_c, ev_f, evn = fn(md, rq, ex, a0, b0,
-                                   np.float64(tolerance), np.int64(0))
+                                   np.float64(tolerance), np.int64(0),
+                                   thr, maxr, gran)
         return (np.asarray(ev_a)[:Dr], np.asarray(ev_c)[:Dr, :, :market.n],
                 np.asarray(ev_f)[:Dr], np.asarray(evn)[:Dr])
 
@@ -1187,18 +1289,27 @@ class FusedJaxBackend(JaxBackend):
         return ok
 
     def fused_gss_record(self, items, market, reqs, excludes, grid,
-                         tolerance) -> Optional["_FusedGssRecord"]:
+                         tolerance,
+                         coarsening=None) -> Optional["_FusedGssRecord"]:
         """Run the device-resident prescan for a ``bracketed_gss_many``
         batch and return the replay record, or None to decline (empty
-        market, failed self-check, or a device error — all of which leave
-        the caller on the ordinary per-round path)."""
+        market, failed self-check, a device error, or a batch whose
+        coarsening ladder would need the approx tier — the device plane
+        only implements the exact and gcd modes, so approx-regime batches
+        stay on the host engine)."""
         if market.n == 0 or market.n_bundles == 0:
             return None
+        cfg = DEFAULT_COARSENING if coarsening is None else coarsening
+        max_req = max((int(r) for r in reqs), default=0)
+        if cfg.enabled and max_req > cfg.threshold:
+            g = market.pods_gcd
+            if not (g > 1 and -(-max_req // g) <= cfg.max_rows):
+                return None
         if not self._fused_ok():
             return None
         try:
             rec = _FusedGssRecord(self, items, market, reqs, excludes,
-                                  grid, tolerance)
+                                  grid, tolerance, cfg)
         except _PrescanMismatch:
             # the sampled host cross-check failed: device counts cannot be
             # trusted on this build — disable the fused path for the
@@ -1235,15 +1346,17 @@ class _FusedGssRecord:
     """
 
     def __init__(self, backend, items, market, reqs, excludes, grid,
-                 tolerance):
+                 tolerance, coarsening=None):
         self._backend = backend
         self._items = list(items)
         self._market = market
         self._reqs = [int(r) for r in reqs]
         self._excludes = list(excludes)
         self._tolerance = float(tolerance)
+        self._coarsening = coarsening
         counts, feas = backend._run_prescan(market, self._reqs,
-                                            self._excludes, list(grid))
+                                            self._excludes, list(grid),
+                                            coarsening=coarsening)
         self.prescan = [
             [list(map(int, counts[d, g])) if feas[d, g] else None
              for g in range(len(grid))]
@@ -1274,7 +1387,8 @@ class _FusedGssRecord:
         ref = solve_ilp_many(
             self._items, [self._reqs[d]], [[float(grid[g])]],
             market=self._market, excludes=[self._excludes[d]],
-            backend=be._host_fallback)[0][0]
+            backend=be._host_fallback,
+            coarsening=self._coarsening)[0][0]
         if ref != self.prescan[d][g]:
             warnings.warn(
                 "fused jax decision plane disabled: device prescan counts "
@@ -1289,7 +1403,7 @@ class _FusedGssRecord:
         ev_a, ev_c, ev_f, evn = self._backend._run_golden(
             self._market, self._reqs, self._excludes,
             [float(a) for a in a_list], [float(b) for b in b_list],
-            self._tolerance)
+            self._tolerance, coarsening=self._coarsening)
         for d in range(len(self._reqs)):
             lut = self._lookup[d]
             for s in range(int(evn[d])):
@@ -1324,7 +1438,8 @@ class _FusedGssRecord:
             from .ilp import solve_ilp_many   # deferred: no import cycle
             solved = solve_ilp_many(
                 self._items, miss_reqs, miss_alphas, market=self._market,
-                excludes=miss_excl, backend=self._backend._host_fallback)
+                excludes=miss_excl, backend=self._backend._host_fallback,
+                coarsening=self._coarsening)
             for (k, js), counts_d in zip(miss_pos, solved):
                 for j, c in zip(js, counts_d):
                     out[k][j] = c

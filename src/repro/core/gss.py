@@ -30,7 +30,7 @@ from typing import Callable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from .backend import SolverBackend
+from .backend import CoarseningConfig, SolverBackend
 from .efficiency import (CandidateItem, NodePool, e_total,
                          score_counts_batch, score_counts_many)
 from .ilp import (CompiledMarket, compile_market, solve_ilp, solve_ilp_many)
@@ -62,7 +62,9 @@ def _make_evaluator(items: Sequence[CandidateItem], req_pods: int,
                     solver: Callable, market: Optional[CompiledMarket],
                     exclude: Optional[np.ndarray], trace: GssTrace,
                     cache: dict,
-                    backend: Optional[SolverBackend] = None) -> Callable:
+                    backend: Optional[SolverBackend] = None,
+                    coarsening: Optional[CoarseningConfig] = None,
+                    ) -> Callable:
     """One (α → (pool, E_Total)) evaluator shared by both searches.
 
     The engine path solves against the compiled market with the objective
@@ -88,7 +90,8 @@ def _make_evaluator(items: Sequence[CandidateItem], req_pods: int,
         if use_engine:
             coef = -alpha * perf_norm + (1.0 - alpha) * price_norm
             counts = solve_ilp(items, req_pods, alpha, market=market,
-                               exclude=exclude, backend=backend, coef=coef)
+                               exclude=exclude, backend=backend, coef=coef,
+                               coarsening=coarsening)
         else:
             counts = solver(items, req_pods, alpha)
         trace.ilp_solves += 1
@@ -116,6 +119,7 @@ def golden_section_search(
     exclude: Optional[np.ndarray] = None,
     timer: Callable[[], float] = time.perf_counter,
     backend: Optional[SolverBackend] = None,
+    coarsening: Optional[CoarseningConfig] = None,
 ) -> Tuple[Optional[NodePool], GssTrace]:
     """Algorithm 1 (lines 7–27).  Returns (best pool S*, evaluation trace).
 
@@ -126,7 +130,7 @@ def golden_section_search(
     t0 = timer()
     cache: dict[float, Tuple[Optional[NodePool], float]] = {}
     evaluate = _make_evaluator(items, req_pods, solver, market, exclude,
-                               trace, cache, backend)
+                               trace, cache, backend, coarsening)
 
     a, b = alpha_lo, alpha_hi
     x1 = b - PHI * (b - a)
@@ -167,6 +171,7 @@ def bracketed_gss(
     exclude: Optional[np.ndarray] = None,
     timer: Callable[[], float] = time.perf_counter,
     backend: Optional[SolverBackend] = None,
+    coarsening: Optional[CoarseningConfig] = None,
 ) -> Tuple[Optional[NodePool], GssTrace]:
     """Guarded GSS (beyond-paper robustness hardening, DESIGN.md §7).
 
@@ -185,7 +190,7 @@ def bracketed_gss(
         return bracketed_gss_many(
             items, [req_pods], tolerance=tolerance, prescan=prescan,
             market=market, excludes=[exclude], timer=timer,
-            backend=backend)[0]
+            backend=backend, coarsening=coarsening)[0]
 
     # custom-solver fallback: the seed per-α path, unchanged
     if exclude is not None:
@@ -263,6 +268,7 @@ def bracketed_gss_many(
     excludes: Optional[Sequence[Optional[np.ndarray]]] = None,
     timer: Callable[[], float] = time.perf_counter,
     backend: Optional[SolverBackend] = None,
+    coarsening: Optional[CoarseningConfig] = None,
 ) -> List[Tuple[Optional[NodePool], GssTrace]]:
     """Cross-decision batched guarded GSS (DESIGN.md §12).
 
@@ -299,7 +305,8 @@ def bracketed_gss_many(
     record = None
     if backend is not None and getattr(backend, "supports_fused_gss", False):
         record = backend.fused_gss_record(items, market, list(req_pods_list),
-                                          list(excludes), grid, tolerance)
+                                          list(excludes), grid, tolerance,
+                                          coarsening=coarsening)
 
     # -- prescan: one stacked engine invocation over every (decision, α) --
     if record is not None:
@@ -307,7 +314,7 @@ def bracketed_gss_many(
     else:
         all_counts = solve_ilp_many(items, list(req_pods_list), grid,
                                     market=market, excludes=list(excludes),
-                                    backend=backend)
+                                    backend=backend, coarsening=coarsening)
     all_scores = score_counts_many(items, all_counts, list(req_pods_list),
                                    none_score=float("-inf"),
                                    arrays=market.metric_arrays)
@@ -365,7 +372,7 @@ def bracketed_gss_many(
         else:
             solved = solve_ilp_many(items, miss_reqs, miss_alphas,
                                     market=market, excludes=miss_excludes,
-                                    backend=backend)
+                                    backend=backend, coarsening=coarsening)
         for st, alphas_d, counts_d in zip(miss_states, miss_alphas, solved):
             for alpha, counts in zip(alphas_d, counts_d):
                 st.trace.ilp_solves += 1

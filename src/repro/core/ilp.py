@@ -53,21 +53,40 @@ from typing import Hashable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from .backend import (_CORE_MIN, _CORE_PAD, _CORE_TRIGGER, SolverBackend,
+from .backend import (_CORE_MIN, _CORE_PAD, _CORE_TRIGGER,
+                      DEFAULT_COARSENING, CoarseningConfig, SolverBackend,
                       get_backend)
 from .efficiency import CandidateItem
+
+__all__ = [
+    "CoarseningConfig", "DEFAULT_COARSENING", "CompiledMarket", "IlpStats",
+    "compile_market", "reweight_market", "objective_coefficients",
+    "solve_ilp", "solve_ilp_batch", "solve_ilp_many", "solve_ilp_reference",
+    "solve_ilp_pulp",
+]
 
 _INF = float("inf")
 
 
 @dataclasses.dataclass(frozen=True)
 class IlpStats:
-    """Solver introspection for the overhead study (paper Fig. 7 / §5.3)."""
+    """Solver introspection for the overhead study (paper Fig. 7 / §5.3).
+
+    ``coarse`` records which demand-coarsening tier solved the row
+    (DESIGN.md §14): ``"exact"`` (granularity 1), ``"gcd"`` (provably
+    exact at granularity = the market pod GCD), ``"approx"`` (greedy
+    rate-order prefix + exact DP over the boundary residual window,
+    ``granularity`` = the window width and ``gap_bound`` the a-posteriori
+    LP-certified objective gap), or ``"approx_fallback"`` (the
+    certificate failed; the row was re-solved exactly)."""
 
     n_items: int
     n_bundles: int
     residual_demand: int
     objective: float
+    coarse: str = "exact"
+    granularity: int = 1
+    gap_bound: float = 0.0
 
 
 def objective_coefficients(items: Sequence[CandidateItem],
@@ -137,6 +156,18 @@ class CompiledMarket:
     def metric_arrays(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
         """(Perf_i, SP_i, Pod_i) float64 triple for ``score_counts_batch``."""
         return self.perf, self.price, self.pods.astype(np.float64)
+
+    @functools.cached_property
+    def pods_gcd(self) -> int:
+        """GCD of every structural item's pod count (1 when there are
+        none).  Any row's DP-active bundle set is a subset of the
+        structural bundles, and every bundle's pod size is an item pod
+        count times its copy count — so this market-wide GCD divides every
+        active bundle of every row, which is exactly the divisibility
+        condition under which gcd-coarsening is bit-exact (DESIGN.md §14).
+        """
+        p = self.pods[self.structural]
+        return int(np.gcd.reduce(p)) if p.size else 1
 
     @functools.cached_property
     def digest(self) -> str:
@@ -381,6 +412,35 @@ def _backtrack_bits(bits: np.ndarray, bpods: np.ndarray, target: int,
     return take
 
 
+def _plan_scale(cfg: Optional[CoarseningConfig], g: int,
+                residual: int) -> Tuple[str, int]:
+    """The demand-coarsening mode ladder (DESIGN.md §14), a deterministic
+    function of (config, market gcd, residual) — so, like everything else
+    in the engine, batch-composition-invariant.
+
+    * residual ≤ threshold → ``("exact", 1)``: the coarsening layer is
+      inert at the paper's scales.
+    * gcd mode when the market GCD ``g`` shrinks the DP to at most
+      ``max_rows`` rows → ``("gcd", g)``, provably bit-exact.
+    * otherwise the approx tier → ``("approx", approx_rows)``: the bulk of
+      the demand is covered by the rate-order greedy prefix (the integral
+      form of the LP optimum, whose structure the engine's own pruning
+      bound already trusts) down to a boundary window of ``approx_rows``
+      pods, and only that window is solved by an exact cover DP — bounded
+      suboptimality via an a-posteriori LP certificate, with an automatic
+      exact fallback when the certificate fails.
+    * approx disabled (or residual inside the window): degrade to gcd if
+      available, else exact.
+    """
+    if cfg is None or not cfg.enabled or residual <= cfg.threshold:
+        return "exact", 1
+    if g > 1 and -(-residual // g) <= cfg.max_rows:
+        return "gcd", g
+    if cfg.allow_approx and residual > cfg.approx_rows:
+        return "approx", cfg.approx_rows
+    return ("gcd", g) if g > 1 else ("exact", 1)
+
+
 # ---------------------------------------------------------------------------
 # The row engine: every public solver is a view over _solve_rows
 # ---------------------------------------------------------------------------
@@ -404,8 +464,16 @@ class SolveRow:
 
 def _solve_rows(market: CompiledMarket, rows: Sequence[SolveRow],
                 backend: Optional[SolverBackend] = None,
+                coarsening: Optional[CoarseningConfig] = None,
                 ) -> Tuple[List[Optional[List[int]]], List[IlpStats]]:
-    """Solve every row exactly, deduplicating shared structure.
+    """Solve every row, deduplicating shared structure.
+
+    Rows whose residual exceeds ``coarsening.threshold`` run the cover DP
+    through the demand-coarsening ladder (:func:`_plan_scale`): the gcd
+    tier is bit-exact; the approx tier carries a certified gap bound with
+    an automatic exact fallback.  Everything below the threshold — all of
+    the paper's scenarios under the default config — is byte-for-byte the
+    uncoarsened engine.
 
     Pipeline (DESIGN.md §12).  Per objective key: saturation mask, covered
     capacity, residual-DP bundle compaction, and one rate-order argsort.
@@ -425,6 +493,8 @@ def _solve_rows(market: CompiledMarket, rows: Sequence[SolveRow],
     one-row batch.
     """
     backend = backend or get_backend()
+    cfg = DEFAULT_COARSENING if coarsening is None else coarsening
+    gcd = market.pods_gcd
     n = market.n
     results: List[Optional[List[int]]] = [None] * len(rows)
     stats: List[Optional[IlpStats]] = [None] * len(rows)
@@ -485,6 +555,18 @@ def _solve_rows(market: CompiledMarket, rows: Sequence[SolveRow],
         lp[rb <= 0] = 0.0
         return lp
 
+    def _lp_at(o, residual: int) -> float:
+        """Scalar LP(residual): the fractional greedy lower bound on the
+        exact optimum — the approx tier's suboptimality certificate."""
+        if residual <= 0:
+            return 0.0
+        _order, p_sorted, c_sorted, cum_p, cum_c = _rate(o)
+        k = int(np.searchsorted(cum_p, float(residual)))
+        prev_p = float(cum_p[k - 1]) if k > 0 else 0.0
+        prev_c = float(cum_c[k - 1]) if k > 0 else 0.0
+        return prev_c + (residual - prev_p) * float(c_sorted[k]
+                                                    / p_sorted[k])
+
     # -- classify rows; one plan per unique (objective, residual) ----------
     plans: dict = {}
     row_plan: List = []       # per row: (kind, obj-or-plan, residual)
@@ -497,10 +579,70 @@ def _solve_rows(market: CompiledMarket, rows: Sequence[SolveRow],
         if o["capacity"] < residual:
             row_plan.append(("none", o, residual))
             continue
+        mode, param = _plan_scale(cfg, gcd, residual)
         pkey = (r.key, residual)
         plan = plans.get(pkey)
         if plan is None:
             order, _p, _c, cum_p, cum_c = _rate(o)
+            if mode == "approx":
+                # greedy rate-order prefix down to the boundary window:
+                # the minimal prefix covering residual − window pods (its
+                # cumulative arrays are shared by every residual of the
+                # objective — the coarse work α-grid rows reuse).  Only
+                # the ≤ window-pod remainder meets an exact cover DP.
+                need = residual - param
+                k_cut = (min(int(np.searchsorted(cum_p, need)) + 1,
+                             len(order)) if need > 0 else 0)
+                cov = int(cum_p[k_cut - 1]) if k_cut else 0
+                tres = max(0, residual - cov)
+                tail = order[k_cut:]
+                _, _bp, bcosts = _bundles(o)
+                # the window DP is the exact engine restated on the tail
+                # subproblem (tail capacity ≥ tres by construction), so it
+                # reuses the same greedy-UB / per-bundle-LP prune and the
+                # phase-1 core tightening; lp = +inf off-tail keeps the
+                # committed prefix out of the DP (binary bundles are
+                # use-once).
+                lp = np.full(len(bcosts), _INF)
+                ub, core, keep = 0.0, None, np.zeros(len(bcosts), bool)
+                if tres > 0 and len(tail):
+                    tp, tc = _p[k_cut:], _c[k_cut:]
+                    base_p = float(cum_p[k_cut - 1]) if k_cut else 0.0
+                    base_c = float(cum_c[k_cut - 1]) if k_cut else 0.0
+                    cum_tp = cum_p[k_cut:] - base_p
+                    cum_tc = cum_c[k_cut:] - base_c
+                    k_ub = int(np.searchsorted(cum_tp, float(tres)))
+                    ub = float(cum_tc[k_ub])
+                    rb = np.maximum(tres - tp, 0).astype(np.float64)
+                    kk = np.searchsorted(cum_tp, rb)
+                    prev_p = np.where(kk > 0, cum_tp[np.maximum(kk - 1, 0)],
+                                      0.0)
+                    prev_c = np.where(kk > 0, cum_tc[np.maximum(kk - 1, 0)],
+                                      0.0)
+                    lp_t = prev_c + (rb - prev_p) * (tc[kk] / tp[kk])
+                    lp_t[rb <= 0] = 0.0
+                    lp[tail] = lp_t
+                    keep = bcosts + lp <= ub * (1.0 + 1e-12) + 1e-9
+                    if int(np.sum(keep)) > _CORE_TRIGGER:
+                        K = min(len(tail), max(k_ub + _CORE_PAD, _CORE_MIN))
+                        core = tail[:K]
+                plans[pkey] = plan = {
+                    "o": o, "resid": residual, "mode": "approx",
+                    "window": param, "prefix": order[:k_cut],
+                    "pcost": float(cum_c[k_cut - 1]) if k_cut else 0.0,
+                    "tres": tres, "scale": 1, "sres": tres,
+                    "lp": lp, "ub": ub, "core": core, "keep": keep,
+                    "counts": None, "objective": _INF, "n_bundles": 0,
+                    "coarse": "approx", "gap": 0.0}
+                row_plan.append(("dp", plan, residual))
+                continue
+            # exact / gcd tiers share one code path: the DP runs at
+            # granularity ``scale`` (1 = exact; the market gcd = bitwise
+            # identical to the unscaled DP, DESIGN.md §14).  Prune math
+            # deliberately stays at unscaled pods/residual, so the keep
+            # set is the exact engine's in both tiers.
+            scale = param if mode == "gcd" else 1
+            sres = -(-residual // scale)
             k_ub = int(np.searchsorted(cum_p, residual))
             lp = _lp_bound(o, residual)
             _, _bp, bcosts = _bundles(o)
@@ -512,51 +654,120 @@ def _solve_rows(market: CompiledMarket, rows: Sequence[SolveRow],
                 K = min(len(order), max(k_ub + _CORE_PAD, _CORE_MIN))
                 core = order[:K]
             plans[pkey] = plan = {
-                "o": o, "resid": residual, "lp": lp, "ub": ub,
+                "o": o, "resid": residual, "mode": mode, "scale": scale,
+                "sres": sres, "lp": lp, "ub": ub,
                 "core": core, "keep": keep, "counts": None,
-                "objective": _INF, "n_bundles": 0}
+                "objective": _INF, "n_bundles": 0,
+                "coarse": "gcd" if scale > 1 else "exact", "gap": 0.0}
         row_plan.append(("dp", plan, residual))
 
     plan_list = list(plans.values())
 
+    def _scaled(bpods: np.ndarray, scale: int) -> np.ndarray:
+        return bpods if scale == 1 else bpods // scale
+
     # -- phase 1: core upper bounds (value-only, one dispatch) -------------
+    # gcd-mode plans run the core DP at scaled pods/target: bitwise the
+    # unscaled DP (DESIGN.md §14), so the tightened keep set is identical
     cored = [p for p in plan_list if p["core"] is not None]
     if cored:
         reqs = []
         for p in cored:
             _, bpods, bcosts = _bundles(p["o"])
-            reqs.append((bpods[p["core"]], bcosts[p["core"]], p["resid"]))
+            reqs.append((_scaled(bpods, p["scale"])[p["core"]],
+                         bcosts[p["core"]], p["sres"]))
         for p, dp in zip(cored, backend.cover_values(reqs)):
             # the core contains the greedy cover prefix, so its optimum is
             # finite and ≤ the greedy bound; survivors of the tighter test
             # are a subset of the greedy keep
-            core_ub = float(dp[p["resid"]])
+            core_ub = float(dp[p["sres"]])
             if core_ub < p["ub"]:
                 p["ub"] = core_ub
                 _, _bp, bcosts = _bundles(p["o"])
                 p["keep"] = bcosts + p["lp"] <= core_ub * (1.0 + 1e-12) + 1e-9
 
+    def _exact_plan(o, residual: int):
+        """One-row exact prune + DP + decode — the approx tier's fallback.
+        A deterministic function of (objective, residual), identical to
+        what the batched exact path produces for the same pair."""
+        order, _p, _c, cum_p, cum_c = _rate(o)
+        bidx, bpods, bcosts = _bundles(o)
+        k_ub = int(np.searchsorted(cum_p, residual))
+        lp = _lp_bound(o, residual)
+        ub = float(cum_c[k_ub])
+        keep = bcosts + lp <= ub * (1.0 + 1e-12) + 1e-9
+        if int(np.sum(keep)) > _CORE_TRIGGER:
+            K = min(len(order), max(k_ub + _CORE_PAD, _CORE_MIN))
+            core = order[:K]
+            dp = backend.cover_values(
+                [(bpods[core], bcosts[core], residual)])[0]
+            core_ub = float(dp[residual])
+            if core_ub < ub:
+                keep = bcosts + lp <= core_ub * (1.0 + 1e-12) + 1e-9
+        kept = np.flatnonzero(keep)
+        dp, bits = backend.cover_bits(
+            [(bpods[kept], bcosts[kept], residual)])[0]
+        take = _backtrack_bits(bits, bpods[kept], residual)
+        return bidx[kept[take]], float(dp[residual]), len(kept)
+
+    def _approx_finish(p, tail_taken: Optional[np.ndarray],
+                       tail_obj: float) -> None:
+        """Assemble an approx plan from its greedy prefix + boundary-DP
+        take (``tail_taken`` in market bundle order), then check the LP
+        certificate: the prefix + exact-window total is a feasible
+        solution (cost ≥ optimum) and LP(residual) a lower bound (≤
+        optimum), so ``total − LP`` bounds the true gap from above.
+        Certificate violated → exact fallback."""
+        o = p["o"]
+        bidx, _bp, _bc = _bundles(o)
+        total = p["pcost"] + tail_obj
+        lp = _lp_at(o, p["resid"])
+        gap = total - lp
+        if gap <= cfg.rel_gap * max(abs(lp), 1e-9):
+            taken = (p["prefix"] if tail_taken is None else
+                     np.concatenate([p["prefix"], tail_taken]))
+            p["counts"] = bidx[taken]
+            p["objective"] = total
+            p["n_bundles"] += len(p["prefix"])
+            p["gap"] = max(gap, 0.0)
+        else:
+            p["counts"], p["objective"], p["n_bundles"] = _exact_plan(
+                o, p["resid"])
+            p["coarse"] = "approx_fallback"
+            p["gap"] = 0.0
+
     # -- phase 2: the decode DP over each plan's kept set ------------------
     # dispatched in backend-preferred slices: the host backend keeps the
-    # live bits working set small, accelerator backends take it all at once
+    # live bits working set small, accelerator backends take it all at
+    # once.  Approx plans ride the same dispatch: their req is the exact
+    # boundary-window DP over the pruned non-prefix bundles.
     chunk = max(1, getattr(backend, "max_group_batch", len(plan_list) or 1))
     for lo in range(0, len(plan_list), chunk):
         part = plan_list[lo:lo + chunk]
-        reqs = []
+        reqs, ready = [], []
         for p in part:
+            if p["mode"] == "approx" and p["tres"] == 0:
+                _approx_finish(p, None, 0.0)  # prefix covers the demand
+                continue
             _, bpods, bcosts = _bundles(p["o"])
             p["kept"] = np.flatnonzero(p["keep"])    # market bundle order
             p["n_bundles"] = len(p["kept"])
-            reqs.append((bpods[p["kept"]], bcosts[p["kept"]], p["resid"]))
-        for p, (dp, bits) in zip(part, backend.cover_bits(reqs)):
+            reqs.append((_scaled(bpods, p["scale"])[p["kept"]],
+                         bcosts[p["kept"]], p["sres"]))
+            ready.append(p)
+        for p, (dp, bits) in zip(ready, backend.cover_bits(reqs)):
             bidx, bpods, _bc = _bundles(p["o"])
-            take = _backtrack_bits(bits, bpods[p["kept"]], p["resid"])
+            take = _backtrack_bits(
+                bits, _scaled(bpods, p["scale"])[p["kept"]], p["sres"])
+            if p["mode"] == "approx":
+                _approx_finish(p, p["kept"][take], float(dp[p["sres"]]))
+                continue
             p["counts"] = bidx[p["kept"][take]]
-            p["objective"] = float(dp[p["resid"]])
+            p["objective"] = float(dp[p["sres"]])
 
     # -- assemble rows (duplicates share decoded plans) --------------------
     for i, (r, (kind, ctx, residual)) in enumerate(zip(rows, row_plan)):
-        o = ctx if kind != "dp" else ctx["o"]
+        o = ctx if kind in ("sat", "none") else ctx["o"]
         if kind == "none":
             stats[i] = IlpStats(n, 0, residual, _INF)
             continue
@@ -570,8 +781,12 @@ def _solve_rows(market: CompiledMarket, rows: Sequence[SolveRow],
         taken = plan["counts"]
         np.add.at(counts, market.b_item[taken], market.b_copies[taken])
         results[i] = list(map(int, counts))
-        stats[i] = IlpStats(n, plan["n_bundles"], residual,
-                            sat_obj + plan["objective"])
+        stats[i] = IlpStats(
+            n, plan["n_bundles"], residual, sat_obj + plan["objective"],
+            coarse=plan["coarse"],
+            granularity=(plan["window"] if plan["mode"] == "approx"
+                         else plan["scale"]),
+            gap_bound=plan["gap"])
     return results, stats
 
 
@@ -601,6 +816,7 @@ def solve_ilp(items: Sequence[CandidateItem], req_pods: int, alpha: float,
               exclude: Optional[np.ndarray] = None,
               backend: Optional[SolverBackend] = None,
               coef: Optional[np.ndarray] = None,
+              coarsening: Optional[CoarseningConfig] = None,
               ) -> Optional[List[int]] | Tuple[Optional[List[int]], IlpStats]:
     """Exact solver for Eq. 5.  Returns x_i per item (None if infeasible).
 
@@ -611,7 +827,9 @@ def solve_ilp(items: Sequence[CandidateItem], req_pods: int, alpha: float,
     supplies the precomputed objective row (GSS evaluators cache
     ``market.norms(exclude)`` and rebuild rows per probe — bit-identical
     to the uncached path); it must equal
-    ``market.coefficients([alpha], exclude)[0]``.
+    ``market.coefficients([alpha], exclude)[0]``.  ``coarsening``
+    overrides the demand-coarsening policy (default
+    :data:`DEFAULT_COARSENING`, inert below 8192 residual pods).
     """
     market = _checked_market(items, market)
     if market.n == 0:
@@ -621,7 +839,8 @@ def solve_ilp(items: Sequence[CandidateItem], req_pods: int, alpha: float,
     active = market.structural if exclude is None else (
         market.structural & ~exclude)
     results, stats = _solve_rows(
-        market, [SolveRow(req_pods, alpha, coef, active, key=0)], backend)
+        market, [SolveRow(req_pods, alpha, coef, active, key=0)], backend,
+        coarsening=coarsening)
     return (results[0], stats[0]) if return_stats else results[0]
 
 
@@ -631,6 +850,7 @@ def solve_ilp_batch(items: Sequence[CandidateItem], req_pods: int,
                     exclude: Optional[np.ndarray] = None,
                     return_stats: bool = False,
                     backend: Optional[SolverBackend] = None,
+                    coarsening: Optional[CoarseningConfig] = None,
                     ) -> List[Optional[List[int]]] | Tuple[
                         List[Optional[List[int]]], List[IlpStats]]:
     """Solve Eq. 5 for every α of a prescan grid in one engine invocation.
@@ -652,7 +872,8 @@ def solve_ilp_batch(items: Sequence[CandidateItem], req_pods: int,
         market.structural & ~exclude)
     rows = [SolveRow(req_pods, a, coef2d[k], active, key=a)
             for k, a in enumerate(grid)]
-    results, stats = _solve_rows(market, rows, backend)
+    results, stats = _solve_rows(market, rows, backend,
+                                 coarsening=coarsening)
     return (results, stats) if return_stats else results
 
 
@@ -663,6 +884,7 @@ def solve_ilp_many(items: Sequence[CandidateItem],
                    excludes: Optional[Sequence[Optional[np.ndarray]]] = None,
                    backend: Optional[SolverBackend] = None,
                    return_stats: bool = False,
+                   coarsening: Optional[CoarseningConfig] = None,
                    ) -> List[List[Optional[List[int]]]] | Tuple[
                        List[List[Optional[List[int]]]], List[List[IlpStats]]]:
     """The cross-decision batch (DESIGN.md §12): solve every (decision, α)
@@ -738,7 +960,8 @@ def solve_ilp_many(items: Sequence[CandidateItem],
             rows.append(SolveRow(
                 requests[d], a, coef_rows[tok][per_tok_seen[tok][a]],
                 actives[tok], key=(tok, a)))
-    flat, flat_stats = _solve_rows(market, rows, backend)
+    flat, flat_stats = _solve_rows(market, rows, backend,
+                                   coarsening=coarsening)
 
     out, st, pos = [], [], 0
     for d in range(n_dec):

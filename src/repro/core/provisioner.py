@@ -23,7 +23,7 @@ from typing import (Callable, Dict, Iterable, List, Optional, Sequence, Set,
 
 import numpy as np
 
-from .backend import SolverBackend
+from .backend import CoarseningConfig, SolverBackend
 from .efficiency import (CandidateItem, NodePool, Request, decision_metrics,
                          pods_per_instance)
 from .gss import (GssTrace, bracketed_gss, bracketed_gss_many,
@@ -180,6 +180,7 @@ class _SolveJob:
     tolerance: float
     timer: Callable[[], float]
     finish: Callable[[Optional[NodePool], GssTrace], ProvisioningDecision]
+    coarsening: Optional[CoarseningConfig] = None
     decision: Optional[ProvisioningDecision] = None
 
 
@@ -215,10 +216,10 @@ class SolveBatch:
         return PendingDecision(job, hit=True, wall=wall)
 
     def enqueue(self, key, *, items, market, req_pods, exclude, tolerance,
-                timer, finish) -> PendingDecision:
+                timer, finish, coarsening=None) -> PendingDecision:
         job = _SolveJob(items=items, market=market, req_pods=req_pods,
                         exclude=exclude, tolerance=tolerance, timer=timer,
-                        finish=finish)
+                        finish=finish, coarsening=coarsening)
         self._jobs.append(job)
         if key is not None:
             self._by_key[key] = job
@@ -230,14 +231,15 @@ class SolveBatch:
         jobs, self._jobs, self._by_key = self._jobs, [], {}
         groups: Dict = {}
         for job in jobs:
-            gkey = (id(job.market), job.tolerance, id(job.timer))
+            gkey = (id(job.market), job.tolerance, id(job.timer),
+                    job.coarsening)
             groups.setdefault(gkey, []).append(job)
         for group in groups.values():
             results = bracketed_gss_many(
                 group[0].items, [j.req_pods for j in group],
                 tolerance=group[0].tolerance, market=group[0].market,
                 excludes=[j.exclude for j in group], timer=group[0].timer,
-                backend=self.backend)
+                backend=self.backend, coarsening=group[0].coarsening)
             for job, (pool, trace) in zip(group, results):
                 job.decision = job.finish(pool, trace)
         return len(jobs)
@@ -277,9 +279,13 @@ class KubePACSProvisioner:
 
     def __init__(self, tolerance: float = 0.01, ttl_hours: float = 2.0,
                  guarded_gss: bool = True,
-                 timer: Callable[[], float] = time.perf_counter):
+                 timer: Callable[[], float] = time.perf_counter,
+                 coarsening: Optional[CoarseningConfig] = None):
         self.tolerance = tolerance
         self.guarded_gss = guarded_gss   # bracketed prescan (DESIGN.md §7)
+        # demand-coarsening policy threaded into every solve (None = the
+        # process-wide DEFAULT_COARSENING, inert at the paper's scales)
+        self.coarsening = coarsening
         self.cache = UnavailableOfferingsCache(ttl_hours)
         self.event_queue: collections.deque[InterruptEvent] = collections.deque()
         self.clock = 0.0   # advanced by the caller (simulator hours)
@@ -359,10 +365,11 @@ class KubePACSProvisioner:
             return batch.enqueue(mkey, items=items, market=market,
                                  req_pods=request.pods, exclude=exclude,
                                  tolerance=self.tolerance, timer=self.timer,
-                                 finish=finish)
+                                 finish=finish, coarsening=self.coarsening)
         search = bracketed_gss if self.guarded_gss else golden_section_search
         pool, trace = search(items, request.pods, tolerance=self.tolerance,
-                             market=market, exclude=exclude, timer=self.timer)
+                             market=market, exclude=exclude, timer=self.timer,
+                             coarsening=self.coarsening)
         return self._finalize(request, excluded, pool, trace, t0, mkey)
 
     def _finalize(self, request: Request, excluded: Set[str],

@@ -11,7 +11,8 @@ from .interrupts import (InterruptModel, NullInterruptModel,
                          RebalanceRecommendationModel, make_interrupt_model)
 from .policy import (FixedAlphaPolicy, KarpenterLikePolicy, KubePACSPolicy,
                      KubePACSRiskPolicy, Policy, make_policy)
-from .scenario import Scenario, Shock, heterogeneous_demand_scenario
+from .scenario import (Scenario, Shock, heterogeneous_demand_scenario,
+                       high_demand_scenario)
 from .trace import TraceRecorder, load_trace, loads_trace
 from .engine import (ClusterSim, LiveMarketSource, ReplaySource,
                      ScriptedMarketSource, SimResult, SimRound, run_replicas,
@@ -25,7 +26,8 @@ __all__ = [
     "make_interrupt_model", "Policy", "KubePACSPolicy", "KubePACSRiskPolicy",
     "KarpenterLikePolicy",
     "FixedAlphaPolicy", "make_policy", "Scenario", "Shock",
-    "heterogeneous_demand_scenario", "TraceRecorder",
+    "heterogeneous_demand_scenario", "high_demand_scenario",
+    "TraceRecorder",
     "load_trace", "loads_trace", "ClusterSim", "LiveMarketSource",
     "ReplaySource", "ScriptedMarketSource", "SimResult", "SimRound",
     "run_replicas", "script_market_states", "FleetSim", "run_fleet",

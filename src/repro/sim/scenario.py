@@ -148,6 +148,30 @@ class Scenario:
         return cls(**d)   # __post_init__ normalizes numerics/order
 
 
+def high_demand_scenario(pods: int = 250_000, **overrides) -> Scenario:
+    """Demand-coarsening stress family (DESIGN.md §14).
+
+    Six-figure pod demands against a generated catalog whose per-instance
+    pod counts share a large power-of-two factor: quarter-vCPU /
+    quarter-GiB pods make ``Pod_i = 4·vCPU_i``, so the compiled market's
+    ``pods_gcd`` is ≥ 8 and the coarsening ladder always has a gcd rung
+    available.  At the default demand the residual still exceeds
+    ``max_rows·gcd``, so the default policy lands on the certified approx
+    tier — pass a custom :class:`~repro.core.CoarseningConfig` to the
+    provisioner to pin the gcd tier instead.  The demand schedule swings
+    ±20 % so re-provisioning stays in the coarse regime all run."""
+    base = dict(
+        name=f"high_demand_{pods}", duration_hours=24.0, step_hours=6.0,
+        pods=pods, cpu_per_pod=0.25, mem_per_pod=0.25,
+        demand_schedule=((6.0, int(pods * 1.2)), (12.0, int(pods * 0.8)),
+                         (18.0, int(pods * 1.1))),
+        interrupt_model="pressure",
+        policy="kubepacs", catalog_seed=17, max_offerings=400,
+        market_seed=17, interrupt_seed=17)
+    base.update(overrides)
+    return Scenario(**base)
+
+
 def heterogeneous_demand_scenario(**overrides) -> Scenario:
     """Standard low-memo-hit stress scenario (DESIGN.md §12).
 

@@ -10,7 +10,7 @@ import warnings
 import numpy as np
 import pytest
 
-from repro.core import (CandidateItem, NumpyBackend, Offering, Request,
+from repro.core import (NumpyBackend, Request,
                         compile_market, preprocess, generate_catalog,
                         make_backend, objective_coefficients, solve_ilp,
                         solve_ilp_batch, solve_ilp_many)
@@ -20,34 +20,12 @@ from repro.sim import (ClusterSim, FleetSim, run_replicas,
                        heterogeneous_demand_scenario)
 
 from ._optional import HAVE_JAX, requires_jax
+from .strategies import mk_item as _mk_item
+from .strategies import random_exclude as _random_exclude
+from .strategies import random_market as _random_market
 
 NUMPY = NumpyBackend()
 JAX = make_backend("jax") if HAVE_JAX else None
-
-
-def _mk_item(i, pods, bs, sp, t3):
-    o = Offering(offering_id=f"t{i}@az", instance_type=f"t{i}", family="m",
-                 generation=6, vendor="i", specialization="general",
-                 size="large", region="r", az="az", vcpus=2, mem_gib=8.0,
-                 od_price=sp * 3, spot_price=sp, bs_core=bs, sps_single=3,
-                 t3=t3, interruption_freq=1)
-    return CandidateItem(offering=o, pods=pods, bs=bs, spot_price=sp, t3=t3)
-
-
-def _random_market(rng, max_items=12, max_t3=9):
-    n = int(rng.integers(1, max_items + 1))
-    return [_mk_item(i, int(rng.integers(1, 9)),
-                     float(rng.uniform(1e3, 1e5)),
-                     float(rng.uniform(0.01, 3.0)),
-                     int(rng.integers(0, max_t3)))
-            for i in range(n)]
-
-
-def _random_exclude(rng, n):
-    if n == 0 or rng.random() < 0.4:
-        return None
-    mask = rng.random(n) < 0.3
-    return mask if mask.any() else None
 
 
 # ---------------------------------------------------------- numpy ≡ jax ----
@@ -519,8 +497,8 @@ def test_prescan_host_crosscheck_disables_fused_on_divergence():
     be = make_backend("jax:fused")
     orig = be._run_prescan
 
-    def corrupted(market, reqs, excludes, grid):
-        counts, feas = orig(market, reqs, excludes, grid)
+    def corrupted(market, reqs, excludes, grid, **kw):
+        counts, feas = orig(market, reqs, excludes, grid, **kw)
         counts = np.asarray(counts).copy()
         counts[..., 0] += 1                  # silent device-side corruption
         feas = np.ones_like(np.asarray(feas))

@@ -13,7 +13,7 @@ from repro.core import (CandidateItem, NodePool, Offering, Request,
                         golden_section_search, pods_per_instance,
                         scaled_benchmark_score, preprocess)
 from repro.core.gss import PHI, bracketed_gss
-from tests.test_ilp import _mk_item
+from tests.strategies import mk_item as _mk_item
 
 
 # ---------------------------------------------------------------- GSS ----
@@ -90,6 +90,33 @@ def test_e_metrics_invariants(raw, req):
             e_perf_cost(pool) * e_over_pods(pool, req))
     else:
         assert e_total(pool, req) == 0.0
+
+
+def test_e_metrics_invariants_deterministic():
+    """Seeded twin of the hypothesis property above — the E-metric
+    invariants (Eq. 2–3 ranges and the E_Total factorization) hold on
+    every randomized pool, optional dependencies or not."""
+    rng = np.random.default_rng(73)
+    n_covered = n_short = 0
+    for _ in range(60):
+        raw = [(int(rng.integers(1, 7)), float(rng.uniform(1e3, 1e5)),
+                float(rng.uniform(0.01, 2.0)), int(rng.integers(1, 11)),
+                int(rng.integers(0, 6)))
+               for _ in range(int(rng.integers(1, 7)))]
+        req = int(rng.integers(1, 41))
+        items = [_mk_item(i, p, bs, sp, t3) for i, (p, bs, sp, t3, _) in
+                 enumerate(raw)]
+        counts = [min(t3, c) for (_, _, _, t3, c) in raw]
+        pool = NodePool(items=items, counts=counts)
+        if pool.total_pods >= req and pool.total_pods > 0:
+            n_covered += 1
+            assert 0 < e_over_pods(pool, req) <= 1.0
+            assert e_total(pool, req) == pytest.approx(
+                e_perf_cost(pool) * e_over_pods(pool, req))
+        else:
+            n_short += 1
+            assert e_total(pool, req) == 0.0
+    assert n_covered >= 10 and n_short >= 10
 
 
 def test_e_total_scale_free_for_single_type():

@@ -6,24 +6,10 @@ import numpy as np
 import pytest
 
 from tests._optional import given, settings, st
+from tests.strategies import item_strategy, mk_item
 
-from repro.core import CandidateItem, Offering, objective_coefficients, solve_ilp
+from repro.core import objective_coefficients, solve_ilp
 from repro.core.ilp import solve_ilp_pulp
-
-
-def _mk_item(i, pods, bs, sp, t3):
-    o = Offering(offering_id=f"t{i}@az", instance_type=f"t{i}", family="m",
-                 generation=6, vendor="i", specialization="general",
-                 size="large", region="r", az="az", vcpus=2, mem_gib=8.0,
-                 od_price=sp * 3, spot_price=sp, bs_core=bs, sps_single=3,
-                 t3=t3, interruption_freq=1)
-    return CandidateItem(offering=o, pods=pods, bs=bs, spot_price=sp, t3=t3)
-
-
-item_strategy = st.builds(
-    lambda i, pods, bs, sp, t3: _mk_item(i, pods, bs, sp, t3),
-    st.integers(0, 10_000), st.integers(1, 8),
-    st.floats(1e3, 1e5), st.floats(0.01, 3.0), st.integers(0, 6))
 
 
 def _brute_force(items, req, alpha):
@@ -53,6 +39,32 @@ def test_dp_matches_brute_force(items, req, alpha):
     got = float(np.dot(coef, counts))
     assert got <= expected + 1e-9
     assert sum(c * it.pods for c, it in zip(counts, items)) >= req
+
+
+def test_dp_matches_brute_force_deterministic():
+    """Seeded twin of the hypothesis property above: always runs, so the
+    brute-force exactness check never rides on an optional dependency."""
+    rng = np.random.default_rng(101)
+    n_feasible = n_infeasible = 0
+    for _ in range(60):
+        items = [mk_item(i, int(rng.integers(1, 9)),
+                         float(rng.uniform(1e3, 1e5)),
+                         float(rng.uniform(0.01, 3.0)),
+                         int(rng.integers(0, 7)))
+                 for i in range(int(rng.integers(1, 5)))]
+        req = int(rng.integers(0, 13))
+        alpha = float(rng.choice([0.0, 1.0, rng.uniform(0, 1)]))
+        counts = solve_ilp(items, req, alpha)
+        expected = _brute_force(items, req, alpha)
+        if expected is None:
+            assert counts is None
+            n_infeasible += 1
+            continue
+        n_feasible += 1
+        coef = objective_coefficients(items, alpha)
+        assert float(np.dot(coef, counts)) <= expected + 1e-9
+        assert sum(c * it.pods for c, it in zip(counts, items)) >= req
+    assert n_feasible >= 20 and n_infeasible >= 1
 
 
 @settings(max_examples=15, deadline=None)
@@ -100,7 +112,7 @@ def test_alpha_zero_minimizes_cost(items_100):
 
 
 def test_infeasible_returns_none():
-    items = [_mk_item(0, pods=1, bs=1e4, sp=0.1, t3=3)]
+    items = [mk_item(0, pods=1, bs=1e4, sp=0.1, t3=3)]
     assert solve_ilp(items, 10, 0.5) is None
 
 

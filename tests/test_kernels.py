@@ -98,6 +98,20 @@ def test_flash_ref_property(b, s, kvh, hd):
     np.testing.assert_allclose(np.asarray(o), np.asarray(a), atol=3e-5)
 
 
+def test_flash_ref_property_deterministic():
+    """Seeded twin of the hypothesis property above: a fixed lattice over
+    the same (batch, seqlen, kv-heads, head-dim) space."""
+    for b, s, kvh, hd in [(1, 16, 1, 8), (2, 32, 2, 16), (3, 48, 4, 8),
+                          (1, 48, 2, 16), (2, 16, 4, 16), (3, 32, 1, 8)]:
+        h = kvh * 2
+        rng = np.random.default_rng(s + b)
+        q, k, v = _qkv(rng, b, s, s, h, kvh, hd, jnp.float32)
+        a = ref.attention_naive(q, k, v, causal=True)
+        o = ref.flash_attention_ref(q, k, v, causal=True, q_chunk=16,
+                                    kv_chunk=16)
+        np.testing.assert_allclose(np.asarray(o), np.asarray(a), atol=3e-5)
+
+
 # ------------------------------------------------------------- mamba ----
 
 MAMBA_SHAPES = [

@@ -13,7 +13,7 @@ import itertools
 import numpy as np
 import pytest
 
-from repro.core import (CandidateItem, KubePACSProvisioner, Offering, Request,
+from repro.core import (KubePACSProvisioner, Request,
                         compile_market, e_total, e_total_batch,
                         generate_catalog, objective_coefficients,
                         pool_metric_arrays, preprocess, solve_ilp,
@@ -21,23 +21,8 @@ from repro.core import (CandidateItem, KubePACSProvisioner, Offering, Request,
 from repro.core.gss import bracketed_gss, golden_section_search
 from repro.core.ilp import _lp_prune
 
-
-def _mk_item(i, pods, bs, sp, t3):
-    o = Offering(offering_id=f"t{i}@az", instance_type=f"t{i}", family="m",
-                 generation=6, vendor="i", specialization="general",
-                 size="large", region="r", az="az", vcpus=2, mem_gib=8.0,
-                 od_price=sp * 3, spot_price=sp, bs_core=bs, sps_single=3,
-                 t3=t3, interruption_freq=1)
-    return CandidateItem(offering=o, pods=pods, bs=bs, spot_price=sp, t3=t3)
-
-
-def _random_market(rng, max_items=12, max_t3=9):
-    n = int(rng.integers(1, max_items + 1))
-    return [_mk_item(i, int(rng.integers(1, 9)),
-                     float(rng.uniform(1e3, 1e5)),
-                     float(rng.uniform(0.01, 3.0)),
-                     int(rng.integers(0, max_t3)))
-            for i in range(n)]
+from tests.strategies import mk_item as _mk_item
+from tests.strategies import random_market as _random_market
 
 
 def _objective(items, counts, alpha):

@@ -1,0 +1,75 @@
+#!/usr/bin/env python
+"""Audit a pytest junitxml report against the registered-skip table.
+
+Usage:  python tools/check_skips.py .pytest-report.xml
+
+Exits non-zero — listing the offenders — if the report contains any
+skipped test that is not in ``tests.skip_registry.REGISTERED_SKIPS`` with
+one of its registered reason prefixes (or an environment-wide prefix such
+as the no-jax CI leg's collection skips).  This is what turns a silently
+perma-skipped test into a build failure instead of a green checkmark.
+"""
+
+import sys
+import xml.etree.ElementTree as ET
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+from tests.skip_registry import (ENVIRONMENT_REASON_PREFIXES,  # noqa: E402
+                                 REGISTERED_SKIPS)
+
+
+def _nodeid(case) -> str:
+    """junitxml (classname='tests.test_ilp', name='test_x[param]') →
+    'tests/test_ilp.py::test_x'.  Module-level collection skips carry the
+    file path in ``name`` and an empty classname — passed through as-is."""
+    cls = case.get("classname") or ""
+    name = (case.get("name") or "").split("[")[0]
+    if not cls:
+        return name
+    return cls.replace(".", "/") + ".py::" + name
+
+
+def audit(path):
+    """Return (offenders, n_skipped) for the junitxml at ``path``."""
+    tree = ET.parse(path)
+    offenders, n_skipped = [], 0
+    for case in tree.iter("testcase"):
+        sk = case.find("skipped")
+        if sk is None:
+            continue
+        n_skipped += 1
+        nodeid = _nodeid(case)
+        msg = sk.get("message") or ""
+        allowed = REGISTERED_SKIPS.get(nodeid, ())
+        if any(msg.startswith(a) for a in allowed):
+            continue
+        if any(msg.startswith(p) for p in ENVIRONMENT_REASON_PREFIXES):
+            continue
+        offenders.append((nodeid, msg))
+    return offenders, n_skipped
+
+
+def main(argv):
+    if len(argv) != 2:
+        print(__doc__)
+        return 2
+    report = Path(argv[1])
+    if not report.exists():
+        print(f"check_skips: report {report} not found — run pytest with "
+              f"--junitxml={report} first")
+        return 2
+    offenders, n_skipped = audit(report)
+    if offenders:
+        print("check_skips: UNREGISTERED skips (register in "
+              "tests/skip_registry.py or fix the test):")
+        for nodeid, msg in offenders:
+            print(f"  {nodeid}: {msg!r}")
+        return 1
+    print(f"check_skips: ok — {n_skipped} skip(s), all registered")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv))
