@@ -4,7 +4,7 @@
 PY := PYTHONPATH=src python
 
 .PHONY: verify test bench bench-solver bench-backend bench-risk bench-fleet \
-        bench-scale perf-gate docs-check check-skips
+        bench-scale bench-serve perf-gate docs-check check-skips
 
 ## tier-1 gate: full test suite (junitxml-audited: every skip must be in
 ## tests/skip_registry.py) + a smoke pass of the solver microbenchmark
@@ -61,3 +61,9 @@ bench-fleet:
 ## BENCH_scale.json
 bench-scale:
 	$(PY) -m benchmarks.bench_scale --json BENCH_scale.json
+
+## serving co-simulation (serving_slo vs karpenter_like/kubepacs/… on
+## diurnal/bursty/flash; in-bench determinism + zero-infeasibility
+## verification); refreshes BENCH_serve.json
+bench-serve:
+	$(PY) -m benchmarks.bench_serve --json BENCH_serve.json

@@ -30,6 +30,7 @@ from typing import List, Optional
 
 from benchmarks.bench_backend import bench_tick
 from benchmarks.bench_scale import gate_measurement as scale_measurement
+from benchmarks.bench_serve import gate_measurement as serve_measurement
 from repro.core import jax_available
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
@@ -65,10 +66,22 @@ def measure(n_dec: int, repeat: int = 3) -> dict:
     scale = scale_measurement(repeat=repeat)
     metrics["scale_1m_vs_5k_ratio"] = scale["ratio"]
     checks["scale_gcd_tier_bitwise"] = scale["gcd_bitwise_ok"]
+    # serving co-simulation (DESIGN.md §15): SLO-served QPS-hours per
+    # dollar, serving_slo over karpenter_like, pinned to the analytic
+    # perf-model mode so the value is leg-independent.  This one is a
+    # *cost-efficiency* ratio, not a timing — it gates the decision
+    # quality of the SLO-mask path, and its attainment/infeasibility/
+    # determinism flags are hard correctness checks
+    serve = serve_measurement(repeat=repeat)
+    metrics["serve_qps_per_dollar_ratio"] = serve["serve_qps_per_dollar_ratio"]
+    checks["serve_slo_attainment_ok"] = serve["attainment_ok"]
+    checks["serve_zero_infeasible"] = serve["infeasible_free"]
+    checks["serve_determinism"] = serve["determinism_ok"]
     raw = {k: v for k, v in rec.items()
            if k.endswith(("_wall_s", "_compile_s", "_ms_per_decision"))}
     raw["scale_wall_5k_s"] = scale["wall_5k_s"]
     raw["scale_wall_1m_s"] = scale["wall_1m_s"]
+    raw["serve_slo_attainment"] = serve["serving_slo_attainment"]
     return {"config": {"n_items": GATE_ITEMS, "base_pods": GATE_PODS,
                        "n_decisions": n_dec},
             "metrics": metrics, "checks": checks, "raw": raw}
@@ -101,25 +114,33 @@ def gate(measured: dict, reference: dict) -> List[str]:
     return failures
 
 
+#: metrics where *larger* is the regression (everything else is a
+#: higher-is-better speedup/efficiency ratio).  Explicit by name — a
+#: suffix heuristic broke the moment a higher-is-better ``*_ratio``
+#: metric (serve_qps_per_dollar_ratio) joined the gate
+LOWER_IS_BETTER = frozenset({"scale_1m_vs_5k_ratio"})
+
+
 def _default_reference(measured: dict) -> dict:
     """References from a fresh measurement.  Bands are deliberately wide
     (-50 % on every speedup): the gate exists to catch the engine falling
     off a cliff (a lost jit cache, a host round-trip creeping back into the
     golden loop), not to police scheduler noise on shared CI hosts.
 
-    Speedups are higher-is-better, so their upper_tol is None (being
-    faster is never a regression).  ``*_ratio`` metrics are
-    lower-is-better (the 1M-vs-5k scale ratio): they get a *bounded*
-    upper_tol instead — the ratio doubling over its reference means the
-    coarsening ladder stopped absorbing the demand scale — and an
-    unbounded lower side (a cheaper 1M decision is never a regression)."""
+    Higher-is-better metrics (speedups, QPS-per-dollar ratios) get
+    upper_tol None (being faster/cheaper is never a regression).
+    :data:`LOWER_IS_BETTER` metrics (the 1M-vs-5k scale ratio) get a
+    *bounded* upper_tol instead — the ratio doubling over its reference
+    means the coarsening ladder stopped absorbing the demand scale — and
+    an unbounded lower side via lower_tol 1.0 (a cheaper 1M decision is
+    never a regression)."""
     return {
         "benchmark": "perf_gate",
         "config": measured["config"],
         "machine": platform.machine(),
         "metrics": {
             name: ({"value": value, "lower_tol": 1.0, "upper_tol": 1.0}
-                   if name.endswith("_ratio")
+                   if name in LOWER_IS_BETTER
                    else {"value": value, "lower_tol": 0.5,
                          "upper_tol": None})
             for name, value in measured["metrics"].items()

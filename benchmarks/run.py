@@ -17,7 +17,8 @@ import sys
 import traceback
 
 from . import (bench_backend, bench_fleet, bench_risk, bench_scale,
-               bench_solver, elastic_training, fig5_sota, fig5c_spotkube,
+               bench_serve, bench_solver, elastic_training, fig5_sota,
+               fig5c_spotkube,
                fig6_alpha, fig6b_cross_provider, fig7_tolerance,
                fig8_preferences, fig9_t3_fulfillment, fig12_interrupts,
                roofline_report, table2_fixed_alpha, table3_perf_dollar)
@@ -38,6 +39,7 @@ ALL = [
     ("bench_scale", bench_scale),
     ("bench_risk", bench_risk),
     ("bench_fleet", bench_fleet),
+    ("bench_serve", bench_serve),
     ("elastic_training", elastic_training),
     ("roofline_report", roofline_report),
 ]

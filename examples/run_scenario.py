@@ -4,10 +4,17 @@ with the per-seed runner by default, or the replica-major fleet engine
 (one shared market path + cross-replica decision memo, DESIGN.md §11)
 when ``--replicas N`` asks for a real Monte-Carlo sweep.
 
+With ``--workload`` the tour switches to the serving co-simulation
+(DESIGN.md §15): a deterministic request-rate trace staffs the pod
+demand, the chosen policy provisions it, and the run is read back as a
+serving system — SLO attainment, served QPS-hours, recovery losses.
+
     PYTHONPATH=src python examples/run_scenario.py --trace /tmp/storm.jsonl
     PYTHONPATH=src python examples/run_scenario.py --smoke   # small & fast
     PYTHONPATH=src python examples/run_scenario.py --smoke --policy kubepacs_risk:12
     PYTHONPATH=src python examples/run_scenario.py --smoke --replicas 256
+    PYTHONPATH=src python examples/run_scenario.py --smoke --workload diurnal
+    PYTHONPATH=src python examples/run_scenario.py --workload flash --policy karpenter_like
 """
 
 import argparse
@@ -35,6 +42,29 @@ def build_scenario(smoke: bool, policy: str = "kubepacs") -> Scenario:
     )
 
 
+def run_serving_workload(kind: str, policy: str, smoke: bool) -> None:
+    """The ServeSim tour: provision a staffed request trace, then report
+    the run as a serving system (DESIGN.md §15)."""
+    from repro.serve_sim import build_serve_scenario, run_serving
+
+    ss = build_serve_scenario(kind, policy=policy,
+                              duration_hours=8.0 if smoke else 24.0,
+                              max_offerings=120 if smoke else 250)
+    rep = run_serving(ss)
+    print(f"serving {kind!r}: policy={rep.policy}, "
+          f"perf_model={rep.perf_mode}, slo={rep.slo_ms:.0f}ms, "
+          f"trace digest {rep.workload_digest[:12]}…")
+    print(f"        offered {rep.offered_qps_hours:,.0f} QPS·h -> served "
+          f"{rep.served_qps_hours:,.0f} ({rep.served_fraction:.1%}), "
+          f"within SLO {rep.slo_served_qps_hours:,.0f} "
+          f"(attainment {rep.slo_attainment:.1%})")
+    print(f"        recovery losses {rep.recovery_lost_qps_hours:,.1f} "
+          f"QPS·h across {rep.interrupted_nodes} interrupted nodes; "
+          f"{rep.infeasible_decisions}/{rep.decisions} infeasible decisions")
+    print(f"        ${rep.total_cost:.2f} total -> "
+          f"{rep.slo_qps_hours_per_dollar:,.1f} SLO-served QPS·h per $")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--trace", default="/tmp/kubepacs_scenario.jsonl")
@@ -42,13 +72,23 @@ def main():
                     help="small catalog / short horizon")
     ap.add_argument("--policy", default="kubepacs",
                     help="policy spec, e.g. kubepacs, kubepacs_risk:12, "
-                         "karpenter_like, fixed_alpha:0.5")
+                         "karpenter_like, fixed_alpha:0.5, serving_slo")
     ap.add_argument("--replicas", type=int, default=None, metavar="N",
                     help="sweep N interruption seeds with the fleet engine "
                          "(default: 5 seeds via the per-seed runner)")
+    ap.add_argument("--workload", default=None, metavar="KIND",
+                    choices=("diurnal", "bursty", "flash"),
+                    help="run the serving co-simulation on this request-"
+                         "trace family instead of the interrupt storm")
     args = ap.parse_args()
 
     make_policy(args.policy)   # validate the spec before building anything
+
+    if args.workload:
+        policy = ("serving_slo" if args.policy == "kubepacs"
+                  else args.policy)        # serving default unless chosen
+        run_serving_workload(args.workload, policy, args.smoke)
+        return
 
     scenario = build_scenario(args.smoke, policy=args.policy)
     print(f"scenario {scenario.name!r}: {scenario.duration_hours:.0f}h, "

@@ -167,6 +167,18 @@ def decision_metrics(pool: NodePool, req_pods: int) -> Dict[str, float]:
     }
 
 
+def pool_capacity_rate(pool: NodePool,
+                       rate_per_pod: Dict[str, float]) -> float:
+    """Σ_i rate(o_i)·Pod_i·x_i — a pool's aggregate rate under a per-pod
+    rate table (e.g. QPS/pod from the serving perf model, DESIGN.md §15).
+    The serving analogue of :attr:`NodePool.perf_rate`: offerings missing
+    from the table contribute nothing rather than raising, so a rate table
+    built from one market snapshot stays usable on later pools."""
+    return float(sum(rate_per_pod.get(it.offering.offering_id, 0.0)
+                     * it.pods * c
+                     for it, c in zip(pool.items, pool.counts)))
+
+
 def reweight_items(items: Sequence[CandidateItem], perf: np.ndarray,
                    price: np.ndarray) -> List[CandidateItem]:
     """Array-adjustment entry point: the same candidates with substituted

@@ -245,15 +245,22 @@ class SolveBatch:
         return len(jobs)
 
 
-def exclusion_mask(items: Sequence[CandidateItem],
-                   excluded: Set[str]) -> Optional[np.ndarray]:
+def exclusion_mask(items: Sequence[CandidateItem], excluded: Set[str],
+                   extra: Optional[np.ndarray] = None,
+                   ) -> Optional[np.ndarray]:
     """Boolean solver mask over ``items`` for the TTL-cached offering_ids —
     the single definition of exclusion semantics, shared by the KubePACS
-    provisioner and every scenario-engine policy."""
-    if not excluded:
+    provisioner and every scenario-engine policy.  ``extra`` ORs a
+    caller-supplied feasibility mask (e.g. the serving SLO mask of
+    DESIGN.md §15) into the same path, so additional hard constraints
+    reach ``solve_ilp`` exactly like §4.1 interrupt exclusions."""
+    if not excluded and extra is None:
         return None
-    return np.array([it.offering.offering_id in excluded for it in items],
+    mask = np.array([it.offering.offering_id in excluded for it in items],
                     dtype=bool)
+    if extra is not None:
+        mask |= np.asarray(extra, dtype=bool)
+    return mask
 
 
 def preprocess(catalog: Sequence[Offering], request: Request,

@@ -79,6 +79,27 @@ def risk_adjustment(items: Sequence[CandidateItem],
                           horizon=horizon)
 
 
+def serving_risk_adjustment(adj: RiskAdjustment, serve_perf: np.ndarray,
+                            base_perf: np.ndarray) -> RiskAdjustment:
+    """SLO-aware reweighting hook (DESIGN.md §15): carry a risk
+    adjustment's multiplicative perf discount — uptime × fulfillment,
+    i.e. ``adj.perf / base_perf`` — over to a *serving-rate* objective
+    vector (QPS/pod · Pod_i from the serving perf model), keeping the
+    price adjustment as-is.  The serving policy then optimizes expected
+    *served* QPS per risk-adjusted dollar through the unchanged solver
+    stack.  Exact reduction: at horizon ≤ 0 (or no risk signal)
+    ``adj.perf == base_perf``, so the result is exactly ``serve_perf`` —
+    pure serving reweighting with no risk term."""
+    serve_perf = np.asarray(serve_perf, dtype=np.float64)
+    base_perf = np.asarray(base_perf, dtype=np.float64)
+    if serve_perf.shape != base_perf.shape or \
+            serve_perf.shape != adj.perf.shape:
+        raise ValueError("serve_perf/base_perf must match the adjustment")
+    factor = np.where(base_perf > 0,
+                      adj.perf / np.maximum(base_perf, 1e-300), 0.0)
+    return dataclasses.replace(adj, perf=serve_perf * factor)
+
+
 def reweight_candidates(items: Sequence[CandidateItem],
                         adj: RiskAdjustment,
                         market: Optional[CompiledMarket] = None,

@@ -10,9 +10,10 @@ from .interrupts import (InterruptModel, NullInterruptModel,
                          PressureInterruptModel, PriceCrossingInterruptModel,
                          RebalanceRecommendationModel, make_interrupt_model)
 from .policy import (FixedAlphaPolicy, KarpenterLikePolicy, KubePACSPolicy,
-                     KubePACSRiskPolicy, Policy, make_policy)
+                     KubePACSRiskPolicy, Policy, ServingSLOPolicy,
+                     make_policy)
 from .scenario import (Scenario, Shock, heterogeneous_demand_scenario,
-                       high_demand_scenario)
+                       high_demand_scenario, serving_scenario)
 from .trace import TraceRecorder, load_trace, loads_trace
 from .engine import (ClusterSim, LiveMarketSource, ReplaySource,
                      ScriptedMarketSource, SimResult, SimRound, run_replicas,
@@ -25,8 +26,10 @@ __all__ = [
     "PriceCrossingInterruptModel", "RebalanceRecommendationModel",
     "make_interrupt_model", "Policy", "KubePACSPolicy", "KubePACSRiskPolicy",
     "KarpenterLikePolicy",
-    "FixedAlphaPolicy", "make_policy", "Scenario", "Shock",
+    "FixedAlphaPolicy", "ServingSLOPolicy", "make_policy", "Scenario",
+    "Shock",
     "heterogeneous_demand_scenario", "high_demand_scenario",
+    "serving_scenario",
     "TraceRecorder",
     "load_trace", "loads_trace", "ClusterSim", "LiveMarketSource",
     "ReplaySource", "ScriptedMarketSource", "SimResult", "SimRound",

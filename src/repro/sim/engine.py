@@ -517,6 +517,17 @@ class ClusterSim:
         for obs in self._observers:
             obs.observe_market(self.time, spot, t3)
 
+    def _notify_pool(self, reason: str) -> None:
+        """Pool-change fan-out: fired whenever ``self.pool`` changes (a
+        launch, or interruption losses with no re-provision decision).
+        getattr-guarded so observers predating the hook keep working —
+        serving co-sim timelines integrate capacity between exactly these
+        events (DESIGN.md §15)."""
+        for obs in self._observers:
+            hook = getattr(obs, "observe_pool", None)
+            if hook is not None:
+                hook(self.time, self.pool, reason)
+
     def _precompiled(self, request: Request):
         """Shared-compile hook: replicas keyed on (market state, request
         shape) reuse one preprocessed candidate set + CompiledMarket."""
@@ -552,6 +563,7 @@ class ClusterSim:
             self.pool = merge_pools(base_pool, new_pool)
         else:
             self.pool = new_pool
+        self._notify_pool(reason)
 
     def _split_notices(self, sampled: Sequence[InterruptNotice],
                        now: float) -> List[InterruptNotice]:
@@ -613,6 +625,8 @@ class ClusterSim:
                 # (infeasible shortfall) so the trace shows every
                 # re-optimization attempt, exactly like initial/demand
                 self._launch(decision, "interrupt", base_pool=survivors)
+            else:
+                self._notify_pool("losses")
         self.rounds.append(SimRound(
             time=t, notices=list(sampled), effective=effective,
             lost_nodes=lost_nodes, lost_pods=lost_pods, shortfall=shortfall,

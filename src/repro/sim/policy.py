@@ -31,6 +31,10 @@ Spec strings (``Scenario.policy``):
                              (default 12) — DESIGN.md §10
     "karpenter_like"         price-capacity-optimized baseline (§5.4)
     "fixed_alpha:<α>"        single ILP solve at a fixed α (Table 2)
+    "serving_slo[:H]"        SLO-driven serving: QPS/pod objective from the
+                             roofline perf model + latency-SLO feasibility
+                             mask; optional H-hour risk discount
+                             (DESIGN.md §15)
 
 The optional ``precompiled=(items, CompiledMarket)`` argument lets the
 multi-seed runner share one preprocessed market across N replica policies
@@ -46,7 +50,7 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from ..core.efficiency import (CandidateItem, NodePool, Request,
-                               decision_metrics)
+                               decision_metrics, pool_capacity_rate)
 from ..core.gss import bracketed_gss
 from ..core.ilp import CompiledMarket, compile_market, solve_ilp
 from ..core.market import Offering
@@ -56,7 +60,10 @@ from ..core.provisioner import (DecisionMemo, KubePACSProvisioner,
                                 UnavailableOfferingsCache, exclusion_mask,
                                 preprocess)
 from ..risk.estimators import RiskEstimators, RiskParams
-from ..risk.objective import e_risk, reweight_candidates, risk_adjustment
+from ..risk.objective import (e_risk, reweight_candidates, risk_adjustment,
+                              serving_risk_adjustment)
+from ..serve_sim.perf_model import (ServingProfile, default_profile,
+                                    default_slo_ms, serving_table)
 from .events import InterruptNotice
 
 Precompiled = Tuple[List[CandidateItem], CompiledMarket]
@@ -119,6 +126,11 @@ class Policy:
     def observe_fulfillment(self, time: float, requested: Dict[str, int],
                             grants: Dict[str, int]) -> None:
         """A launch's fulfillment round granted ``grants`` of ``requested``."""
+
+    def observe_pool(self, time: float, pool: NodePool,
+                     reason: str) -> None:
+        """The engine's pool changed (launch merge or interruption losses)
+        — the serving co-simulation's capacity-timeline hook (§15)."""
 
 
 class KubePACSPolicy(Policy):
@@ -371,6 +383,103 @@ class KubePACSRiskPolicy(_BaselinePolicy):
         return decision
 
 
+class ServingSLOPolicy(KubePACSRiskPolicy):
+    """SLO-driven serving provisioning (DESIGN.md §15): the decision plane
+    connected to the ML stack's perf model.
+
+    Two changes relative to the scalar-perf policies, both through
+    existing solver entry points:
+
+    * **objective** — Perf_i is replaced by the serving capacity rate
+      ``QPS/pod_i · Pod_i`` from :mod:`repro.serve_sim.perf_model`
+      (roofline-derived, analytic fallback without jax), so GSS × ILP
+      maximizes *served QPS per dollar* instead of CoreMark per dollar;
+    * **feasibility** — offerings whose per-request decode latency
+      exceeds ``slo_ms`` are ORed into the §4.1 exclusion mask
+      (``exclusion_mask(extra=)``), entering ``solve_ilp`` as hard
+      infeasibility, exactly like TTL-cached interrupted offerings.
+
+    Inherits the risk policy's machinery: the compiled-market cache, the
+    §4.1 shortfall protocol, and the online estimators — with
+    ``risk_horizon > 0`` the serving rate is additionally discounted by
+    expected uptime × fulfillment via
+    :func:`repro.risk.objective.serving_risk_adjustment` (at the default
+    horizon 0 that reduces exactly to the pure serving objective).
+    Deterministic given (snapshot, estimator state): the serving table is
+    a pure function of (profile, offering set), cached by digest.
+    """
+
+    def __init__(self, profile: Optional[ServingProfile] = None,
+                 slo_ms: Optional[float] = None, risk_horizon: float = 0.0,
+                 tolerance: float = 0.01, ttl_hours: float = 2.0,
+                 params: Optional[RiskParams] = None,
+                 clock: Callable[[], float] = time.perf_counter) -> None:
+        super().__init__(horizon=risk_horizon, tolerance=tolerance,
+                         ttl_hours=ttl_hours, params=params, clock=clock)
+        self.profile = profile if profile is not None else default_profile()
+        self.slo_ms = float(slo_ms) if slo_ms is not None \
+            else default_slo_ms(self.profile)
+        self.name = ("serving_slo" if risk_horizon <= 0
+                     else f"serving_slo:{risk_horizon:g}")
+
+    def memo_digest(self):
+        # beyond the risk digest, decisions depend on the perf-model table
+        # (profile digest pins mode/config/shape) and the SLO threshold
+        base = super().memo_digest() or ""
+        return f"{base}|{self.profile.digest}|{self.slo_ms!r}"
+
+    def provision(self, request, snapshot, now, precompiled=None):
+        t0 = self.clock()
+        est = self._ensure_estimators(snapshot)
+        excluded = self.cache.excluded(now)
+        memo = self.decision_memo
+        mkey = memo.key(request, excluded) if memo is not None else None
+        if mkey is not None:
+            hit = memo.fetch(mkey, self.clock() - t0)
+            if hit is not None:
+                return hit
+        items, market = self._compiled(request, snapshot, precompiled)
+        table = serving_table(self.profile,
+                              [it.offering for it in items])
+        slo_mask = table.slo_mask(self.slo_ms)
+        exclude = exclusion_mask(items, excluded, extra=slo_mask)
+        # serving capacity rate per node, risk-discounted when horizon > 0
+        serve_perf = table.qps_per_pod * np.array(
+            [it.pods for it in items], dtype=np.float64)
+        base_perf = np.array([it.perf for it in items], dtype=np.float64)
+        adj = serving_risk_adjustment(
+            risk_adjustment(items, est, self.horizon), serve_perf, base_perf)
+        items_adj, market_adj = reweight_candidates(items, adj, market)
+        pool_adj, trace = bracketed_gss(items_adj, request.pods,
+                                        tolerance=self.tolerance,
+                                        market=market_adj, exclude=exclude,
+                                        timer=self.clock)
+        if pool_adj is None:     # demand exceeds SLO-feasible capacity
+            pool = NodePool(items=[], counts=[], request=request)
+            alpha = None
+        else:
+            real = {it.offering.offering_id: it for it in items}
+            pool = NodePool(
+                items=[real[it.offering.offering_id]
+                       for it in pool_adj.items],
+                counts=list(pool_adj.counts), alpha=pool_adj.alpha,
+                request=request)
+            alpha = pool_adj.alpha
+        metrics = decision_metrics(pool, request.pods)
+        qps = table.qps_map()
+        metrics["serve_qps_capacity"] = pool_capacity_rate(pool, qps)
+        metrics["serve_slo_masked"] = float(0 if slo_mask is None
+                                            else int(slo_mask.sum()))
+        metrics["serve_infeasible"] = float(pool_adj is None)
+        decision = ProvisioningDecision(pool=pool, trace=trace, alpha=alpha,
+                                        wall_seconds=self.clock() - t0,
+                                        excluded_offerings=excluded,
+                                        metrics=metrics)
+        if mkey is not None:
+            memo.store(mkey, decision)
+        return decision
+
+
 def make_policy(spec: str, tolerance: float = 0.01,
                 ttl_hours: float = 2.0,
                 clock: Callable[[], float] = time.perf_counter) -> Policy:
@@ -386,6 +495,11 @@ def make_policy(spec: str, tolerance: float = 0.01,
                    if ":" in spec else DEFAULT_RISK_HORIZON)
         return KubePACSRiskPolicy(horizon=horizon, tolerance=tolerance,
                                   ttl_hours=ttl_hours, clock=clock)
+    if spec == "serving_slo" or spec.startswith("serving_slo:"):
+        risk_horizon = float(spec.split(":", 1)[1]) if ":" in spec else 0.0
+        return ServingSLOPolicy(risk_horizon=risk_horizon,
+                                tolerance=tolerance, ttl_hours=ttl_hours,
+                                clock=clock)
     if spec == "karpenter_like":
         return KarpenterLikePolicy(ttl_hours=ttl_hours, clock=clock)
     if spec.startswith("fixed_alpha:"):

@@ -172,6 +172,39 @@ def high_demand_scenario(pods: int = 250_000, **overrides) -> Scenario:
     return Scenario(**base)
 
 
+def serving_scenario(workload: str = "diurnal", *, base_qps: float = 1000.0,
+                     seed: int = 11, policy: str = "serving_slo",
+                     duration_hours: float = 24.0, step_hours: float = 1.0,
+                     profile=None, **overrides) -> Scenario:
+    """SLO-driven serving scenario family (DESIGN.md §15): the pod-demand
+    schedule is *derived* from a deterministic request-rate trace
+    (:class:`repro.serve_sim.workload.WorkloadSpec`) via square-root
+    staffing against the perf model's reference QPS/pod — so every
+    compared policy faces the identical capacity demand and differs only
+    in which offerings provide it.  ``workload`` picks the trace family
+    (``diurnal`` | ``bursty`` | ``flash``); hourly ticks keep the
+    interrupt → re-provision → recovery loop running all day.  Lazy
+    imports keep ``repro.sim`` ↔ ``repro.serve_sim`` acyclic."""
+    from ..serve_sim.perf_model import default_profile, reference_qps_per_pod
+    from ..serve_sim.workload import WorkloadSpec, demand_schedule_from_trace
+    if profile is None:
+        profile = default_profile()
+    spec = WorkloadSpec(kind=workload, base_qps=base_qps, seed=seed,
+                        duration_hours=duration_hours,
+                        step_hours=step_hours)
+    initial, schedule = demand_schedule_from_trace(
+        spec, reference_qps_per_pod(profile))
+    base = dict(
+        name=f"serving_{workload}", duration_hours=duration_hours,
+        step_hours=step_hours, pods=initial, cpu_per_pod=2.0,
+        mem_per_pod=4.0, demand_schedule=schedule,
+        interrupt_model="pressure", policy=policy,
+        catalog_seed=11, max_offerings=250, market_seed=11,
+        interrupt_seed=seed)
+    base.update(overrides)
+    return Scenario(**base)
+
+
 def heterogeneous_demand_scenario(**overrides) -> Scenario:
     """Standard low-memo-hit stress scenario (DESIGN.md §12).
 

@@ -1,0 +1,329 @@
+"""ServeSim: workload determinism, perf-model caching, SLO masking,
+recovery accounting, and the serving_slo policy loop (DESIGN.md §15)."""
+
+import dataclasses
+import types
+
+import numpy as np
+import pytest
+
+from repro.core.efficiency import Request
+from repro.core.market import generate_catalog
+from repro.core.provisioner import preprocess
+from repro.risk.estimators import RiskEstimators, RiskParams
+from repro.risk.objective import risk_adjustment, serving_risk_adjustment
+from repro.serve_sim import (DEFAULT_STAFFING_BETA, ServingProfile,
+                             WorkloadSpec, analytic_token_s,
+                             build_serve_scenario, cache_stats, clear_caches,
+                             default_slo_ms, demand_schedule_from_trace,
+                             evaluate_serving, reference_qps_per_pod,
+                             run_serving, serving_table, staffed_pods,
+                             trace_digest)
+from repro.serve_sim.sim import PoolTimeline, ServeScenario
+from repro.sim import ClusterSim, loads_trace, make_policy, serving_scenario
+
+from ._optional import requires_jax
+
+ANALYTIC = ServingProfile(mode="analytic")
+
+
+# --------------------------------------------------------------------------
+# workload traces
+# --------------------------------------------------------------------------
+
+def test_trace_byte_identical_per_seed():
+    for kind in ("diurnal", "bursty", "flash"):
+        a = WorkloadSpec(kind=kind, seed=42)
+        b = WorkloadSpec(kind=kind, seed=42)
+        assert a.trace().tobytes() == b.trace().tobytes()
+        assert trace_digest(a) == trace_digest(b)
+        assert trace_digest(a) != trace_digest(
+            WorkloadSpec(kind=kind, seed=43))
+
+
+def test_trace_kinds_on_disjoint_streams():
+    digests = {kind: trace_digest(WorkloadSpec(kind=kind, seed=0))
+               for kind in ("diurnal", "bursty", "flash")}
+    assert len(set(digests.values())) == 3
+    # flash actually spikes: max well above the pure-diurnal peak
+    flash = WorkloadSpec(kind="flash", seed=0, noise=0.0)
+    plain = WorkloadSpec(kind="diurnal", seed=0, noise=0.0)
+    assert flash.trace().max() > 1.5 * plain.trace().max()
+
+
+def test_diurnal_shape():
+    spec = WorkloadSpec(kind="diurnal", base_qps=100.0, peak_factor=3.0,
+                        noise=0.0)
+    lam = spec.trace()
+    assert lam.dtype == np.float64 and lam.shape == (24,)
+    assert np.isclose(lam.min(), 100.0)            # trough at base_qps
+    assert np.isclose(lam.max(), 300.0)            # peak at base·factor
+    assert int(np.argmax(lam)) == 15               # mid-afternoon peak
+
+
+def test_staffed_pods_sqrt_headroom():
+    # bare floor at beta=0; sqrt headroom above it; monotone in lambda
+    assert staffed_pods(100.0, 10.0, beta=0.0) == 10
+    rho = 100.0 / 10.0
+    expect = int(np.ceil(rho + DEFAULT_STAFFING_BETA * np.sqrt(rho) - 1e-9))
+    assert staffed_pods(100.0, 10.0) == expect > 10
+    staffs = [staffed_pods(lam, 10.0) for lam in (0.0, 1.0, 50.0, 500.0)]
+    assert staffs == sorted(staffs) and staffs[0] == 1
+
+
+def test_demand_schedule_merges_equal_levels():
+    spec = WorkloadSpec(kind="diurnal", base_qps=40.0, noise=0.0)
+    initial, schedule = demand_schedule_from_trace(spec, 10.0)
+    assert initial == staffed_pods(float(spec.trace()[0]), 10.0)
+    times = [t for t, _ in schedule]
+    assert times == sorted(times) and all(t > 0 for t in times)
+    # merged: consecutive entries always change the staffing level
+    levels = [initial] + [p for _, p in schedule]
+    assert all(a != b for a, b in zip(levels, levels[1:]))
+    # and the schedule reproduces the per-interval staffing exactly
+    lam = spec.trace()
+    cur, k = initial, 0
+    for step, t in enumerate(spec.times()):
+        while k < len(schedule) and schedule[k][0] <= t:
+            cur = schedule[k][1]
+            k += 1
+        assert cur == staffed_pods(float(lam[step]), 10.0)
+
+
+# --------------------------------------------------------------------------
+# perf model: caching + SLO mask
+# --------------------------------------------------------------------------
+
+def test_perf_model_cache_hit_and_digest_invalidation():
+    offs = generate_catalog(seed=3, max_offerings=24)
+    clear_caches()
+    t1 = serving_table(ANALYTIC, offs)
+    assert cache_stats() == {"step_hits": 0, "step_misses": 1,
+                             "table_hits": 0, "table_misses": 1}
+    t2 = serving_table(ANALYTIC, offs)
+    assert t2 is t1
+    assert cache_stats()["table_hits"] == 1
+    # tokens_per_request changes the profile digest -> table rebuild, but
+    # the step time does not depend on it -> step cache still hits
+    longer = dataclasses.replace(ANALYTIC, tokens_per_request=256)
+    assert longer.digest != ANALYTIC.digest
+    t3 = serving_table(longer, offs)
+    stats = cache_stats()
+    assert stats["table_misses"] == 2 and stats["step_hits"] == 1
+    assert np.allclose(t3.request_ms, 2.0 * t1.request_ms)
+    # batch_per_pod changes the decode step itself -> step cache miss
+    serving_table(dataclasses.replace(ANALYTIC, batch_per_pod=64), offs)
+    assert cache_stats()["step_misses"] == 2
+    # a different offering set is a different table key
+    serving_table(ANALYTIC, offs[:10])
+    assert cache_stats()["table_misses"] == 4
+
+
+def test_slo_mask_is_speed_factor_threshold():
+    offs = generate_catalog(seed=3, max_offerings=120)
+    table = serving_table(ANALYTIC, offs)
+    slack = 1.05
+    slo = default_slo_ms(ANALYTIC, slack=slack)
+    mask = table.slo_mask(slo)
+    assert mask is not None and 0 < mask.sum() < len(offs)
+    # infeasible <=> speed factor below 1/slack (float-tolerant boundary)
+    np.testing.assert_array_equal(mask, table.request_ms > slo)
+    expect = table.speed < 1.0 / slack
+    boundary = np.isclose(table.speed, 1.0 / slack, rtol=1e-12)
+    np.testing.assert_array_equal(mask[~boundary], expect[~boundary])
+    # a lax SLO masks nothing -> None (provisioner convention)
+    assert table.slo_mask(1e9) is None
+
+
+def test_analytic_token_s_terms():
+    # KV-dominated at the default 32k context: memory term governs
+    token_s = analytic_token_s(ANALYTIC)
+    n, b, d = (ANALYTIC.active_params, ANALYTIC.batch_per_pod,
+               ANALYTIC.devices_per_pod)
+    from repro import roofline
+    kv = b * ANALYTIC.context_len * ANALYTIC.kv_bytes_per_token
+    assert np.isclose(token_s, (2 * n + kv) / (roofline.HBM_BW * d))
+    # qps/pod and request latency are consistent with it
+    assert np.isclose(reference_qps_per_pod(ANALYTIC),
+                      b / (ANALYTIC.tokens_per_request * token_s))
+
+
+@requires_jax
+def test_roofline_matches_analytic_ranking():
+    """The jax leg: the compiled-HLO mode must agree with the analytic
+    fallback on everything scale-invariant — offering ranking, SLO mask,
+    relative latencies — differing only in the absolute step time."""
+    offs = generate_catalog(seed=3, max_offerings=60)
+    ana = serving_table(ANALYTIC, offs)
+    roof = serving_table(ServingProfile(mode="roofline"), offs)
+    assert roof.mode == "roofline" and roof.token_s_ref != ana.token_s_ref
+    np.testing.assert_array_equal(np.argsort(-roof.qps_per_pod),
+                                  np.argsort(-ana.qps_per_pod))
+    np.testing.assert_array_equal(
+        roof.slo_mask(default_slo_ms(ServingProfile(mode="roofline"))),
+        ana.slo_mask(default_slo_ms(ANALYTIC)))
+    np.testing.assert_allclose(roof.request_ms / roof.token_s_ref,
+                               ana.request_ms / ana.token_s_ref)
+
+
+def test_ranking_follows_speed_factor_deterministic():
+    """Deterministic twin of the roofline ranking test: in any mode the
+    table is one reference step time scaled by the CoreMark speed factor,
+    so ranking == speed ranking by construction."""
+    offs = generate_catalog(seed=3, max_offerings=60)
+    table = serving_table(ANALYTIC, offs)
+    np.testing.assert_array_equal(np.argsort(-table.qps_per_pod),
+                                  np.argsort(table.request_ms))
+    np.testing.assert_array_equal(np.argsort(-table.qps_per_pod),
+                                  np.argsort(-table.speed))
+
+
+# --------------------------------------------------------------------------
+# recovery accounting
+# --------------------------------------------------------------------------
+
+def _flat_scenario(recovery_hours: float) -> ServeScenario:
+    # constant lambda (no diurnal swing, no noise) so served QPS-hours are
+    # hand-computable
+    spec = WorkloadSpec(kind="diurnal", base_qps=100.0, peak_factor=1.0,
+                        noise=0.0, duration_hours=12.0)
+    scenario = serving_scenario("diurnal", base_qps=100.0,
+                                duration_hours=12.0, profile=ANALYTIC)
+    return ServeScenario(workload=spec, scenario=scenario, profile=ANALYTIC,
+                         slo_ms=1e9, recovery_hours=recovery_hours)
+
+
+def test_recovery_accounting_charges_warmup():
+    offs = generate_catalog(seed=3, max_offerings=8)
+    table = serving_table(ANALYTIC, offs)
+    oid = table.offering_ids[0]
+    pods = 4
+    qps1 = pods * float(table.qps_per_pod[table.index[oid]])
+    # capacity qps1 from t=0 (warm: initial provisioning exempt), doubled
+    # at t=6 -> the added half warms up for recovery_hours
+    result = types.SimpleNamespace(decisions=[], total_cost=10.0,
+                                   interrupted_nodes=0)
+    reports = {}
+    for rec in (0.0, 0.5):
+        timeline = PoolTimeline()
+        timeline.events = [(0.0, "launch", ((oid, 1, pods),)),
+                           (6.0, "launch", ((oid, 2, pods),))]
+        reports[rec] = evaluate_serving(_flat_scenario(rec), table,
+                                        timeline, result)
+    base, charged = reports[0.0], reports[0.5]
+    assert base.recovery_lost_qps_hours == 0.0
+    assert np.isclose(base.offered_qps_hours, 100.0 * 12.0)
+    lam = 100.0
+    exp_base = min(lam, qps1) * 6.0 + min(lam, 2 * qps1) * 6.0
+    assert np.isclose(base.served_qps_hours, exp_base)
+    # during [6, 6.5) the added qps1 is warming: capacity reverts to qps1
+    exp_lost = (min(lam, 2 * qps1) - min(lam, qps1)) * 0.5
+    assert np.isclose(charged.recovery_lost_qps_hours, exp_lost)
+    assert np.isclose(charged.served_qps_hours, exp_base - exp_lost)
+    assert np.isclose(charged.nominal_served_qps_hours, exp_base)
+
+
+def test_recovery_initial_provisioning_exempt():
+    offs = generate_catalog(seed=3, max_offerings=8)
+    table = serving_table(ANALYTIC, offs)
+    oid = table.offering_ids[0]
+    timeline = PoolTimeline()
+    timeline.events = [(0.0, "launch", ((oid, 2, 4),))]
+    result = types.SimpleNamespace(decisions=[], total_cost=1.0,
+                                   interrupted_nodes=0)
+    report = evaluate_serving(_flat_scenario(0.5), table, timeline, result)
+    assert report.recovery_lost_qps_hours == 0.0
+    assert report.served_qps_hours == report.nominal_served_qps_hours > 0
+
+
+# --------------------------------------------------------------------------
+# risk-objective substitution
+# --------------------------------------------------------------------------
+
+def test_serving_risk_adjustment_identity_at_zero_horizon():
+    catalog = generate_catalog(seed=5, max_offerings=30)
+    items = preprocess(catalog, Request(pods=50, cpu_per_pod=2.0,
+                                        mem_per_pod=4.0))
+    est = RiskEstimators(catalog, RiskParams())
+    base_perf = np.array([float(it.perf) for it in items])
+    serve_perf = np.linspace(1.0, 2.0, len(items))
+    adj0 = risk_adjustment(items, est, 0.0)
+    out = serving_risk_adjustment(adj0, serve_perf, base_perf)
+    # horizon 0: no discount anywhere -> the serving vector passes through
+    np.testing.assert_allclose(out.perf, serve_perf)
+    np.testing.assert_array_equal(out.price, adj0.price)
+    # positive horizon: discounted by exactly the base-perf risk factor
+    adj = risk_adjustment(items, est, 12.0)
+    out = serving_risk_adjustment(adj, serve_perf, base_perf)
+    np.testing.assert_allclose(out.perf,
+                               serve_perf * adj.perf / base_perf)
+
+
+# --------------------------------------------------------------------------
+# the serving_slo policy in the engine loop
+# --------------------------------------------------------------------------
+
+def _short_serve(policy: str = "serving_slo", **kw):
+    return build_serve_scenario("diurnal", policy=policy, base_qps=400.0,
+                                duration_hours=8.0, profile=ANALYTIC,
+                                max_offerings=120, **kw)
+
+
+def test_serving_slo_selects_only_feasible_offerings():
+    ss = _short_serve()
+    timeline = PoolTimeline()
+    sim = ClusterSim(ss.scenario, observers=[timeline], clock=lambda: 0.0)
+    result = sim.run()
+    table = serving_table(ANALYTIC, sim.catalog)
+    idx = table.index
+    launched = {oid for _, _, alloc in timeline.events
+                for oid, _, _ in alloc}
+    assert launched, "no capacity was ever launched"
+    assert all(float(table.request_ms[idx[oid]]) <= ss.slo_ms + 1e-9
+               for oid in launched)
+    masked = [d.metrics["serve_slo_masked"] for _, d in result.decisions]
+    assert all(m > 0 for m in masked)          # the mask actually bites
+    assert all(d.metrics["serve_infeasible"] == 0.0
+               for _, d in result.decisions)
+    assert all(d.metrics["serve_qps_capacity"] > 0
+               for _, d in result.decisions)
+
+
+def test_serving_slo_decisions_deterministic_and_replayable():
+    a = run_serving(_short_serve(), clock=lambda: 0.0)
+    b = run_serving(_short_serve(), clock=lambda: 0.0)
+    assert a.as_dict() == b.as_dict()
+    assert a.infeasible_decisions == 0
+    # the underlying provisioning trace replays byte-identically (replay
+    # is RNG-free: the serving policy adds no stream consumption)
+    sim = ClusterSim(_short_serve().scenario, clock=lambda: 0.0)
+    res = sim.run()
+    blob = res.recorder.dumps()
+    rep = ClusterSim.replay(loads_trace(blob)).run()
+    assert rep.recorder.dumps() == blob
+    assert rep.decision_records() == res.decision_records()
+
+
+def test_serving_slo_beats_karpenter_on_slo_qps_per_dollar():
+    slo = run_serving(_short_serve(), clock=lambda: 0.0)
+    karp = run_serving(_short_serve(policy="karpenter_like"),
+                       clock=lambda: 0.0)
+    assert slo.perf_mode == "analytic"
+    assert slo.slo_attainment >= karp.slo_attainment - 1e-9
+    assert (slo.slo_qps_hours_per_dollar
+            > karp.slo_qps_hours_per_dollar)
+
+
+def test_serving_scenario_spec_roundtrip():
+    sc = serving_scenario("bursty", base_qps=200.0, profile=ANALYTIC)
+    from repro.sim import Scenario
+    assert Scenario.from_dict(sc.to_dict()) == sc
+    assert sc.policy == "serving_slo" and sc.name == "serving_bursty"
+    assert sc.pods >= 1 and sc.step_hours == 1.0
+
+
+def test_make_policy_serving_slo_specs():
+    assert make_policy("serving_slo").name == "serving_slo"
+    assert make_policy("serving_slo:12").name == "serving_slo:12"
+    with pytest.raises(ValueError):
+        make_policy("serving_slo:not_a_number")
