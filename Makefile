@@ -4,7 +4,7 @@
 PY := PYTHONPATH=src python
 
 .PHONY: verify test bench bench-solver bench-backend bench-risk bench-fleet \
-        bench-scale bench-serve perf-gate docs-check check-skips
+        bench-scale bench-serve bench-chaos perf-gate docs-check check-skips
 
 ## tier-1 gate: full test suite (junitxml-audited: every skip must be in
 ## tests/skip_registry.py) + a smoke pass of the solver microbenchmark
@@ -67,3 +67,9 @@ bench-scale:
 ## verification); refreshes BENCH_serve.json
 bench-serve:
 	$(PY) -m benchmarks.bench_serve --json BENCH_serve.json
+
+## chaos fault-storm sweep (hardened degradation ladder vs naive plane on
+## feed/ice/solver/combined storms; in-bench determinism + inertness
+## verification); refreshes BENCH_chaos.json
+bench-chaos:
+	$(PY) -m benchmarks.bench_chaos --json BENCH_chaos.json

@@ -29,6 +29,7 @@ import sys
 from typing import List, Optional
 
 from benchmarks.bench_backend import bench_tick
+from benchmarks.bench_chaos import gate_measurement as chaos_measurement
 from benchmarks.bench_scale import gate_measurement as scale_measurement
 from benchmarks.bench_serve import gate_measurement as serve_measurement
 from repro.core import jax_available
@@ -77,11 +78,25 @@ def measure(n_dec: int, repeat: int = 3) -> dict:
     checks["serve_slo_attainment_ok"] = serve["attainment_ok"]
     checks["serve_zero_infeasible"] = serve["infeasible_free"]
     checks["serve_determinism"] = serve["determinism_ok"]
+    # chaos hardening (DESIGN.md §16): SLO perf-per-dollar of the hardened
+    # plane over the naive plane under the combined fault storm — another
+    # cost-efficiency ratio (numpy-deterministic, leg-independent).  Its
+    # availability/determinism/inertness flags are hard correctness
+    # checks: a hardening layer that drops decision cycles, breaks the
+    # trace contract, or perturbs the fault-free path is a bug regardless
+    # of the ratio
+    chaos = chaos_measurement(repeat=repeat)
+    metrics["chaos_hardened_vs_naive_ratio"] = \
+        chaos["chaos_hardened_vs_naive_ratio"]
+    checks["chaos_availability_ok"] = chaos["availability_ok"]
+    checks["chaos_determinism"] = chaos["determinism_ok"]
+    checks["chaos_inert_when_healthy"] = chaos["inert_ok"]
     raw = {k: v for k, v in rec.items()
            if k.endswith(("_wall_s", "_compile_s", "_ms_per_decision"))}
     raw["scale_wall_5k_s"] = scale["wall_5k_s"]
     raw["scale_wall_1m_s"] = scale["wall_1m_s"]
     raw["serve_slo_attainment"] = serve["serving_slo_attainment"]
+    raw["chaos_hardened_availability"] = chaos["hardened_availability"]
     return {"config": {"n_items": GATE_ITEMS, "base_pods": GATE_PODS,
                        "n_decisions": n_dec},
             "metrics": metrics, "checks": checks, "raw": raw}

@@ -15,17 +15,38 @@ serving system — SLO attainment, served QPS-hours, recovery losses.
     PYTHONPATH=src python examples/run_scenario.py --smoke --replicas 256
     PYTHONPATH=src python examples/run_scenario.py --smoke --workload diurnal
     PYTHONPATH=src python examples/run_scenario.py --workload flash --policy karpenter_like
+    PYTHONPATH=src python examples/run_scenario.py --smoke --faults combined --policy hardened
+    PYTHONPATH=src python examples/run_scenario.py --faults feed:0.5
+
+With ``--faults`` a named fault storm (DESIGN.md §16: ``feed`` / ``ice``
+/ ``solver`` / ``combined``, optionally ``NAME:SCALE`` to compress the
+windows) overlays the run; the tour then also reports decision
+availability and — under ``--policy hardened`` — the degradation-ladder
+rung counters.  The replay assertion runs as usual: fault injection is
+part of the deterministic trace contract, not an exception to it.
 """
 
 import argparse
 
 import numpy as np
 
+from repro.chaos import fault_storm
+from repro.chaos.guard import decision_available
 from repro.sim import (ClusterSim, FleetSim, Scenario, Shock, load_trace,
                        make_policy, run_replicas)
 
 
-def build_scenario(smoke: bool, policy: str = "kubepacs") -> Scenario:
+def parse_faults(spec: str, smoke: bool):
+    """``NAME`` or ``NAME:SCALE``.  The storm presets are laid out for a
+    48 h horizon; without an explicit scale they are compressed to fit
+    the tour's 36 h (or 12 h smoke) run."""
+    name, _, scale = spec.partition(":")
+    factor = float(scale) if scale else (0.25 if smoke else 0.75)
+    return fault_storm(name, factor)
+
+
+def build_scenario(smoke: bool, policy: str = "kubepacs",
+                   faults=()) -> Scenario:
     return Scenario(
         name="interrupt_storm_with_spike",
         duration_hours=12.0 if smoke else 36.0, step_hours=6.0,
@@ -39,6 +60,7 @@ def build_scenario(smoke: bool, policy: str = "kubepacs") -> Scenario:
         policy=policy,
         catalog_seed=7, max_offerings=300 if smoke else 800,
         market_seed=7, interrupt_seed=7,
+        faults=tuple(faults),
     )
 
 
@@ -80,6 +102,10 @@ def main():
                     choices=("diurnal", "bursty", "flash"),
                     help="run the serving co-simulation on this request-"
                          "trace family instead of the interrupt storm")
+    ap.add_argument("--faults", default=None, metavar="STORM[:SCALE]",
+                    help="overlay a named fault storm (feed, ice, solver, "
+                         "combined; DESIGN.md §16) — try with "
+                         "--policy hardened")
     args = ap.parse_args()
 
     make_policy(args.policy)   # validate the spec before building anything
@@ -90,9 +116,13 @@ def main():
         run_serving_workload(args.workload, policy, args.smoke)
         return
 
-    scenario = build_scenario(args.smoke, policy=args.policy)
+    faults = parse_faults(args.faults, args.smoke) if args.faults else ()
+    scenario = build_scenario(args.smoke, policy=args.policy,
+                              faults=faults)
     print(f"scenario {scenario.name!r}: {scenario.duration_hours:.0f}h, "
-          f"policy={scenario.policy}, interrupts={scenario.interrupt_model}")
+          f"policy={scenario.policy}, interrupts={scenario.interrupt_model}"
+          + (f", faults={args.faults} ({len(faults)} windows)"
+             if faults else ""))
 
     # 1. live run, recorded
     res = ClusterSim(scenario).run()
@@ -101,6 +131,15 @@ def main():
           f"{res.interrupted_nodes} nodes interrupted, "
           f"${res.total_cost:.2f} total -> {args.trace} "
           f"({len(res.records)} records)")
+    if faults:
+        avail = [decision_available(d) for _, d in res.decisions]
+        rungs = {k[len("chaos_"):]: v for k, v in res.cache_stats.items()
+                 if k.startswith("chaos_")}
+        print(f"chaos:  decision availability "
+              f"{sum(avail)}/{len(avail)} "
+              f"({sum(avail) / max(len(avail), 1):.0%}); ladder rungs "
+              + (str(rungs) if rungs
+                 else "n/a (unhardened policy — no ladder)"))
 
     # 2. replay from the JSONL trace — no RNG, identical decisions
     rep = ClusterSim.replay(load_trace(args.trace)).run()

@@ -1,5 +1,6 @@
 """KubePACS control plane: the paper's contribution as a composable library."""
 
+from . import events_log
 from .market import (Offering, InterruptEvent, SpotMarketSimulator,
                      generate_catalog, restrict, snapshot_with,
                      pressure_interrupt_probability,
@@ -42,5 +43,5 @@ __all__ = [
     "SolveBatch", "PendingDecision",
     "SolverBackend", "NumpyBackend", "JaxBackend", "get_backend",
     "set_backend", "make_backend", "jax_available",
-    "CoarseningConfig", "DEFAULT_COARSENING",
+    "CoarseningConfig", "DEFAULT_COARSENING", "events_log",
 ]

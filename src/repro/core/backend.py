@@ -57,10 +57,11 @@ import collections
 import dataclasses
 import math
 import os
-import warnings
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
+
+from . import events_log
 
 #: one (bpods, costs, target) residual covering problem; ``bpods`` int64
 #: (all >= 1), ``costs`` float64 (may contain +inf), ``target`` >= 1
@@ -237,20 +238,17 @@ def _bucket(n: int, steps: Sequence[int]) -> int:
     return ((n + step - 1) // step) * step
 
 
-_X64_WARNED = False
-
-
 def _ensure_x64(jax) -> None:
     """Backend-init x64 check: the float64 kernel contract (module
     docstring) requires ``jax_enable_x64``.  Enabling it is *process-wide*
     — a global-config mutation co-resident JAX code in the embedding
     application may not expect (float32 default semantics change, programs
     compiled before the flip retrace) — so the flip is announced with a
-    one-time ``RuntimeWarning``, and ``KUBEPACS_JAX_X64=0`` forbids it
-    outright: the embedder must then enable x64 itself before constructing
-    a jax backend, and construction fails loudly rather than silently
-    running the solver outside its float64 contract."""
-    global _X64_WARNED
+    one-time ``RuntimeWarning`` (counted in ``repro.core.events_log``),
+    and ``KUBEPACS_JAX_X64=0`` forbids it outright: the embedder must then
+    enable x64 itself before constructing a jax backend, and construction
+    fails loudly rather than silently running the solver outside its
+    float64 contract."""
     if jax.config.jax_enable_x64:
         return
     if os.environ.get("KUBEPACS_JAX_X64", "1").lower() in ("0", "false",
@@ -260,13 +258,12 @@ def _ensure_x64(jax) -> None:
             "KUBEPACS_JAX_X64=0 forbids enabling it process-wide; run "
             "jax.config.update('jax_enable_x64', True) in the embedding "
             "application before constructing a jax backend")
-    if not _X64_WARNED:
-        warnings.warn(
-            "KubePACS jax backend is enabling jax_enable_x64 process-wide "
-            "(the solver's float64 bit-identity contract); set "
-            "KUBEPACS_JAX_X64=0 to forbid this and manage the flag in the "
-            "embedding application instead", RuntimeWarning, stacklevel=3)
-        _X64_WARNED = True
+    events_log.warn_once(
+        "backend_x64_flip",
+        "KubePACS jax backend is enabling jax_enable_x64 process-wide "
+        "(the solver's float64 bit-identity contract); set "
+        "KUBEPACS_JAX_X64=0 to forbid this and manage the flag in the "
+        "embedding application instead", RuntimeWarning, stacklevel=3)
     jax.config.update("jax_enable_x64", True)
 
 
@@ -551,7 +548,6 @@ class FusedJaxBackend(JaxBackend):
         self.verify_solves = 0
         self._selfcheck_ok: Optional[bool] = None
         self._pallas_checked: Optional[bool] = None
-        self._record_warned = False
 
     # -- device market cache -------------------------------------------------
     def _device_market(self, market, N: int, B: int):
@@ -694,7 +690,8 @@ class FusedJaxBackend(JaxBackend):
             try:
                 self._pallas_checked = self._run_pallas_check(interpret)
             except Exception as exc:  # pragma: no cover - lowering-specific
-                warnings.warn(
+                events_log.warn_once(
+                    "backend_pallas_disabled",
                     "pallas cover-DP kernel disabled (self-check raised "
                     f"{exc!r}); fused programs use the lax.scan path",
                     RuntimeWarning)
@@ -713,7 +710,8 @@ class FusedJaxBackend(JaxBackend):
         ok = (np.asarray(dp_d).tobytes() == dp_h.tobytes()
               and np.array_equal(np.asarray(bits_d), bits_h))
         if not ok:   # pragma: no cover - depends on lowering
-            warnings.warn(
+            events_log.warn_once(
+                "backend_pallas_disabled",
                 "pallas cover-DP kernel disabled: device dp/bits do not "
                 "match the host reference on this backend (parallel grid "
                 "execution?); fused programs use the lax.scan path",
@@ -1244,7 +1242,8 @@ class FusedJaxBackend(JaxBackend):
             try:
                 self._selfcheck_ok = self._run_selfcheck()
             except Exception as exc:   # pragma: no cover - defensive
-                warnings.warn(
+                events_log.warn_once(
+                    "backend_fused_disabled",
                     "fused jax decision plane disabled (self-check raised "
                     f"{exc!r}); falling back to per-round dispatch",
                     RuntimeWarning)
@@ -1282,7 +1281,8 @@ class FusedJaxBackend(JaxBackend):
               and np.asarray(thr_d).tobytes() == thr_h.tobytes()
               and np.asarray(w_d).tobytes() == w_h.tobytes())
         if not ok:   # pragma: no cover - depends on XLA build
-            warnings.warn(
+            events_log.warn_once(
+                "backend_fused_disabled",
                 "fused jax decision plane disabled: device float products "
                 "do not match host rounding on this XLA build; falling "
                 "back to per-round dispatch", RuntimeWarning)
@@ -1317,11 +1317,10 @@ class FusedJaxBackend(JaxBackend):
             self._selfcheck_ok = False
             return None
         except Exception as exc:
-            if not self._record_warned:
-                warnings.warn(
-                    f"fused GSS device path failed ({exc!r}); falling back "
-                    "to per-round dispatch", RuntimeWarning)
-                self._record_warned = True
+            events_log.warn_once(
+                "backend_fused_record_fallback",
+                f"fused GSS device path failed ({exc!r}); falling back "
+                "to per-round dispatch", RuntimeWarning)
             return None
         self.fused_records += 1
         return rec
@@ -1390,7 +1389,8 @@ class _FusedGssRecord:
             backend=be._host_fallback,
             coarsening=self._coarsening)[0][0]
         if ref != self.prescan[d][g]:
-            warnings.warn(
+            events_log.warn_once(
+                "backend_fused_prescan_mismatch",
                 "fused jax decision plane disabled: device prescan counts "
                 f"diverged from the host engine (decision {d}, alpha "
                 f"{float(grid[g])!r}); falling back to per-round dispatch",
@@ -1453,7 +1453,6 @@ class _FusedGssRecord:
 # ---------------------------------------------------------------------------
 
 _DEFAULT: Optional[SolverBackend] = None
-_WARNED = False
 
 
 def jax_available() -> bool:
@@ -1467,9 +1466,9 @@ def jax_available() -> bool:
 def make_backend(spec: str) -> SolverBackend:
     """Build a backend from a spec string: ``numpy`` | ``jax`` |
     ``jax:pallas`` | ``jax:fused`` | ``jax:fused:pallas``.  A jax spec
-    without jax installed warns once and returns the numpy backend (the
-    solver path treats jax as optional)."""
-    global _WARNED
+    without jax installed warns once (counted in
+    ``repro.core.events_log``) and returns the numpy backend (the solver
+    path treats jax as optional)."""
     if spec == "numpy":
         return NumpyBackend()
     if spec in ("jax", "jax:pallas", "jax:fused", "jax:fused:pallas"):
@@ -1478,13 +1477,12 @@ def make_backend(spec: str) -> SolverBackend:
                 return FusedJaxBackend(pallas=spec.endswith(":pallas"))
             return JaxBackend(pallas=spec.endswith(":pallas"))
         except ImportError:
-            if not _WARNED:
-                warnings.warn(
-                    "KubePACS solver backend %r requested but jax is not "
-                    "installed; falling back to the NumPy backend (install "
-                    "jax, or set KUBEPACS_SOLVER_BACKEND=numpy to silence "
-                    "this)" % spec, RuntimeWarning, stacklevel=2)
-                _WARNED = True
+            events_log.warn_once(
+                "backend_numpy_fallback",
+                "KubePACS solver backend %r requested but jax is not "
+                "installed; falling back to the NumPy backend (install "
+                "jax, or set KUBEPACS_SOLVER_BACKEND=numpy to silence "
+                "this)" % spec, RuntimeWarning, stacklevel=2)
             return NumpyBackend()
     raise ValueError(f"unknown solver backend spec {spec!r} "
                      "(expected numpy | jax | jax:pallas | jax:fused | "

@@ -287,9 +287,15 @@ class KubePACSProvisioner:
     def __init__(self, tolerance: float = 0.01, ttl_hours: float = 2.0,
                  guarded_gss: bool = True,
                  timer: Callable[[], float] = time.perf_counter,
-                 coarsening: Optional[CoarseningConfig] = None):
+                 coarsening: Optional[CoarseningConfig] = None,
+                 backend: Optional[SolverBackend] = None):
         self.tolerance = tolerance
         self.guarded_gss = guarded_gss   # bracketed prescan (DESIGN.md §7)
+        # pinned solver backend for inline solves (None = the process
+        # default).  The chaos degradation ladder (DESIGN.md §16) uses
+        # this to run per-rung provisioners; the batch path keeps the
+        # process backend (batching is fleet-engine-owned).
+        self.backend = backend
         # demand-coarsening policy threaded into every solve (None = the
         # process-wide DEFAULT_COARSENING, inert at the paper's scales)
         self.coarsening = coarsening
@@ -376,6 +382,7 @@ class KubePACSProvisioner:
         search = bracketed_gss if self.guarded_gss else golden_section_search
         pool, trace = search(items, request.pods, tolerance=self.tolerance,
                              market=market, exclude=exclude, timer=self.timer,
+                             backend=self.backend,
                              coarsening=self.coarsening)
         return self._finalize(request, excluded, pool, trace, t0, mkey)
 

@@ -155,6 +155,10 @@ class CalibrationObserver:
     def observe_fulfillment(self, time, requested, grants):
         self.estimators.on_fulfillment(time, requested, grants)
 
+    def observe_pool(self, time, pool, reason):
+        """Formal observer protocol (DESIGN.md §9): calibration scores
+        interrupt forecasts, not capacity timelines — nothing to do."""
+
     def report(self) -> Dict:
         n = len(self.brier_terms)
         return {

@@ -37,15 +37,17 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from ..core.efficiency import NodePool, Request
+from ..chaos.faults import ChaosController
+from ..core import events_log
+from ..core.efficiency import NodePool, Request, decision_metrics
 from ..core.ilp import compile_market
 from ..core.market import (InterruptEvent, Offering, SpotMarketSimulator,
                            snapshot_with)
 from ..core.provisioner import (ProvisioningDecision, merge_pools, preprocess)
 from .events import (InterruptNotice, catalog_digest, decision_record,
-                     demand_record, fulfillment_record, header_record,
-                     interrupts_record, market_state_record, probe_record,
-                     shock_record, summary_record, tick_record,
+                     demand_record, fault_record, fulfillment_record,
+                     header_record, interrupts_record, market_state_record,
+                     probe_record, shock_record, summary_record, tick_record,
                      TRACE_VERSION)
 from .interrupts import InterruptModel, make_interrupt_model
 from .policy import make_policy
@@ -297,6 +299,52 @@ def shared_precompile(cache: Dict, stats: Dict[str, int], state_idx: int,
     return cache[key]
 
 
+def billable_pool(chaos: Optional[ChaosController],
+                  snap_index: Dict[str, Offering],
+                  pool: NodePool) -> NodePool:
+    """Map a decision's pool (solved over the *observed* snapshot) onto
+    TRUE market rows for billing/capacity accounting: feed corruption can
+    change what the controller believes, never what the market charges —
+    which is exactly how trusting a corrupted feed costs real money
+    (DESIGN.md §16).  ``Pod_i``/``BS_i`` derive from static offering
+    fields, so only offering/spot/t3 swap.  Identity when no chaos is
+    configured, keeping healthy runs byte-identical — and one definition
+    shared by ClusterSim and FleetSim (the fleet ≡ standalone contract)."""
+    if chaos is None or not pool.items:
+        return pool
+    items = []
+    for it in pool.items:
+        o = snap_index[it.offering.offering_id]
+        items.append(dataclasses.replace(it, offering=o,
+                                         spot_price=o.spot_price, t3=o.t3))
+    return NodePool(items=items, counts=list(pool.counts),
+                    alpha=pool.alpha, request=pool.request)
+
+
+def failed_decision(request: Request) -> ProvisioningDecision:
+    """The record of a decision cycle the control plane could not run
+    (solver fault, unhardened policy): an empty pool with
+    ``decision_failed`` stamped — deterministic, so it traces and replays
+    like any other decision.  Shared by both engines."""
+    pool = NodePool(items=[], counts=[], request=request)
+    metrics = decision_metrics(pool, request.pods)
+    metrics["decision_failed"] = 1.0
+    return ProvisioningDecision(pool=pool, trace=None, alpha=None,
+                                wall_seconds=0.0, excluded_offerings=set(),
+                                metrics=metrics)
+
+
+def solver_down(chaos: Optional[ChaosController], policy,
+                now: float) -> bool:
+    """An active solver fault takes out *unhardened* decision cycles
+    entirely — they have no retry/ladder machinery to ride it out.
+    Hardened policies (``chaos_hardened``) still get called and absorb
+    the fault themselves (DESIGN.md §16)."""
+    return (chaos is not None
+            and not getattr(policy, "chaos_hardened", False)
+            and chaos.solver_faulted(now) is not None)
+
+
 def _apply_losses(pool: NodePool, notices: Sequence[InterruptNotice],
                   ) -> Tuple[NodePool, int, int, float]:
     """Remove interrupted nodes; lost pods use each item's actual Pod_i
@@ -404,7 +452,16 @@ class ClusterSim:
         # observers (e.g. the backtest's calibration probe) — each owns its
         # own state, so fan-out order is not decision-relevant
         self.policy.bind(self.catalog)
+        # chaos controller (DESIGN.md §16): derived purely from the
+        # scenario spec + catalog, so live/replay/fleet all rebuild the
+        # identical fault view.  None when the scenario declares no faults
+        # — every chaos branch below is then skipped, keeping healthy runs
+        # byte-identical to the pre-chaos engine.
+        self.chaos = (ChaosController(scenario.faults, self.catalog)
+                      if scenario.faults else None)
+        self.policy.bind_chaos(self.chaos)
         self._observers = [self.policy, *observers]
+        self._events_snap = events_log.snapshot()
         self.recorder = recorder or TraceRecorder()
         self.recorder.write(header_record(scenario.to_dict(),
                                           len(self.catalog),
@@ -509,24 +566,50 @@ class ClusterSim:
         self._cost_accrued_to = now
 
     def _refresh(self) -> None:
+        """TRUE/OBSERVED split (DESIGN.md §16): the trace records the TRUE
+        market state (so the header + records replay regardless of faults);
+        the chaos controller then derives the *observed* view the policy
+        decides on.  ``_snap_index`` stays TRUE — interrupt hazards and
+        billing live in reality even when the feed lies."""
         spot, t3 = self.source.state()
         self._record(market_state_record(self.time, spot, t3))
-        self._snapshot = snapshot_with(self.catalog, spot, t3)
-        self._snap_index = {o.offering_id: o for o in self._snapshot}
         self._state_idx += 1
+        if self.chaos is not None:
+            spot_obs, t3_obs, transitions = self.chaos.observe(
+                self._state_idx, self.time, spot, t3)
+            for kind, phase, idx in transitions:
+                self._record(fault_record(self.time, kind, phase, idx))
+            self._true_snapshot = snapshot_with(self.catalog, spot, t3)
+            self._snapshot = (self._true_snapshot
+                              if spot_obs is spot and t3_obs is t3
+                              else snapshot_with(self.catalog, spot_obs,
+                                                 t3_obs))
+        else:
+            spot_obs, t3_obs = spot, t3
+            self._snapshot = snapshot_with(self.catalog, spot, t3)
+            self._true_snapshot = self._snapshot
+        self._snap_index = {o.offering_id: o for o in self._true_snapshot}
         for obs in self._observers:
-            obs.observe_market(self.time, spot, t3)
+            obs.observe_market(self.time, spot_obs, t3_obs)
 
     def _notify_pool(self, reason: str) -> None:
         """Pool-change fan-out: fired whenever ``self.pool`` changes (a
         launch, or interruption losses with no re-provision decision).
-        getattr-guarded so observers predating the hook keep working —
-        serving co-sim timelines integrate capacity between exactly these
-        events (DESIGN.md §15)."""
+        ``observe_pool`` is part of the formal observer protocol (no-op on
+        the :class:`~repro.sim.policy.Policy` base) — serving co-sim
+        timelines integrate capacity between exactly these events
+        (DESIGN.md §15)."""
         for obs in self._observers:
-            hook = getattr(obs, "observe_pool", None)
-            if hook is not None:
-                hook(self.time, self.pool, reason)
+            obs.observe_pool(self.time, self.pool, reason)
+
+    def _solver_down(self) -> bool:
+        return solver_down(self.chaos, self.policy, self.time)
+
+    def _provision(self, request: Request) -> ProvisioningDecision:
+        if self._solver_down():
+            return failed_decision(request)
+        return self.policy.provision(request, self._snapshot, self.time,
+                                     precompiled=self._precompiled(request))
 
     def _precompiled(self, request: Request):
         """Shared-compile hook: replicas keyed on (market state, request
@@ -539,10 +622,24 @@ class ClusterSim:
     def _launch(self, decision: ProvisioningDecision, reason: str,
                 base_pool: Optional[NodePool] = None) -> None:
         """Apply a decision: optional fulfillment clip, trace record, merge."""
-        new_pool = decision.pool
-        if self.scenario.apply_fulfillment and new_pool.total_nodes:
+        new_pool = billable_pool(self.chaos, self._snap_index,
+                                 decision.pool)
+        # ICE-style partial fulfillment (DESIGN.md §16): active ice faults
+        # cap per-offering grants as a pure function of the REQUESTED
+        # counts, so replay re-deriving the caps and re-clipping recorded
+        # grants is the identity
+        caps = (self.chaos.ice_caps(self.time, new_pool.as_dict())
+                if self.chaos is not None and new_pool.total_nodes else None)
+        if new_pool.total_nodes and (self.scenario.apply_fulfillment
+                                     or caps is not None):
             requested = new_pool.as_dict()
-            grants = self.source.fulfill_pool(requested, self.time)
+            if self.scenario.apply_fulfillment:
+                grants = self.source.fulfill_pool(requested, self.time)
+            else:
+                grants = dict(requested)
+            if caps is not None:
+                grants = {oid: min(g, caps.get(oid, g))
+                          for oid, g in grants.items()}
             self._record(fulfillment_record(self.time, grants))
             for obs in self._observers:
                 obs.observe_fulfillment(self.time, requested, grants)
@@ -615,10 +712,17 @@ class ClusterSim:
         decision, shortfall = None, 0
         if effective:
             shortfall = max(0, self.request.pods - survivors.total_pods)
-            decision = self.policy.on_interrupts(
-                effective, self.request, self._snapshot,
-                survivors.total_pods, t,
-                precompiled=self._precompiled(self.request))
+            if self._solver_down():
+                # the unhardened reactive loop is down with the solver:
+                # exclusions don't update and the shortfall goes unfilled
+                decision = (failed_decision(dataclasses.replace(
+                    self.request, pods=shortfall)) if shortfall > 0
+                    else None)
+            else:
+                decision = self.policy.on_interrupts(
+                    effective, self.request, self._snapshot,
+                    survivors.total_pods, t,
+                    precompiled=self._precompiled(self.request))
             self.pool = survivors
             if decision is not None:
                 # recorded even when the replacement pool is empty
@@ -658,10 +762,7 @@ class ClusterSim:
             return
         repl_request = (dataclasses.replace(self.request, pods=shortfall)
                         if self.pool.total_nodes else self.request)
-        decision = self.policy.provision(repl_request, self._snapshot,
-                                         self.time,
-                                         precompiled=self._precompiled(
-                                             repl_request))
+        decision = self._provision(repl_request)
         self._launch(decision, "demand",
                      base_pool=self.pool if self.pool.total_nodes else None)
 
@@ -672,10 +773,7 @@ class ClusterSim:
                 self.request, pods=self.scenario.effective_pods(
                     self.scenario.interrupt_seed, 0.0, self.scenario.pods))
         self._refresh()
-        decision = self.policy.provision(self.request, self._snapshot,
-                                         self.time,
-                                         precompiled=self._precompiled(
-                                             self.request))
+        decision = self._provision(self.request)
         self._launch(decision, "initial")
 
     def run(self) -> SimResult:
@@ -707,7 +805,21 @@ class ClusterSim:
                          interrupted_nodes=self.interrupted_nodes,
                          pool=self.pool, recorder=self.recorder,
                          total_perf_hours=self.total_perf_hours,
-                         cache_stats=dict(self.cache_stats))
+                         cache_stats=self._final_stats())
+
+    def _final_stats(self) -> Dict[str, int]:
+        """cache_stats + the run's one-time-warning counter deltas
+        (``event_*``, repro.core.events_log) + the hardened policy's
+        degradation-ladder counters (``chaos_*``).  Diagnostic only —
+        never part of decisions, records, or metrics (DESIGN.md §16)."""
+        stats = dict(self.cache_stats)
+        for k, v in events_log.delta_since(self._events_snap).items():
+            stats[f"event_{k}"] = stats.get(f"event_{k}", 0) + v
+        chaos_stats = getattr(self.policy, "chaos_stats", None)
+        if chaos_stats is not None:
+            for k, v in chaos_stats().items():
+                stats[f"chaos_{k}"] = v
+        return stats
 
     # -- incremental event-stream API (elastic trainer) --------------------
     def current_snapshot(self) -> List[Offering]:

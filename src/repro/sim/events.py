@@ -16,6 +16,9 @@ Record types (``TRACE_VERSION = 1``):
 ``demand``      the demand schedule changed the requested pod count
 ``interrupts``  the interrupt notices sampled this tick (possibly empty),
                 including fault-injected and rebalance-advisory notices
+``fault``       a chaos fault window opened or closed (DESIGN.md §16) —
+                diagnostic only; replay re-derives fault effects from the
+                scenario spec, never from these records
 ``fulfillment`` per-offering granted node counts for a decision's pool
 ``probe``       a one-off fulfillment probe (Fig. 9 driver)
 ``decision``    a provisioning decision (pool, α*, metrics — wall time is
@@ -127,6 +130,16 @@ def interrupts_record(time: float,
                       notices: Sequence[InterruptNotice]) -> Dict:
     return {"type": "interrupts", "time": time,
             "notices": [n.to_record() for n in notices]}
+
+
+def fault_record(time: float, kind: str, phase: str,
+                 fault_index: int) -> Dict:
+    """A fault window transition ("begin"/"end").  The scenario spec in
+    the header already fully determines every fault effect (the chaos
+    controller is a pure function of spec + market state), so these lines
+    are human-readable provenance, not replay inputs."""
+    return {"type": "fault", "time": time, "kind": kind, "phase": phase,
+            "fault_index": int(fault_index)}
 
 
 def fulfillment_record(time: float, grants: Dict[str, int]) -> Dict:

@@ -61,6 +61,8 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from ..chaos.faults import ChaosController
+from ..core import events_log
 from ..core.backend import SolverBackend, make_backend
 from ..core.efficiency import NodePool, Request
 from ..core.market import Offering, pressure_interrupt_probability_batch
@@ -69,12 +71,13 @@ from ..core.provisioner import (DecisionMemo, PendingDecision, SolveBatch,
                                 merge_pools)
 from .engine import (SimResult, SimRound, _EPS, _INITIAL, _apply_losses,
                      _schedule, _split_pending, accrual_increments,
-                     script_market_states, shared_precompile, shock_affected,
+                     billable_pool, failed_decision, script_market_states,
+                     shared_precompile, shock_affected, solver_down,
                      useful_scale)
 from .events import (InterruptNotice, catalog_digest, decision_record,
-                     demand_record, header_record, interrupts_record,
-                     market_state_record, shock_record, summary_record,
-                     tick_record)
+                     demand_record, fault_record, fulfillment_record,
+                     header_record, interrupts_record, market_state_record,
+                     shock_record, summary_record, tick_record)
 from .interrupts import (InterruptModel, NullInterruptModel,
                          PressureInterruptModel, PriceCrossingInterruptModel,
                          RebalanceRecommendationModel, make_interrupt_model)
@@ -173,6 +176,13 @@ class FleetSim:
         self._snap_index: Dict[str, Offering] = {}
         self._ran = False
 
+        # one shared chaos controller (DESIGN.md §16): every replica sees
+        # the identical market path, so the observed-feed transformation is
+        # fleet-wide — exactly what each standalone run would derive
+        self.chaos = (ChaosController(scenario.faults, self.catalog)
+                      if scenario.faults else None)
+        self._events_snap = events_log.snapshot()
+
         digest = catalog_digest(self.catalog)
         policy_kwargs = {} if clock is None else {"clock": clock}
         self.replicas: List[_Replica] = []
@@ -182,6 +192,7 @@ class FleetSim:
                                  ttl_hours=scenario.ttl_hours,
                                  **policy_kwargs)
             policy.bind(self.catalog)
+            policy.bind_chaos(self.chaos)
             policy.set_decision_memo(self.memo)
             if self.solve_batch is not None:
                 policy.set_solve_batch(self.solve_batch)
@@ -218,16 +229,34 @@ class FleetSim:
         spot, t3 = self.states[self._state_pos]
         self._state_pos += 1
         self._state_idx += 1
+        # TRUE state: hazards (_spot/_t3/_snap_index) and billing stay in
+        # reality; the policy decides on the chaos-observed snapshot
+        # (DESIGN.md §16) — mirroring ClusterSim._refresh exactly
         self._spot, self._t3 = spot, t3
-        self._snapshot = snapshot_with(self.catalog, spot, t3)
-        self._snap_index = {o.offering_id: o for o in self._snapshot}
-        rec = (market_state_record(self.time, spot, t3)
-               if self.record_traces else None)
+        recs = ([market_state_record(self.time, spot, t3)]
+                if self.record_traces else None)
+        if self.chaos is not None:
+            spot_obs, t3_obs, transitions = self.chaos.observe(
+                self._state_idx, self.time, spot, t3)
+            if recs is not None:
+                recs.extend(fault_record(self.time, kind, phase, idx)
+                            for kind, phase, idx in transitions)
+            self._true_snapshot = snapshot_with(self.catalog, spot, t3)
+            self._snapshot = (self._true_snapshot
+                              if spot_obs is spot and t3_obs is t3
+                              else snapshot_with(self.catalog, spot_obs,
+                                                 t3_obs))
+        else:
+            spot_obs, t3_obs = spot, t3
+            self._snapshot = snapshot_with(self.catalog, spot, t3)
+            self._true_snapshot = self._snapshot
+        self._snap_index = {o.offering_id: o for o in self._true_snapshot}
         for rep in self.replicas:
-            if rec is not None:
-                rep.recorder.write(rec)
+            if recs is not None:
+                for rec in recs:
+                    rep.recorder.write(rec)
             for obs in rep.observers:
-                obs.observe_market(self.time, spot, t3)
+                obs.observe_market(self.time, spot_obs, t3_obs)
 
     def _precompiled(self, request: Request):
         return shared_precompile(self.compile_cache, self.cache_stats,
@@ -274,17 +303,49 @@ class FleetSim:
         rep.total_perf_hours += perf
         rep.cost_accrued_to = now
 
+    def _notify_pool(self, rep: _Replica, reason: str) -> None:
+        """Formal observer-protocol pool fan-out, mirroring
+        ``ClusterSim._notify_pool`` (fleet ≡ standalone event streams)."""
+        for obs in rep.observers:
+            obs.observe_pool(self.time, rep.pool, reason)
+
     def _launch(self, rep: _Replica, decision, reason: str,
                 base_pool: Optional[NodePool] = None) -> None:
+        new_pool = billable_pool(self.chaos, self._snap_index,
+                                 decision.pool)
+        # ICE clip: pure function of the REQUESTED counts, identical to
+        # ClusterSim._launch's chaos branch (apply_fulfillment scenarios
+        # are rejected at construction, so grants start at requested)
+        caps = (self.chaos.ice_caps(self.time, new_pool.as_dict())
+                if self.chaos is not None and new_pool.total_nodes
+                else None)
+        if caps is not None:
+            requested = new_pool.as_dict()
+            grants = {oid: min(g, caps.get(oid, g))
+                      for oid, g in requested.items()}
+            if rep.recorder is not None:
+                rep.recorder.write(fulfillment_record(self.time, grants))
+            for obs in rep.observers:
+                obs.observe_fulfillment(self.time, requested, grants)
+            items, counts = [], []
+            for it, c in zip(new_pool.items, new_pool.counts):
+                g = min(c, grants.get(it.offering.offering_id, 0))
+                if g > 0:
+                    items.append(it)
+                    counts.append(g)
+            new_pool = NodePool(items=items, counts=counts,
+                                alpha=new_pool.alpha,
+                                request=new_pool.request)
         if rep.recorder is not None:
             rep.recorder.write(decision_record(
                 self.time, reason, rep.policy.name,
                 decision.pool.as_dict(), decision.alpha, decision.metrics))
         rep.decisions.append((reason, decision))
         if base_pool is not None and base_pool.total_nodes:
-            self._set_pool(rep, merge_pools(base_pool, decision.pool))
+            self._set_pool(rep, merge_pools(base_pool, new_pool))
         else:
-            self._set_pool(rep, decision.pool)
+            self._set_pool(rep, new_pool)
+        self._notify_pool(rep, reason)
 
     # -- events (each: collect decisions → execute batch → launch) ----------
     def _on_initial(self) -> None:
@@ -295,6 +356,9 @@ class FleetSim:
                 rep.request = dataclasses.replace(
                     rep.request, pods=self.scenario.effective_pods(
                         rep.seed, 0.0, self.scenario.pods))
+            if solver_down(self.chaos, rep.policy, self.time):
+                staged.append((rep, failed_decision(rep.request)))
+                continue
             pre = self._precompiled(rep.request)
             decision = self._decide(
                 rep, lambda rep=rep, pre=pre: rep.policy.provision(
@@ -327,6 +391,9 @@ class FleetSim:
                 continue
             repl_request = (dataclasses.replace(rep.request, pods=shortfall)
                             if rep.pool.total_nodes else rep.request)
+            if solver_down(self.chaos, rep.policy, self.time):
+                staged.append((rep, failed_decision(repl_request)))
+                continue
             pre = self._precompiled(repl_request)
             decision = self._decide(
                 rep, lambda rep=rep, req=repl_request, pre=pre:
@@ -371,12 +438,17 @@ class FleetSim:
             decision, shortfall = None, 0
             if effective:
                 shortfall = max(0, rep.request.pods - survivors.total_pods)
-                pre = self._precompiled(rep.request)
-                decision = self._decide(
-                    rep, lambda rep=rep, eff=effective, surv=survivors,
-                    pre=pre: rep.policy.on_interrupts(
-                        eff, rep.request, self._snapshot,
-                        surv.total_pods, t, precompiled=pre))
+                if solver_down(self.chaos, rep.policy, t):
+                    decision = (failed_decision(dataclasses.replace(
+                        rep.request, pods=shortfall)) if shortfall > 0
+                        else None)
+                else:
+                    pre = self._precompiled(rep.request)
+                    decision = self._decide(
+                        rep, lambda rep=rep, eff=effective, surv=survivors,
+                        pre=pre: rep.policy.on_interrupts(
+                            eff, rep.request, self._snapshot,
+                            surv.total_pods, t, precompiled=pre))
             staged.append((rep, sampled, effective, survivors, lost_nodes,
                            lost_pods, lost_perf, shortfall, decision))
         self._execute_batch()
@@ -388,6 +460,8 @@ class FleetSim:
                 if decision is not None:
                     self._launch(rep, decision, "interrupt",
                                  base_pool=survivors)
+                else:
+                    self._notify_pool(rep, "losses")
             rep.rounds.append(SimRound(
                 time=t, notices=list(sampled), effective=effective,
                 lost_nodes=lost_nodes, lost_pods=lost_pods,
@@ -489,11 +563,19 @@ class FleetSim:
             else:
                 self._on_tick(t, payload)
         results = []
+        base_stats = self.stats()
+        for k, v in events_log.delta_since(self._events_snap).items():
+            base_stats[f"event_{k}"] = base_stats.get(f"event_{k}", 0) + v
         for rep in self.replicas:
             if rep.recorder is not None:
                 rep.recorder.write(summary_record(
                     self.time, rep.total_cost, rep.interrupted_nodes,
                     len(rep.decisions), rep.pool.as_dict()))
+            stats = dict(base_stats)
+            chaos_stats = getattr(rep.policy, "chaos_stats", None)
+            if chaos_stats is not None:
+                for k, v in chaos_stats().items():
+                    stats[f"chaos_{k}"] = v
             results.append(SimResult(
                 scenario=dataclasses.replace(self.scenario,
                                              interrupt_seed=rep.seed),
@@ -502,7 +584,7 @@ class FleetSim:
                 interrupted_nodes=rep.interrupted_nodes,
                 pool=rep.pool, recorder=rep.recorder or TraceRecorder(),
                 total_perf_hours=rep.total_perf_hours,
-                cache_stats=self.stats()))
+                cache_stats=stats))
         self.wall_seconds = time.perf_counter() - t0
         return results
 

@@ -114,6 +114,13 @@ class Policy:
     def bind(self, catalog: Sequence[Offering]) -> None:
         """Called once by the engine with the static offering universe."""
 
+    def bind_chaos(self, chaos) -> None:
+        """Attach the scenario's :class:`~repro.chaos.faults.ChaosController`
+        (None when the scenario declares no faults).  Base implementation:
+        no-op — unhardened policies decide on whatever (possibly corrupted)
+        snapshot the engine hands them, which is exactly the naive control
+        plane the chaos benchmark measures against (DESIGN.md §16)."""
+
     def observe_market(self, time: float, spot: np.ndarray,
                        t3: np.ndarray) -> None:
         """A market refresh (tick or shock) produced live (spot, t3)."""
@@ -500,6 +507,11 @@ def make_policy(spec: str, tolerance: float = 0.01,
         return ServingSLOPolicy(risk_horizon=risk_horizon,
                                 tolerance=tolerance, ttl_hours=ttl_hours,
                                 clock=clock)
+    if spec == "hardened":
+        # lazy: repro.chaos.guard imports this module (the Policy base)
+        from ..chaos.guard import HardenedPolicy
+        return HardenedPolicy(tolerance=tolerance, ttl_hours=ttl_hours,
+                              clock=clock)
     if spec == "karpenter_like":
         return KarpenterLikePolicy(ttl_hours=ttl_hours, clock=clock)
     if spec.startswith("fixed_alpha:"):

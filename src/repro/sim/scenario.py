@@ -16,6 +16,7 @@ from typing import List, Tuple
 
 import numpy as np
 
+from ..chaos.faults import Fault
 from ..core.efficiency import Request
 from ..core.market import Offering, generate_catalog
 
@@ -84,6 +85,10 @@ class Scenario:
     #                                     largest allocation deterministically
     demand_jitter: float = 0.0          # per-replica demand jitter amplitude
     #                                     (fraction; see effective_pods)
+    # -- chaos (DESIGN.md §16) --------------------------------------------
+    faults: Tuple[Fault, ...] = ()      # deterministic fault windows; part
+    #                                     of the spec, so the trace header
+    #                                     alone still replays the run
 
     def __post_init__(self):
         # normalize order-insensitive and numeric fields so construction
@@ -136,6 +141,7 @@ class Scenario:
         d["workload"] = sorted(self.workload)
         d["demand_schedule"] = [list(x) for x in self.demand_schedule]
         d["shocks"] = [dataclasses.asdict(s) for s in self.shocks]
+        d["faults"] = [dataclasses.asdict(f) for f in self.faults]
         return d
 
     @classmethod
@@ -145,6 +151,7 @@ class Scenario:
         d["demand_schedule"] = tuple(
             tuple(x) for x in d.get("demand_schedule", ()))
         d["shocks"] = tuple(Shock(**s) for s in d.get("shocks", ()))
+        d["faults"] = tuple(Fault(**f) for f in d.get("faults", ()))
         return cls(**d)   # __post_init__ normalizes numerics/order
 
 

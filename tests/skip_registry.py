@@ -1,7 +1,7 @@
 """The tier-1 suite's *registered* skips — the only ones allowed.
 
 Every remaining skip in the suite is an optional-dependency gate, not a
-disabled test: the four hypothesis properties have seeded deterministic
+disabled test: the five hypothesis properties have seeded deterministic
 twins that always run (``*_deterministic``), and the two PuLP
 cross-checks are redundant with the brute-force/reference cross-checks —
 they only add the independent-CBC angle when ``pulp`` is installed (CI
@@ -28,6 +28,8 @@ REGISTERED_SKIPS = {
     "tests/test_solver_engine.py::test_engine_matches_pulp":
         ("could not import 'pulp'",),
     "tests/test_gss_efficiency.py::test_e_metrics_invariants":
+        ("hypothesis not installed",),
+    "tests/test_chaos.py::test_backoff_schedule_property":
         ("hypothesis not installed",),
     "tests/test_kernels.py::test_flash_ref_property":
         ("hypothesis not installed",),

@@ -280,14 +280,18 @@ def test_backend_falls_back_to_numpy_with_warning(monkeypatch):
             raise ImportError("no jax in this environment")
         return real_import(name, *args, **kwargs)
 
+    from repro.core import events_log
     monkeypatch.setattr(builtins, "__import__", no_jax)
-    monkeypatch.setattr(backend_mod, "_WARNED", False)
+    events_log.reset()                        # drop the warn-once latch
     with pytest.warns(RuntimeWarning, match="falling back"):
         be = backend_mod.make_backend("jax")
     assert isinstance(be, NumpyBackend)
+    assert events_log.counters()["backend_numpy_fallback"] == 1
     with warnings.catch_warnings():
         warnings.simplefilter("error")        # second request: warn once
         assert isinstance(backend_mod.make_backend("jax"), NumpyBackend)
+    # ... but every occurrence is still counted (DESIGN.md §16)
+    assert events_log.counters()["backend_numpy_fallback"] == 2
 
 
 def test_env_selects_default_backend(monkeypatch):

@@ -1,0 +1,260 @@
+"""ChaosPlane: deterministic fault injection + the hardened degradation
+ladder (DESIGN.md §16).
+
+Covers the PR-9 acceptance surface: the determinism contract survives
+fault injection (byte-identical traces, RNG-free replay, fleet ≡
+standalone), the hardening layer is bit-inert when no faults are
+declared, backend rungs agree (descending the ladder is safe), the
+backoff schedule is a pure function of its coordinates, and ICE
+accounting matches hand-computed caps and stays idempotent under
+replay's re-clipping.
+"""
+
+import dataclasses
+import math
+
+import numpy as np
+import pytest
+
+from repro.chaos import ChaosController, Fault, fault_storm
+from repro.chaos.guard import (GuardConfig, HardenedPolicy,
+                               backoff_schedule, decision_available,
+                               quarantine_mask)
+from repro.core.efficiency import NodePool, decision_metrics
+from repro.core.provisioner import ProvisioningDecision
+from repro.sim import ClusterSim, Scenario, run_fleet, run_replicas
+
+from tests._optional import given, settings, st
+from tests.strategies import mk_item
+
+
+def chaos_scenario(storm="combined", policy="hardened", **overrides):
+    """A compact 24 h / 3 h-step storm: the ``fault_storm`` presets at
+    scale 0.5 land every window inside the horizon."""
+    base = dict(name="chaos_test", duration_hours=24.0, step_hours=3.0,
+                pods=60, cpu_per_pod=2, mem_per_pod=2,
+                demand_schedule=((6.0, 110), (12.0, 70), (18.0, 115)),
+                interrupt_model="pressure", policy=policy,
+                catalog_seed=7, max_offerings=80, market_seed=7,
+                interrupt_seed=7,
+                faults=fault_storm(storm, 0.5) if storm else ())
+    base.update(overrides)
+    return Scenario(**base)
+
+
+# ------------------------------------------------- determinism contract ----
+
+@pytest.mark.parametrize("policy", ["kubepacs", "hardened"])
+def test_same_seed_byte_identical_trace_under_faults(policy):
+    sc = chaos_scenario(policy=policy)
+    a = ClusterSim(sc, clock=lambda: 0.0).run()
+    b = ClusterSim(sc, clock=lambda: 0.0).run()
+    assert a.recorder.dumps() == b.recorder.dumps()
+    # the fault plane is part of the trace: activation transitions are
+    # recorded, and begin/end phases pair up per fault index
+    faults = [r for r in a.records if r["type"] == "fault"]
+    assert faults
+    begins = {r["fault_index"] for r in faults if r["phase"] == "begin"}
+    ends = {r["fault_index"] for r in faults if r["phase"] == "end"}
+    assert ends <= begins
+
+
+@pytest.mark.parametrize("policy", ["kubepacs", "hardened"])
+def test_replay_rng_free_under_faults(policy):
+    """Replay consumes recorded market/interrupt/fulfillment records and
+    re-derives the identical trace — fault effects included — with zero
+    RNG (every fault is a pure function of trace coordinates)."""
+    sc = chaos_scenario(policy=policy)
+    live = ClusterSim(sc, clock=lambda: 0.0).run()
+    rep = ClusterSim.replay(live.records).run()
+    assert rep.recorder.dumps() == live.recorder.dumps()
+
+
+@pytest.mark.parametrize("policy", ["kubepacs", "hardened"])
+def test_fleet_matches_standalone_under_faults(policy):
+    sc = chaos_scenario(policy=policy)
+    seeds = [0, 1]
+    fleet = run_fleet(sc, seeds, record_traces=True, clock=lambda: 0.0)
+    per_seed = run_replicas(sc, seeds)
+    for f, s in zip(fleet, per_seed):
+        assert f.recorder.dumps() == s.recorder.dumps()
+
+
+def test_hardened_inert_without_faults():
+    """Selection safety: with no faults declared the hardened policy is
+    byte-identical to plain kubepacs (the healthy path literally
+    delegates — the only trace difference is the policy name in the
+    scenario header)."""
+    h = ClusterSim(chaos_scenario(None, "hardened"),
+                   clock=lambda: 0.0).run()
+    k = ClusterSim(chaos_scenario(None, "kubepacs"),
+                   clock=lambda: 0.0).run()
+    assert h.recorder.dumps().replace(
+        '"policy": "hardened"', '"policy": "kubepacs"') \
+        == k.recorder.dumps()
+    assert not any(key.startswith("chaos_") for key in h.cache_stats)
+
+
+# ------------------------------------------------- solver-fault gating ----
+
+def test_solver_fault_fails_naive_but_not_hardened():
+    """Under an active solver fault the engine fails unhardened policies'
+    decision cycles outright; the hardened ladder absorbs the same fault
+    (injected errors burn attempts, then a later attempt/rung solves)."""
+    naive = ClusterSim(chaos_scenario("solver", "kubepacs"),
+                       clock=lambda: 0.0).run()
+    failed = [d for _, d in naive.decisions
+              if d is not None and d.metrics.get("decision_failed")]
+    assert failed
+    assert all(not decision_available(d) for d in failed)
+
+    hard = ClusterSim(chaos_scenario("solver", "hardened"),
+                      clock=lambda: 0.0).run()
+    assert all(decision_available(d) for _, d in hard.decisions)
+    assert hard.cache_stats.get("chaos_solve_errors", 0) > 0
+
+
+def test_rung_descends_to_equal_decision():
+    """Rung N ≡ rung N+1 when the upper rung is healthy: the DESIGN §12
+    backend bit-identity contract is what makes descending the ladder
+    safe, so a degraded solve must pick the same pool on every rung."""
+    sc = chaos_scenario("feed", "hardened")
+    catalog = sc.build_catalog()
+    chaos = ChaosController(sc.faults, catalog)
+    spot = np.array([o.spot_price for o in catalog], dtype=np.float64)
+    t3 = np.array([o.t3 for o in catalog])
+    chaos.observe(0, 4.5, spot, t3)       # inside the corrupt window
+    assert chaos.snapshot_tainted
+    pools = []
+    for ladder in (("default",), ("numpy",)):
+        hp = HardenedPolicy(clock=lambda: 0.0, ladder=ladder)
+        hp.bind(catalog)
+        hp.bind_chaos(chaos)
+        d = hp.provision(sc.request(), catalog, 4.5)
+        assert isinstance(d, ProvisioningDecision)
+        assert d.metrics["chaos_rung"] == 0.0
+        pools.append(d.pool.as_dict())
+    assert pools[0] == pools[1]
+
+
+# ------------------------------------------------------ backoff ladder ----
+
+def test_backoff_schedule_deterministic_under_injected_clock():
+    a = backoff_schedule(0, 12.0, 6)
+    assert a == backoff_schedule(0, 12.0, 6)
+    assert a[0] == 0.0
+    assert all(0.05 <= d <= 1.0 for d in a[1:])
+    # the schedule is keyed on the *decision time*: a different tick
+    # draws a different (still deterministic) jitter sequence
+    assert a != backoff_schedule(0, 15.0, 6)
+    assert a[:3] == backoff_schedule(0, 12.0, 3)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(0, 2 ** 32 - 1),
+       st.floats(0.0, 1e5, allow_nan=False),
+       st.integers(1, 12))
+def test_backoff_schedule_property(seed, now, attempts):
+    sched = backoff_schedule(seed, now, attempts)
+    assert sched == backoff_schedule(seed, now, attempts)
+    assert len(sched) == attempts
+    assert sched[0] == 0.0
+    assert all(0.05 <= d <= 1.0 for d in sched[1:])
+
+
+def test_backoff_schedule_property_deterministic():
+    """Seeded twin of the hypothesis property above — purity, length,
+    zero first delay, and [base, cap] bounds hold on every draw."""
+    rng = np.random.default_rng(41)
+    for _ in range(40):
+        seed = int(rng.integers(0, 2 ** 32))
+        now = float(rng.uniform(0.0, 1e5))
+        attempts = int(rng.integers(1, 13))
+        sched = backoff_schedule(seed, now, attempts)
+        assert sched == backoff_schedule(seed, now, attempts)
+        assert len(sched) == attempts
+        assert sched[0] == 0.0
+        assert all(0.05 <= d <= 1.0 for d in sched[1:])
+
+
+# ------------------------------------------------------ ICE accounting ----
+
+def test_ice_caps_match_hand_computed_and_are_idempotent():
+    f = Fault(kind="ice", time=6.0, duration=6.0, magnitude=0.7, seed=1)
+    chaos = ChaosController((f,), [])
+    assert chaos.ice_caps(3.0, {"a@az": 10}) is None      # window closed
+    requested = {"a@az": 10, "b@az": 4, "c@az": 0}
+    caps = chaos.ice_caps(6.0, requested)
+    assert caps == {"a@az": math.floor(10 * 0.3),          # 3
+                    "b@az": math.floor(4 * 0.3),           # 1
+                    "c@az": 0}
+    # replay re-derives caps from the same (time, requested) coordinates
+    # and re-clips the recorded grants: min(grants, caps) must be identity
+    grants = {oid: min(c, caps[oid]) for oid, c in requested.items()}
+    assert {oid: min(g, caps[oid]) for oid, g in grants.items()} == grants
+
+
+def test_observe_fulfillment_market_wide_vs_offering_specific():
+    items = [mk_item(0, pods=4, bs=1e4, sp=0.5, t3=5),
+             mk_item(1, pods=4, bs=1e4, sp=0.6, t3=2)]
+    catalog = [it.offering for it in items]
+    f = Fault(kind="ice", time=0.0, duration=6.0, magnitude=0.7, seed=1)
+    hp = HardenedPolicy(clock=lambda: 0.0)
+    hp.bind(catalog)
+    hp.bind_chaos(ChaosController((f,), catalog))
+    a, b = items[0].offering.offering_id, items[1].offering.offering_id
+
+    # every offering short: market-wide pressure — no exclusions, the
+    # grant ratio arms the over-request compensation instead
+    hp.observe_fulfillment(1.0, {a: 10, b: 4}, {a: 3, b: 1})
+    assert hp.provisioner.cache.excluded(1.0) == set()
+    assert hp._grant_ratio == pytest.approx(4 / 14)
+    assert hp.counters["ice_market_wide"] == 1
+
+    # compensation: counts scale by 1/ratio, clipped to each item's T3
+    pool = NodePool(items=items, counts=[3, 1])
+    decision = ProvisioningDecision(
+        pool=pool, trace=None, alpha=None, wall_seconds=0.0,
+        excluded_offerings=set(),
+        metrics=decision_metrics(pool, 40))
+    request = chaos_scenario().request()
+    inflated = hp._inflate(request, decision)
+    assert inflated.pool.counts == [5, 2]      # ceil(3·3.5)→11→T3=5; 4→2
+    assert inflated.metrics["chaos_ice_inflate"] == pytest.approx(3.5)
+    assert hp.counters["ice_inflated"] == 1
+
+    # one offering granted in full: the shortfall is offering-specific —
+    # diversify away from the short one, disarm the compensation
+    hp.observe_fulfillment(2.0, {a: 10, b: 4}, {a: 10, b: 0})
+    assert hp.provisioner.cache.excluded(2.0) == {b}
+    assert hp._grant_ratio == 1.0
+    assert hp.counters["ice_excluded"] == 1
+
+
+# --------------------------------------------------- invariant monitor ----
+
+def test_quarantine_mask_bands():
+    cfg = GuardConfig()
+    clean = mk_item(0, pods=4, bs=1e4, sp=0.5, t3=5)
+    nan = mk_item(1, pods=4, bs=1e4, sp=float("nan"), t3=5)
+    low = mk_item(2, pods=4, bs=1e4, sp=0.01, t3=5)
+    low = dataclasses.replace(
+        low, offering=dataclasses.replace(low.offering, od_price=1.0))
+    spike = mk_item(3, pods=4, bs=1e4, sp=1.2, t3=5)
+    spike = dataclasses.replace(
+        spike, offering=dataclasses.replace(spike.offering, od_price=1.0))
+    bad_t3 = mk_item(4, pods=4, bs=1e4, sp=0.5, t3=60)
+    mask = quarantine_mask([clean, nan, low, spike, bad_t3], cfg)
+    assert mask.tolist() == [False, True, True, True, True]
+    assert quarantine_mask([clean], cfg) is None
+
+
+# ------------------------------------------------------- serialization ----
+
+def test_scenario_faults_roundtrip():
+    sc = chaos_scenario()
+    assert sc.faults
+    rebuilt = Scenario.from_dict(sc.to_dict())
+    assert rebuilt == sc
+    assert rebuilt.faults == sc.faults
+    assert all(isinstance(f, Fault) for f in rebuilt.faults)
