@@ -4,7 +4,8 @@
 PY := PYTHONPATH=src python
 
 .PHONY: verify test bench bench-solver bench-backend bench-risk bench-fleet \
-        bench-scale bench-serve bench-chaos perf-gate docs-check check-skips
+        bench-scale bench-serve bench-chaos bench-region perf-gate docs-check \
+        check-skips
 
 ## tier-1 gate: full test suite (junitxml-audited: every skip must be in
 ## tests/skip_registry.py) + a smoke pass of the solver microbenchmark
@@ -73,3 +74,10 @@ bench-serve:
 ## verification); refreshes BENCH_chaos.json
 bench-chaos:
 	$(PY) -m benchmarks.bench_chaos --json BENCH_chaos.json
+
+## multi-region failover sweep (hardened failover rung vs region-pinned
+## strawman through the correlated regional storm; in-bench determinism +
+## single-region/identity-config inertness verification); refreshes
+## BENCH_region.json
+bench-region:
+	$(PY) -m benchmarks.bench_region --json BENCH_region.json

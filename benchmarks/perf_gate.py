@@ -30,6 +30,7 @@ from typing import List, Optional
 
 from benchmarks.bench_backend import bench_tick
 from benchmarks.bench_chaos import gate_measurement as chaos_measurement
+from benchmarks.bench_region import gate_measurement as region_measurement
 from benchmarks.bench_scale import gate_measurement as scale_measurement
 from benchmarks.bench_serve import gate_measurement as serve_measurement
 from repro.core import jax_available
@@ -91,12 +92,27 @@ def measure(n_dec: int, repeat: int = 3) -> dict:
     checks["chaos_availability_ok"] = chaos["availability_ok"]
     checks["chaos_determinism"] = chaos["determinism_ok"]
     checks["chaos_inert_when_healthy"] = chaos["inert_ok"]
+    # multi-region failover (DESIGN.md §17): SLO perf-per-dollar of the
+    # hardened plane with cross-region failover over the region-pinned
+    # strawman through the correlated regional storm.  Its determinism
+    # and single-region/identity-config inertness flags are hard checks:
+    # a region layer that moves any bit of a region-free (or K=1, or
+    # identity-config) run breaks the §9 contract regardless of the ratio
+    region = region_measurement(repeat=repeat)
+    metrics["region_failover_vs_pinned_ratio"] = \
+        region["region_failover_vs_pinned_ratio"]
+    checks["region_determinism"] = region["determinism_ok"]
+    checks["region_single_region_inert"] = region["single_region_inert"]
+    checks["region_identity_config_inert"] = \
+        region["identity_config_inert"]
     raw = {k: v for k, v in rec.items()
            if k.endswith(("_wall_s", "_compile_s", "_ms_per_decision"))}
     raw["scale_wall_5k_s"] = scale["wall_5k_s"]
     raw["scale_wall_1m_s"] = scale["wall_1m_s"]
     raw["serve_slo_attainment"] = serve["serving_slo_attainment"]
     raw["chaos_hardened_availability"] = chaos["hardened_availability"]
+    raw["region_hardened_demand_coverage"] = \
+        region["hardened_demand_coverage"]
     return {"config": {"n_items": GATE_ITEMS, "base_pods": GATE_PODS,
                        "n_decisions": n_dec},
             "metrics": metrics, "checks": checks, "raw": raw}

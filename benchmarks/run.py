@@ -16,8 +16,8 @@ import os
 import sys
 import traceback
 
-from . import (bench_backend, bench_chaos, bench_fleet, bench_risk,
-               bench_scale,
+from . import (bench_backend, bench_chaos, bench_fleet, bench_region,
+               bench_risk, bench_scale,
                bench_serve, bench_solver, elastic_training, fig5_sota,
                fig5c_spotkube,
                fig6_alpha, fig6b_cross_provider, fig7_tolerance,
@@ -42,6 +42,7 @@ ALL = [
     ("bench_fleet", bench_fleet),
     ("bench_serve", bench_serve),
     ("bench_chaos", bench_chaos),
+    ("bench_region", bench_region),
     ("elastic_training", elastic_training),
     ("roofline_report", roofline_report),
 ]

@@ -17,6 +17,8 @@ serving system — SLO attainment, served QPS-hours, recovery losses.
     PYTHONPATH=src python examples/run_scenario.py --workload flash --policy karpenter_like
     PYTHONPATH=src python examples/run_scenario.py --smoke --faults combined --policy hardened
     PYTHONPATH=src python examples/run_scenario.py --faults feed:0.5
+    PYTHONPATH=src python examples/run_scenario.py --smoke --regions 3
+    PYTHONPATH=src python examples/run_scenario.py --regions 3:0.8 --faults region --policy hardened
 
 With ``--faults`` a named fault storm (DESIGN.md §16: ``feed`` / ``ice``
 / ``solver`` / ``combined``, optionally ``NAME:SCALE`` to compress the
@@ -24,29 +26,54 @@ windows) overlays the run; the tour then also reports decision
 availability and — under ``--policy hardened`` — the degradation-ladder
 rung counters.  The replay assertion runs as usual: fault injection is
 part of the deterministic trace contract, not an exception to it.
+
+With ``--regions K[:RHO]`` the run provisions across the first K catalog
+regions as correlated markets (DESIGN.md §17: shared-factor shocks at
+correlation RHO, data gravity toward the home region); the tour then
+also reports per-region pool shares and egress spend.  ``--faults
+region`` overlays :func:`repro.chaos.region_storm` on the home region —
+try it with ``--policy hardened`` to watch the failover rung counters.
 """
 
 import argparse
 
 import numpy as np
 
-from repro.chaos import fault_storm
+from repro.chaos import fault_storm, region_storm
 from repro.chaos.guard import decision_available
+from repro.core.market import REGIONS
+from repro.region import RegionConfig, region_pool_shares
 from repro.sim import (ClusterSim, FleetSim, Scenario, Shock, load_trace,
                        make_policy, run_replicas)
 
 
-def parse_faults(spec: str, smoke: bool):
+def parse_faults(spec: str, smoke: bool, region=None):
     """``NAME`` or ``NAME:SCALE``.  The storm presets are laid out for a
     48 h horizon; without an explicit scale they are compressed to fit
     the tour's 36 h (or 12 h smoke) run."""
     name, _, scale = spec.partition(":")
     factor = float(scale) if scale else (0.25 if smoke else 0.75)
+    if name == "region":
+        if region is None:
+            raise SystemExit("--faults region needs --regions K "
+                             "(the storm targets the home region)")
+        return region_storm(region.home, factor)
     return fault_storm(name, factor)
 
 
+def parse_regions(spec: str) -> RegionConfig:
+    """``K`` or ``K:RHO`` — the first K catalog regions as correlated
+    markets, home (and data gravity) in the first."""
+    k, _, rho = spec.partition(":")
+    k = max(1, min(int(k), len(REGIONS)))
+    return RegionConfig(regions=REGIONS[:k],
+                        rho=float(rho) if rho else 0.6,
+                        vol=0.25, shock_seed=11, home_region=REGIONS[0],
+                        egress_per_pod_hour=0.002)
+
+
 def build_scenario(smoke: bool, policy: str = "kubepacs",
-                   faults=()) -> Scenario:
+                   faults=(), region=None) -> Scenario:
     return Scenario(
         name="interrupt_storm_with_spike",
         duration_hours=12.0 if smoke else 36.0, step_hours=6.0,
@@ -60,7 +87,7 @@ def build_scenario(smoke: bool, policy: str = "kubepacs",
         policy=policy,
         catalog_seed=7, max_offerings=300 if smoke else 800,
         market_seed=7, interrupt_seed=7,
-        faults=tuple(faults),
+        faults=tuple(faults), region=region,
     )
 
 
@@ -104,11 +131,17 @@ def main():
                          "trace family instead of the interrupt storm")
     ap.add_argument("--faults", default=None, metavar="STORM[:SCALE]",
                     help="overlay a named fault storm (feed, ice, solver, "
-                         "combined; DESIGN.md §16) — try with "
-                         "--policy hardened")
+                         "combined; DESIGN.md §16 — or region, §17) — try "
+                         "with --policy hardened")
+    ap.add_argument("--regions", default=None, metavar="K[:RHO]",
+                    help="provision across the first K catalog regions as "
+                         "correlated markets (DESIGN.md §17), shared-factor "
+                         "correlation RHO (default 0.6)")
     args = ap.parse_args()
 
-    make_policy(args.policy)   # validate the spec before building anything
+    region = parse_regions(args.regions) if args.regions else None
+    # validate the spec before building anything
+    make_policy(args.policy, region=region)
 
     if args.workload:
         policy = ("serving_slo" if args.policy == "kubepacs"
@@ -116,13 +149,16 @@ def main():
         run_serving_workload(args.workload, policy, args.smoke)
         return
 
-    faults = parse_faults(args.faults, args.smoke) if args.faults else ()
+    faults = (parse_faults(args.faults, args.smoke, region)
+              if args.faults else ())
     scenario = build_scenario(args.smoke, policy=args.policy,
-                              faults=faults)
+                              faults=faults, region=region)
     print(f"scenario {scenario.name!r}: {scenario.duration_hours:.0f}h, "
           f"policy={scenario.policy}, interrupts={scenario.interrupt_model}"
           + (f", faults={args.faults} ({len(faults)} windows)"
-             if faults else ""))
+             if faults else "")
+          + (f", regions={'/'.join(region.regions)} (rho={region.rho:g})"
+             if region else ""))
 
     # 1. live run, recorded
     res = ClusterSim(scenario).run()
@@ -140,6 +176,15 @@ def main():
               f"({sum(avail) / max(len(avail), 1):.0%}); ladder rungs "
               + (str(rungs) if rungs
                  else "n/a (unhardened policy — no ladder)"))
+    if region is not None:
+        shares = region_pool_shares(res.pool) or {"(empty pool)": 0}
+        share_s = ", ".join(f"{r}: {n}" for r, n in sorted(shares.items()))
+        print(f"region: final pool shares {{{share_s}}}; egress "
+              f"${res.total_egress:.2f} of ${res.total_cost:.2f} total"
+              + (f"; failover rungs "
+                 f"{ {k[len('chaos_'):]: v for k, v in res.cache_stats.items() if k.startswith('chaos_region')} }"
+                 if any(k.startswith("chaos_region")
+                        for k in res.cache_stats) else ""))
 
     # 2. replay from the JSONL trace — no RNG, identical decisions
     rep = ClusterSim.replay(load_trace(args.trace)).run()

@@ -11,15 +11,16 @@ Two halves (DESIGN.md §16):
   schema.
 """
 
-from .faults import (FAULT_KINDS, FEED_KINDS, SOLVER_KINDS, ChaosController,
-                     Fault, fault_storm)
+from .faults import (FAULT_KINDS, FEED_KINDS, REGION_KINDS, SOLVER_KINDS,
+                     ChaosController, Fault, fault_storm, region_storm)
 
 _GUARD_SYMBOLS = ("DEFAULT_LADDER", "GuardConfig", "HardenedPolicy",
                   "backoff_schedule", "check_decision",
                   "decision_available", "quarantine_mask", "safe_pool")
 
-__all__ = ["FAULT_KINDS", "FEED_KINDS", "SOLVER_KINDS", "ChaosController",
-           "Fault", "fault_storm", *_GUARD_SYMBOLS]
+__all__ = ["FAULT_KINDS", "FEED_KINDS", "REGION_KINDS", "SOLVER_KINDS",
+           "ChaosController", "Fault", "fault_storm", "region_storm",
+           *_GUARD_SYMBOLS]
 
 
 def __getattr__(name):

@@ -37,6 +37,23 @@ Fault taxonomy (``Fault.kind``):
 ``solver_deadline``
     Every solve attempt inside the window overruns by ``magnitude``
     *simulated* seconds, charged against the guard's decision deadline.
+``region_brownout``
+    A whole region degrades at once (DESIGN.md §17): the regional market
+    overlay thins the region's TRUE T3 capacity by ``magnitude`` and
+    spikes its spot prices, while launches into the region grant at most
+    ``floor(requested × (1 − magnitude))`` nodes.  The feed stays
+    truthful — policies *see* the brownout.  ``selector`` is the exact
+    region name.
+``region_outage``
+    The region is gone: TRUE T3 drops to zero region-wide (the overlay's
+    doing — candidates vanish from ``preprocess`` for every policy) and
+    launches into the region grant nothing.
+``region_partition``
+    The control plane is partitioned *from* the region: the observed feed
+    freezes at the last pre-window values for the region's rows (the
+    snapshot is tainted) and launches grant zero, but the TRUE world keeps
+    moving — the feed looks healthy while every launch fails, the trap the
+    hardened policy's region rung exists for.
 
 Fault windows are half-open ``[time, time + duration)`` and should be
 aligned to scenario tick boundaries (the storm factories use multiples of
@@ -58,8 +75,12 @@ import numpy as np
 
 _EPS = 1e-9
 
+#: kinds that correlate failure across a whole region's offerings
+#: (DESIGN.md §17); ``selector`` is the exact region name for these
+REGION_KINDS = ("region_brownout", "region_outage", "region_partition")
+
 FAULT_KINDS = ("feed_outage", "corrupt_price", "corrupt_nan", "ice",
-               "solver_error", "solver_deadline")
+               "solver_error", "solver_deadline") + REGION_KINDS
 
 #: kinds that taint the controller's view of the market feed (the guard's
 #: healthy-path test): everything except launch-time ICE and solver faults
@@ -83,6 +104,8 @@ class Fault:
         if self.kind not in FAULT_KINDS:
             raise ValueError(f"unknown fault kind {self.kind!r} "
                              f"(expected one of {FAULT_KINDS})")
+        if self.kind in REGION_KINDS and not self.selector:
+            raise ValueError(f"{self.kind} faults need a region selector")
         # float-normalize so Scenario round-trips through JSON byte-exactly
         object.__setattr__(self, "time", float(self.time))
         object.__setattr__(self, "duration", float(self.duration))
@@ -122,6 +145,18 @@ class ChaosController:
             i: np.array([f.selector in oid for oid in ids], dtype=bool)
             for i, f in enumerate(self.faults)
             if f.kind in ("corrupt_price", "corrupt_nan")}
+        regions = [getattr(o, "region", "") for o in catalog]
+        self._region_of: Dict[str, str] = dict(zip(ids, regions))
+        # region faults match on the exact region tag, not the id substring
+        self._rsel: Dict[int, np.ndarray] = {
+            i: np.array([r == f.selector for r in regions], dtype=bool)
+            for i, f in enumerate(self.faults)
+            if f.kind in REGION_KINDS}
+        #: any region-kind fault *declared* (not necessarily active) — the
+        #: static gate that keeps the hardened policy's region rung
+        #: bit-inert on scenarios without regional faults (DESIGN.md §17)
+        self.has_region_faults = any(f.kind in REGION_KINDS
+                                     for f in self.faults)
         self._last_spot: Optional[np.ndarray] = None
         self._last_t3: Optional[np.ndarray] = None
         self._last_fresh_time = 0.0
@@ -157,6 +192,13 @@ class ChaosController:
                 transitions.append((f.kind, "end", i))
         self._active_prev = act
 
+        # the pre-refresh last-fresh feed: region partitions freeze their
+        # rows at these values for the whole window (a partition that opens
+        # before the first refresh cannot freeze a never-seen feed)
+        prev_spot, prev_t3 = self._last_spot, self._last_t3
+        partitions = [(i, self.faults[i]) for i in sorted(act)
+                      if self.faults[i].kind == "region_partition"]
+
         outages = [self.faults[i] for i in sorted(act)
                    if self.faults[i].kind == "feed_outage"]
         if outages and self._last_spot is not None:
@@ -180,6 +222,14 @@ class ChaosController:
             self.stale_age = 0.0
             spot_obs, t3_obs = spot, t3
             tainted = False
+            if partitions and prev_spot is not None:
+                # partitioned rows never refresh: pin their last-fresh
+                # values at the pre-window feed so the frozen view does
+                # not silently advance during the window
+                for i, _ in partitions:
+                    mask = self._rsel[i]
+                    self._last_spot[mask] = prev_spot[mask]
+                    self._last_t3[mask] = prev_t3[mask]
 
         for i in sorted(act):
             f = self.faults[i]
@@ -197,6 +247,18 @@ class ChaosController:
                 spot_obs[pick] = spot_obs[pick] * f.magnitude
             else:
                 spot_obs[pick] = np.nan
+        if partitions and prev_spot is not None:
+            for i, _ in partitions:
+                mask = self._rsel[i]
+                if not mask.any():
+                    continue
+                tainted = True
+                if spot_obs is spot:    # copy-on-write, as above
+                    spot_obs = np.array(spot, dtype=np.float64, copy=True)
+                if t3_obs is t3:
+                    t3_obs = np.array(t3, copy=True)
+                spot_obs[mask] = self._last_spot[mask]
+                t3_obs[mask] = self._last_t3[mask]
         self.snapshot_tainted = tainted
         return spot_obs, t3_obs, transitions
 
@@ -207,19 +269,41 @@ class ChaosController:
         ICE faults, or None when no ICE window is active.  Caps are a pure
         function of the *requested* counts, so re-applying them to already
         clipped grants is the identity — which is what keeps replayed
-        fulfillment records byte-identical."""
-        active = [f for f in self.faults
-                  if f.kind == "ice" and f.active(time)]
+        fulfillment records byte-identical.  Region faults correlate the
+        launch failure across every offering of the selected region:
+        brownouts thin grants by ``magnitude``, outages and partitions
+        grant nothing."""
+        active = [f for f in self.faults if f.active(time)
+                  and f.kind in ("ice",) + REGION_KINDS]
         if not active:
             return None
         caps: Dict[str, int] = {}
         for oid, c in requested.items():
             cap = int(c)
             for f in active:
-                if f.selector in oid:
-                    cap = min(cap, int(math.floor(c * (1.0 - f.magnitude))))
+                if f.kind == "ice":
+                    if f.selector in oid:
+                        cap = min(cap,
+                                  int(math.floor(c * (1.0 - f.magnitude))))
+                elif self._region_of.get(oid, "") == f.selector:
+                    if f.kind == "region_brownout":
+                        cap = min(cap,
+                                  int(math.floor(c * (1.0 - f.magnitude))))
+                    else:            # outage / partition: region is dark
+                        cap = 0
             caps[oid] = max(cap, 0)
         return caps
+
+    # -- region path ---------------------------------------------------------
+    def region_fault_regions(self, time: float) -> Tuple[str, ...]:
+        """Regions under an *active* region-kind fault at ``time``, sorted —
+        the quarantine set the hardened policy's region rung excludes and
+        re-weights demand away from (DESIGN.md §17).  Reading the
+        controller here is the same precedent as ``snapshot_tainted`` /
+        ``solver_faulted``: the guard reads the injection oracle's state,
+        never mutates it."""
+        return tuple(sorted({f.selector for f in self.faults
+                             if f.kind in REGION_KINDS and f.active(time)}))
 
     # -- solver path ---------------------------------------------------------
     def solver_faulted(self, time: float) -> Optional[Fault]:
@@ -291,5 +375,25 @@ def fault_storm(name: str, scale: float = 1.0) -> Tuple[Fault, ...]:
     return storms[name]
 
 
-__all__ = ["FAULT_KINDS", "FEED_KINDS", "SOLVER_KINDS", "ChaosController",
-           "Fault", "fault_storm"]
+def region_storm(region: str, scale: float = 1.0) -> Tuple[Fault, ...]:
+    """The correlated regional failure sequence ``bench_region`` sweeps,
+    laid out for a 48 h / 3 h-step horizon like :func:`fault_storm`: the
+    selected region browns out (thinned capacity, spiked prices, partial
+    grants), then goes dark entirely, then partitions away from the
+    control plane while its feed keeps showing the last pre-partition
+    snapshot."""
+    def s(t: float) -> float:
+        return t * scale
+
+    return (
+        Fault(kind="region_brownout", time=s(6.0), duration=s(9.0),
+              magnitude=0.6, selector=region, seed=107),
+        Fault(kind="region_outage", time=s(18.0), duration=s(9.0),
+              magnitude=1.0, selector=region, seed=108),
+        Fault(kind="region_partition", time=s(33.0), duration=s(9.0),
+              magnitude=1.0, selector=region, seed=109),
+    )
+
+
+__all__ = ["FAULT_KINDS", "FEED_KINDS", "REGION_KINDS", "SOLVER_KINDS",
+           "ChaosController", "Fault", "fault_storm", "region_storm"]

@@ -62,6 +62,8 @@ from ..core.gss import bracketed_gss
 from ..core.ilp import reweight_market
 from ..core.provisioner import (KubePACSProvisioner, ProvisioningDecision,
                                 exclusion_mask)
+from ..region.config import RegionConfig
+from ..region.solver import solve_with_regions
 from ..sim.policy import Policy
 from .faults import ChaosController
 
@@ -99,6 +101,12 @@ class GuardConfig:
     #: while fulfillment rounds come back *uniformly* short (market-wide
     #: ICE: diversifying away is pure loss, so compensate instead)
     ice_inflate_cap: float = 4.0
+    #: learned quarantine band (§10 → §16): rows whose *online-estimated*
+    #: interrupt hazard λ_i (interrupts per node-hour, from the risk
+    #: subsystem's estimators) exceeds this rate are quarantined like a
+    #: failed sanity band.  0.0 = off — no estimators are constructed and
+    #: the guard is bit-identical to the fixed-bands-only build.
+    hazard_quarantine_rate: float = 0.0
 
 
 def backoff_schedule(seed: int, now: float, attempts: int,
@@ -123,11 +131,18 @@ def backoff_schedule(seed: int, now: float, attempts: int,
 
 
 def quarantine_mask(items: Sequence, config: GuardConfig,
+                    hazard: Optional[np.ndarray] = None,
                     ) -> Optional[np.ndarray]:
     """Detection-based row quarantine: True where an item's *observed*
     market fields fail the sanity bands.  Returns None when every row is
     sane (so the exclusion path stays byte-identical to the unguarded
-    one on clean feeds)."""
+    one on clean feeds).
+
+    ``hazard`` optionally carries the §10 estimators' per-item interrupt
+    hazard rate; with ``config.hazard_quarantine_rate > 0`` rows whose
+    estimated λ exceeds the rate join the quarantine — the learned band
+    the fixed thresholds cannot express.  Absent/off, the mask is exactly
+    the fixed-bands mask."""
     flags = np.zeros(len(items), dtype=bool)
     for i, it in enumerate(items):
         od = it.offering.od_price
@@ -136,6 +151,9 @@ def quarantine_mask(items: Sequence, config: GuardConfig,
                     or sp <= config.floor_od_factor * od
                     or sp > config.spike_od_factor * od
                     or not (0 < it.t3 <= 50))
+    if hazard is not None and config.hazard_quarantine_rate > 0.0:
+        flags |= np.asarray(hazard, dtype=np.float64) \
+            > config.hazard_quarantine_rate
     return flags if flags.any() else None
 
 
@@ -223,12 +241,19 @@ class HardenedPolicy(Policy):
     def __init__(self, tolerance: float = 0.01, ttl_hours: float = 2.0,
                  clock: Callable[[], float] = time.perf_counter,
                  config: Optional[GuardConfig] = None,
-                 ladder: Sequence[str] = DEFAULT_LADDER) -> None:
+                 ladder: Sequence[str] = DEFAULT_LADDER,
+                 region: Optional[RegionConfig] = None) -> None:
         self.provisioner = KubePACSProvisioner(tolerance=tolerance,
                                                ttl_hours=ttl_hours,
                                                timer=clock)
         self.config = config or GuardConfig()
         self.ladder = tuple(ladder)
+        #: scenario RegionConfig (None outside a regional scenario); the
+        #: §17 failover rung prices egress / honors caps through it
+        self.region = region
+        #: §10 estimators for the learned quarantine band — constructed in
+        #: :meth:`bind` only when ``hazard_quarantine_rate`` is enabled
+        self.estimators = None
         self.chaos: Optional[ChaosController] = None
         self._backends: Dict[str, Optional[SolverBackend]] = {}
         # last-good solved pools keyed by exact request shape (pods
@@ -241,8 +266,21 @@ class HardenedPolicy(Policy):
         self.counters: Dict[str, int] = {}
 
     # -- protocol hooks ------------------------------------------------------
+    def bind(self, catalog) -> None:
+        if self.config.hazard_quarantine_rate > 0.0:
+            from ..risk.estimators import RiskEstimators
+            self.estimators = RiskEstimators(catalog)
+
     def bind_chaos(self, chaos: Optional[ChaosController]) -> None:
         self.chaos = chaos
+
+    def observe_market(self, time, spot, t3):
+        if self.estimators is not None:
+            self.estimators.on_market_state(time, spot, t3)
+
+    def observe_interrupts(self, time, dt, pool, notices):
+        if self.estimators is not None:
+            self.estimators.on_interrupts(time, dt, pool, notices)
 
     def set_decision_memo(self, memo):
         self.decision_memo = memo
@@ -259,9 +297,13 @@ class HardenedPolicy(Policy):
         # with chaos, degraded decisions additionally depend on the
         # last-good store, which this digest pins conservatively (equal
         # histories ⇒ equal digests; a differing history never shares)
-        if self.chaos is None:
+        if self.chaos is None and self.estimators is None:
             return None
-        return f"guard:{self._lg_digest}"
+        lg = f"guard:{self._lg_digest}"
+        if self.estimators is not None:
+            # learned quarantine band: decisions depend on estimator state
+            lg += f":{self.estimators.digest()}"
+        return lg
 
     def chaos_stats(self) -> Dict[str, int]:
         """Per-rung/diagnostic counters (``cache_stats``' ``chaos_*``)."""
@@ -346,6 +388,16 @@ class HardenedPolicy(Policy):
         if chaos is None:
             return self.provisioner.provision(request, snapshot,
                                               precompiled)
+        if chaos.has_region_faults:
+            # §17 failover rung — sits above the ladder; bit-inert unless
+            # the scenario actually declares region-kind faults
+            qregions = chaos.region_fault_regions(now)
+            if qregions:
+                d = self._region_failover(request, snapshot, now,
+                                          precompiled, qregions)
+                if d is not None:
+                    self._remember(request, d)
+                    return self._inflate(request, d)
         healthy = (not chaos.snapshot_tainted
                    and chaos.solver_faulted(now) is None)
         if healthy:
@@ -392,6 +444,8 @@ class HardenedPolicy(Policy):
         granted in full again.  Over-requesting under a cap is free:
         grants — and therefore billing — never exceed what the market
         actually yields."""
+        if self.estimators is not None:
+            self.estimators.on_fulfillment(time, requested, grants)
         if self.chaos is None:
             return
         cfg = self.config
@@ -439,6 +493,71 @@ class HardenedPolicy(Policy):
         return dataclasses.replace(decision, pool=new_pool,
                                    metrics=metrics)
 
+    # -- the §17 region failover rung ----------------------------------------
+    def _hazard_rows(self, items) -> Optional[np.ndarray]:
+        """Per-item estimated hazard for the learned quarantine band, or
+        None when the band is off (the default — bit-inert)."""
+        est = self.estimators
+        if est is None or self.config.hazard_quarantine_rate <= 0.0:
+            return None
+        lam = est.hazard()
+        return lam[est.gather([it.offering.offering_id for it in items])]
+
+    def _region_failover(self, request, snapshot, now, precompiled,
+                         qregions) -> Optional[ProvisioningDecision]:
+        """Quarantine every row of the actively-faulted regions and
+        re-solve the full demand into the survivors with the scenario
+        RegionConfig's side-constraints (egress priced into the objective,
+        caps, minimum spread).  Detection is declaration-based but
+        row-blind: the guard reads *which regions* are under an active
+        fault window from the controller — the operator signal a real
+        control plane gets from health probes — never which rows the
+        fault actually corrupted.  Returns None when the survivors cannot
+        cover demand (or the monitor rejects), and the decision falls
+        through to the healthy/degraded paths."""
+        prov = self.provisioner
+        cfg = self.config
+        t0 = prov.timer()
+        excluded = prov.cache.excluded(now)
+        items, market = prov._compiled(request, snapshot, precompiled)
+        qset = set(qregions)
+        rmask = np.array([getattr(it.offering, "region", "") in qset
+                          for it in items], dtype=bool)
+        # rmask may be empty — e.g. an outage already blanked the region's
+        # rows out of the frozen observed feed.  The quarantine is vacuous
+        # then, but the side-constrained re-solve below is still the §17
+        # response: min-spread/caps/egress matter *most* mid-outage, and
+        # the plain degraded ladder applies none of them
+        if rmask.any():
+            self._count("region_quarantined_rows", int(rmask.sum()))
+        qmask = quarantine_mask(items, cfg, hazard=self._hazard_rows(items))
+        extra = rmask if qmask is None else (rmask | qmask)
+        exclude = exclusion_mask(items, excluded, extra=extra)
+        if exclude is not None and bool(exclude.all()):
+            return None     # no survivors — let the ladder cope
+        rcfg = self.region if self.region is not None else RegionConfig()
+        pool, trace, info = solve_with_regions(
+            items, request.pods, rcfg, market=market,
+            tolerance=prov.tolerance, exclude=exclude, timer=prov.timer,
+            coarsening=prov.coarsening)
+        if pool is None or not check_decision(pool, request, cfg):
+            self._count("region_failover_failed")
+            return None
+        self._count("region_failover")
+        if info["egress_reweighted"]:
+            self._count("region_egress_solves")
+        if info["cap_repairs"]:
+            self._count("region_cap_repairs", info["cap_repairs"])
+        if info["spread_forced"]:
+            self._count("region_spread_forced", info["spread_forced"])
+        metrics = decision_metrics(pool, request.pods)
+        metrics["chaos_rung"] = -1.0    # above solver rung 0
+        metrics["chaos_region_failover"] = float(len(qregions))
+        return ProvisioningDecision(
+            pool=pool, trace=trace, alpha=pool.alpha,
+            wall_seconds=prov.timer() - t0,
+            excluded_offerings=excluded, metrics=metrics)
+
     # -- the degraded path ---------------------------------------------------
     def _degraded(self, request, snapshot, now, precompiled):
         prov = self.provisioner
@@ -454,7 +573,7 @@ class HardenedPolicy(Policy):
             if hit is not None:
                 return hit
         items, market = prov._compiled(request, snapshot, precompiled)
-        qmask = quarantine_mask(items, cfg)
+        qmask = quarantine_mask(items, cfg, hazard=self._hazard_rows(items))
         nq = int(qmask.sum()) if qmask is not None else 0
         if nq:
             self._count("quarantined_rows", nq)

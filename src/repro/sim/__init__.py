@@ -18,7 +18,7 @@ from .trace import TraceRecorder, load_trace, loads_trace
 from .engine import (ClusterSim, LiveMarketSource, ReplaySource,
                      ScriptedMarketSource, SimResult, SimRound, run_replicas,
                      script_market_states)
-from .fleet import FleetSim, run_fleet
+from .fleet import FleetSim, run_fleet, run_fleet_paths
 
 __all__ = [
     "InterruptNotice", "TRACE_VERSION", "InterruptModel",
@@ -34,4 +34,5 @@ __all__ = [
     "load_trace", "loads_trace", "ClusterSim", "LiveMarketSource",
     "ReplaySource", "ScriptedMarketSource", "SimResult", "SimRound",
     "run_replicas", "script_market_states", "FleetSim", "run_fleet",
+    "run_fleet_paths",
 ]

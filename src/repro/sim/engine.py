@@ -44,6 +44,8 @@ from ..core.ilp import compile_market
 from ..core.market import (InterruptEvent, Offering, SpotMarketSimulator,
                            snapshot_with)
 from ..core.provisioner import (ProvisioningDecision, merge_pools, preprocess)
+from ..region.market import (hazard_scale_rows, make_overlay,
+                             pool_egress_rate)
 from .events import (InterruptNotice, catalog_digest, decision_record,
                      demand_record, fault_record, fulfillment_record,
                      header_record, interrupts_record, market_state_record,
@@ -71,11 +73,16 @@ class LiveMarketSource:
 
     def __init__(self, catalog: Sequence[Offering], scenario: Scenario,
                  model: InterruptModel,
-                 market: Optional[SpotMarketSimulator] = None):
+                 market: Optional[SpotMarketSimulator] = None,
+                 overlay=None):
         self.market = market or SpotMarketSimulator(
             catalog, seed=scenario.market_seed,
             price_vol=scenario.price_vol, t3_vol=scenario.t3_vol)
         self.model = model
+        #: optional RegionalMarketOverlay (DESIGN.md §17): a pure per-
+        #: refresh view transform — the simulator's own state (and its OU
+        #: dynamics) never see the regional factor
+        self.overlay = overlay
         model.reset(catalog, scenario.interrupt_seed)
 
     def advance(self, hours: float) -> None:
@@ -87,8 +94,14 @@ class LiveMarketSource:
                                 price_factor=price_factor,
                                 t3_factor=t3_factor)
 
-    def state(self) -> Tuple[np.ndarray, np.ndarray]:
-        return self.market.state_arrays()
+    def state(self, now: float = 0.0) -> Tuple[np.ndarray, np.ndarray]:
+        # the engine passes its own clock: shock-triggered refreshes do
+        # not advance market.time, but the overlay must be evaluated at
+        # the refresh time in the live and scripted paths identically
+        spot, t3 = self.market.state_arrays()
+        if self.overlay is not None:
+            spot, t3 = self.overlay.apply(spot, t3, now)
+        return spot, t3
 
     def interrupts(self, offerings: Dict[str, Offering],
                    pool: Dict[str, int], hours: float,
@@ -125,7 +138,9 @@ class ScriptedMarketSource:
     def apply_shock(self, shock: Shock) -> None:
         pass
 
-    def state(self) -> Tuple[np.ndarray, np.ndarray]:
+    def state(self, now: float = 0.0) -> Tuple[np.ndarray, np.ndarray]:
+        # scripted states were pre-overlaid by script_market_states; the
+        # time argument exists only for protocol uniformity
         spot, t3 = self._states[self._idx]
         self._idx += 1
         return spot, t3
@@ -171,7 +186,9 @@ class ReplaySource:
     def apply_shock(self, shock: Shock) -> None:
         pass
 
-    def state(self) -> Tuple[np.ndarray, np.ndarray]:
+    def state(self, now: float = 0.0) -> Tuple[np.ndarray, np.ndarray]:
+        # recorded states already carry any regional overlay (the trace
+        # records TRUE post-overlay state), so replay stays RNG-free
         rec = self._next("market_state")
         return (np.array(rec["spot"], dtype=np.float64),
                 np.array(rec["t3"], dtype=np.int64))
@@ -218,6 +235,11 @@ class SimResult:
     pool: NodePool
     recorder: TraceRecorder
     total_perf_hours: float = 0.0     # ∫ pool perf_rate dt (delivered work)
+    #: data-gravity spend (DESIGN.md §17): the egress component already
+    #: included in ``total_cost`` — 0.0 whenever the scenario has no
+    #: RegionConfig or a zero egress rate (the accrual is skipped, not
+    #: added as 0, so legacy float sequences are untouched)
+    total_egress: float = 0.0
     #: cache-effectiveness counters (DESIGN.md §11): ``compile_hits`` /
     #: ``compile_misses`` of the shared CompiledMarket cache, plus
     #: ``memo_hits`` / ``memo_misses`` / ``memo_unique_solves`` of the
@@ -406,22 +428,33 @@ def script_market_states(scenario: Scenario, catalog: Sequence[Offering],
     market = SpotMarketSimulator(catalog, seed=scenario.market_seed,
                                  price_vol=scenario.price_vol,
                                  t3_vol=scenario.t3_vol)
+    # Regional overlay: the scripted path must record the same TRUE states
+    # the live source produces, so the overlay applies at the same times
+    # the engine would pass to ``source.state(now)``.
+    overlay = make_overlay(scenario.region, catalog, scenario.faults)
+
+    def _state(t: float) -> Tuple[np.ndarray, np.ndarray]:
+        spot, t3 = market.state_arrays()
+        if overlay is not None:
+            spot, t3 = overlay.apply(spot, t3, t)
+        return spot, t3
+
     states = []
     last_t = 0.0
     for t, prio, payload in _schedule(scenario):
         if payload is _INITIAL:             # initial refresh at t=0
-            states.append(market.state_arrays())
+            states.append(_state(0.0))
         elif prio == 2:                     # tick
             market.step(t - last_t)
             last_t = t
-            states.append(market.state_arrays())
+            states.append(_state(t))
         elif prio == 0:                     # shock
             shock: Shock = payload
             price_factor, t3_factor = shock.factors()
             market.apply_shock(selector=shock.selector,
                                price_factor=price_factor,
                                t3_factor=t3_factor)
-            states.append(market.state_arrays())
+            states.append(_state(t))
     return states
 
 
@@ -440,12 +473,25 @@ class ClusterSim:
         if source is None:
             source = LiveMarketSource(self.catalog, scenario,
                                       make_interrupt_model(
-                                          scenario.interrupt_model))
+                                          scenario.interrupt_model),
+                                      overlay=make_overlay(
+                                          scenario.region, self.catalog,
+                                          scenario.faults))
         self.source = source
+        # regional hazard regimes (DESIGN.md §17): scale the pressure
+        # model's per-node law; skipped entirely (None) for unit scales so
+        # the law stays bitwise untouched
+        scale_rows = hazard_scale_rows(scenario.region, self.catalog)
+        model = getattr(self.source, "model", None)
+        if model is not None and scale_rows is not None:
+            model.set_hazard_scale(
+                dict(zip((o.offering_id for o in self.catalog),
+                         scale_rows.tolist())))
         policy_kwargs = {} if clock is None else {"clock": clock}
         self.policy = make_policy(scenario.policy,
                                   tolerance=scenario.tolerance,
                                   ttl_hours=scenario.ttl_hours,
+                                  region=scenario.region,
                                   **policy_kwargs)
         # event-stream observer fan-out (DESIGN.md §10): the policy always
         # observes (risk policies learn online), plus any caller-supplied
@@ -477,6 +523,13 @@ class ClusterSim:
         self.time = 0.0
         self.total_cost = 0.0
         self.total_perf_hours = 0.0
+        self.total_egress = 0.0
+        # egress accrual is armed only by a non-zero rate: the off case
+        # must not even add 0.0 to the running totals (bit-inertness)
+        self._egress_cfg = (scenario.region
+                            if scenario.region is not None and
+                            scenario.region.egress_per_pod_hour > 0.0
+                            else None)
         self._cost_accrued_to = 0.0
         self.interrupted_nodes = 0
         self.decisions: List[Tuple[str, ProvisioningDecision]] = []
@@ -563,6 +616,10 @@ class ClusterSim:
         cost, perf = accrual_increments(self.pool, self.request.pods, dt)
         self.total_cost += cost
         self.total_perf_hours += perf
+        if self._egress_cfg is not None:
+            egress = pool_egress_rate(self._egress_cfg, self.pool) * dt
+            self.total_cost += egress
+            self.total_egress += egress
         self._cost_accrued_to = now
 
     def _refresh(self) -> None:
@@ -571,7 +628,7 @@ class ClusterSim:
         the chaos controller then derives the *observed* view the policy
         decides on.  ``_snap_index`` stays TRUE — interrupt hazards and
         billing live in reality even when the feed lies."""
-        spot, t3 = self.source.state()
+        spot, t3 = self.source.state(self.time)
         self._record(market_state_record(self.time, spot, t3))
         self._state_idx += 1
         if self.chaos is not None:
@@ -805,6 +862,7 @@ class ClusterSim:
                          interrupted_nodes=self.interrupted_nodes,
                          pool=self.pool, recorder=self.recorder,
                          total_perf_hours=self.total_perf_hours,
+                         total_egress=self.total_egress,
                          cache_stats=self._final_stats())
 
     def _final_stats(self) -> Dict[str, int]:

@@ -81,6 +81,8 @@ from .events import (InterruptNotice, catalog_digest, decision_record,
 from .interrupts import (InterruptModel, NullInterruptModel,
                          PressureInterruptModel, PriceCrossingInterruptModel,
                          RebalanceRecommendationModel, make_interrupt_model)
+from ..region.market import (apply_hazard_scale, hazard_scale_rows,
+                             pool_egress_rate)
 from .policy import make_policy
 from .scenario import Scenario, Shock
 from .trace import TraceRecorder
@@ -105,6 +107,7 @@ class _Replica:
     pending: List[InterruptNotice] = dataclasses.field(default_factory=list)
     total_cost: float = 0.0
     total_perf_hours: float = 0.0
+    total_egress: float = 0.0
     cost_accrued_to: float = 0.0
     interrupted_nodes: int = 0
     decisions: List[Tuple[str, object]] = dataclasses.field(
@@ -183,6 +186,14 @@ class FleetSim:
                       if scenario.faults else None)
         self._events_snap = events_log.snapshot()
 
+        # regional hazard regime + egress config (DESIGN.md §17), both
+        # None outside a regional scenario so the inert path is untouched
+        self._hazard_rows = hazard_scale_rows(scenario.region, self.catalog)
+        self._egress_cfg = (scenario.region
+                            if scenario.region is not None
+                            and scenario.region.egress_per_pod_hour > 0.0
+                            else None)
+
         digest = catalog_digest(self.catalog)
         policy_kwargs = {} if clock is None else {"clock": clock}
         self.replicas: List[_Replica] = []
@@ -190,6 +201,7 @@ class FleetSim:
             policy = make_policy(scenario.policy,
                                  tolerance=scenario.tolerance,
                                  ttl_hours=scenario.ttl_hours,
+                                 region=scenario.region,
                                  **policy_kwargs)
             policy.bind(self.catalog)
             policy.bind_chaos(self.chaos)
@@ -198,6 +210,10 @@ class FleetSim:
                 policy.set_solve_batch(self.solve_batch)
             model = make_interrupt_model(scenario.interrupt_model)
             model.reset(self.catalog, int(seed))
+            if self._hazard_rows is not None:
+                model.set_hazard_scale(dict(zip(
+                    (o.offering_id for o in self.catalog),
+                    self._hazard_rows.tolist())))
             extra = list(observer_factory(self.catalog)) \
                 if observer_factory is not None else []
             recorder = None
@@ -301,6 +317,10 @@ class FleetSim:
         cost, perf = accrual_increments(rep.pool, rep.request.pods, dt)
         rep.total_cost += cost
         rep.total_perf_hours += perf
+        if self._egress_cfg is not None:
+            egress = pool_egress_rate(self._egress_cfg, rep.pool) * dt
+            rep.total_cost += egress
+            rep.total_egress += egress
         rep.cost_accrued_to = now
 
     def _notify_pool(self, rep: _Replica, reason: str) -> None:
@@ -530,6 +550,10 @@ class FleetSim:
             self.counts[:, active],
             self._t3[active].astype(np.float64),
             self._if_band[active], dt)
+        if self._hazard_rows is not None:
+            # regional hazard regime: same law (apply_hazard_scale), same
+            # float sequence as the standalone model's per-entry path
+            probs = apply_hazard_scale(probs, self._hazard_rows[active])
         col = {int(c): j for j, c in enumerate(active)}
         per: List[List[InterruptNotice]] = []
         for rep, pool in zip(self.replicas, pool_dicts):
@@ -584,6 +608,7 @@ class FleetSim:
                 interrupted_nodes=rep.interrupted_nodes,
                 pool=rep.pool, recorder=rep.recorder or TraceRecorder(),
                 total_perf_hours=rep.total_perf_hours,
+                total_egress=rep.total_egress,
                 cache_stats=stats))
         self.wall_seconds = time.perf_counter() - t0
         return results
@@ -625,3 +650,27 @@ def run_fleet(scenario: Scenario, interrupt_seeds: Sequence[int], *,
                     observer_factory=observer_factory, clock=clock,
                     memoize=memoize, batch_decisions=batch_decisions,
                     backend=backend).run()
+
+
+def run_fleet_paths(scenario: Scenario, path_seeds: Sequence[int],
+                    interrupt_seeds: Sequence[int],
+                    **kwargs) -> List[List[SimResult]]:
+    """Sweep *correlated market paths* on top of the interrupt-seed sweep
+    (DESIGN.md §17): one FleetSim per ``path_seed``, each re-deriving the
+    scenario's regional shock stream from ``shock_seed=path_seed`` — the
+    shared factor ``z0`` moves every region together within a path while
+    paths stay independent.  Requires a regional scenario
+    (``scenario.region`` set); returns one result list per path seed, in
+    order, each aligned to ``interrupt_seeds``.  Every inner run keeps the
+    per-seed fleet ≡ standalone contract verbatim, since a path is just a
+    scenario with a different ``RegionConfig.shock_seed``."""
+    if scenario.region is None:
+        raise ValueError("run_fleet_paths needs a regional scenario "
+                         "(scenario.region is None)")
+    out: List[List[SimResult]] = []
+    for ps in path_seeds:
+        sc = dataclasses.replace(
+            scenario, region=dataclasses.replace(scenario.region,
+                                                 shock_seed=int(ps)))
+        out.append(run_fleet(sc, interrupt_seeds, **kwargs))
+    return out

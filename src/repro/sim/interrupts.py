@@ -39,6 +39,12 @@ class InterruptModel:
     def reset(self, catalog: Sequence[Offering], seed: int) -> None:
         """Bind the model to a scenario run (catalog at t=0, RNG seed)."""
 
+    def set_hazard_scale(self, scale_by_id: Dict[str, float]) -> None:
+        """Install per-offering regional hazard scales (DESIGN.md §17).
+
+        Base models ignore the regime — only the pressure sampler's law is
+        hazard-shaped; deterministic models (price crossing) are not."""
+
     def sample(self, offerings: Dict[str, Offering], pool: Dict[str, int],
                hours: float, now: float) -> List[InterruptNotice]:
         """Interrupt notices for ``pool`` over the last ``hours``.
@@ -77,9 +83,13 @@ class PressureInterruptModel(InterruptModel):
 
     def __init__(self) -> None:
         self._rng = np.random.default_rng(0)
+        self._hazard_scale: Dict[str, float] = {}
 
     def reset(self, catalog, seed):
         self._rng = np.random.default_rng(seed)
+
+    def set_hazard_scale(self, scale_by_id):
+        self._hazard_scale = dict(scale_by_id)
 
     def draw_lost_counts(self, counts: np.ndarray,
                          probs: np.ndarray) -> np.ndarray:
@@ -102,6 +112,11 @@ class PressureInterruptModel(InterruptModel):
             np.array([float(o.t3) for _, _, o in entries]),
             np.array([o.interruption_freq for _, _, o in entries]),
             hours)
+        if self._hazard_scale:
+            from ..region.market import apply_hazard_scale
+            probs = apply_hazard_scale(
+                probs, np.array([self._hazard_scale.get(oid, 1.0)
+                                 for oid, _, _ in entries], dtype=np.float64))
         lost = self.draw_lost_counts(
             np.array([c for _, c, _ in entries], dtype=np.int64), probs)
         return [InterruptNotice(time=now, offering_id=oid, count=int(k))
@@ -153,6 +168,9 @@ class RebalanceRecommendationModel(InterruptModel):
 
     def reset(self, catalog, seed):
         self.inner.reset(catalog, seed)
+
+    def set_hazard_scale(self, scale_by_id):
+        self.inner.set_hazard_scale(scale_by_id)
 
     def wrap(self, notices: Sequence[InterruptNotice],
              ) -> List[InterruptNotice]:

@@ -35,6 +35,12 @@ Spec strings (``Scenario.policy``):
                              roofline perf model + latency-SLO feasibility
                              mask; optional H-hour risk discount
                              (DESIGN.md §15)
+    "kubepacs_region"        KubePACS objective + the scenario RegionConfig's
+                             side-constraints (caps / spread / egress)
+                             through solve_with_regions (DESIGN.md §17)
+    "region_pinned[:R]"      the single-market strawman: provision only in
+                             region R (default: the config's home region) —
+                             what bench_region measures hardened against
 
 The optional ``precompiled=(items, CompiledMarket)`` argument lets the
 multi-seed runner share one preprocessed market across N replica policies
@@ -191,6 +197,12 @@ class _BaselinePolicy(Policy):
                precompiled: Optional[Precompiled]) -> Tuple[NodePool, Optional[float]]:
         raise NotImplementedError
 
+    def _extra_mask(self, items: List[CandidateItem]) -> Optional[np.ndarray]:
+        """Optional per-candidate feasibility mask ORed into the §4.1
+        exclusion path (None = no constraint — the default is bit-inert;
+        ``exclusion_mask(…, extra=None)`` is the pre-existing call)."""
+        return None
+
     def provision(self, request, snapshot, now, precompiled=None):
         t0 = self.clock()
         excluded = self.cache.excluded(now)
@@ -202,7 +214,8 @@ class _BaselinePolicy(Policy):
                 return hit
         items = precompiled[0] if precompiled is not None \
             else preprocess(snapshot, request)
-        exclude = exclusion_mask(items, excluded)
+        exclude = exclusion_mask(items, excluded,
+                                 extra=self._extra_mask(items))
         pool, alpha = self._solve(items, request.pods, exclude, precompiled)
         pool.request = request
         pool.alpha = alpha
@@ -489,8 +502,13 @@ class ServingSLOPolicy(KubePACSRiskPolicy):
 
 def make_policy(spec: str, tolerance: float = 0.01,
                 ttl_hours: float = 2.0,
-                clock: Callable[[], float] = time.perf_counter) -> Policy:
-    """Parse a scenario's policy spec string (see module doc)."""
+                clock: Callable[[], float] = time.perf_counter,
+                region=None) -> Policy:
+    """Parse a scenario's policy spec string (see module doc).
+
+    ``region`` threads the scenario's :class:`~repro.region.RegionConfig`
+    (or None) to the policies that honor side-constraints — the engines
+    pass ``scenario.region`` so region-aware specs need no extra wiring."""
     if spec == "kubepacs":
         return KubePACSPolicy(tolerance=tolerance, ttl_hours=ttl_hours,
                               clock=clock)
@@ -511,7 +529,22 @@ def make_policy(spec: str, tolerance: float = 0.01,
         # lazy: repro.chaos.guard imports this module (the Policy base)
         from ..chaos.guard import HardenedPolicy
         return HardenedPolicy(tolerance=tolerance, ttl_hours=ttl_hours,
-                              clock=clock)
+                              clock=clock, region=region)
+    if spec == "kubepacs_region":
+        # lazy: repro.region.policy imports this module (the base classes)
+        from ..region.policy import RegionAwarePolicy
+        return RegionAwarePolicy(region, tolerance=tolerance,
+                                 ttl_hours=ttl_hours, clock=clock)
+    if spec == "region_pinned" or spec.startswith("region_pinned:"):
+        pin = spec.split(":", 1)[1] if ":" in spec else ""
+        if not pin:
+            if region is None or not region.regions:
+                raise ValueError("region_pinned needs ':REGION' or a "
+                                 "scenario RegionConfig to pick the home")
+            pin = region.home
+        from ..region.policy import RegionPinnedPolicy
+        return RegionPinnedPolicy(pin, tolerance=tolerance,
+                                  ttl_hours=ttl_hours, clock=clock)
     if spec == "karpenter_like":
         return KarpenterLikePolicy(ttl_hours=ttl_hours, clock=clock)
     if spec.startswith("fixed_alpha:"):

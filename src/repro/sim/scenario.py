@@ -12,13 +12,14 @@ to keep the spec serializable.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Tuple
+from typing import List, Optional, Tuple
 
 import numpy as np
 
 from ..chaos.faults import Fault
 from ..core.efficiency import Request
-from ..core.market import Offering, generate_catalog
+from ..core.market import Offering, generate_catalog, restrict
+from ..region.config import RegionConfig
 
 
 @dataclasses.dataclass(frozen=True)
@@ -89,6 +90,10 @@ class Scenario:
     faults: Tuple[Fault, ...] = ()      # deterministic fault windows; part
     #                                     of the spec, so the trace header
     #                                     alone still replays the run
+    # -- regions (DESIGN.md §17) ------------------------------------------
+    region: Optional[RegionConfig] = None   # multi-region knobs; None (and
+    #                                         every RegionConfig default)
+    #                                         is bit-inert
 
     def __post_init__(self):
         # normalize order-insensitive and numeric fields so construction
@@ -132,8 +137,15 @@ class Scenario:
                        workload=frozenset(self.workload))
 
     def build_catalog(self) -> List[Offering]:
-        return generate_catalog(seed=self.catalog_seed,
-                                max_offerings=self.max_offerings)
+        catalog = generate_catalog(seed=self.catalog_seed,
+                                   max_offerings=self.max_offerings)
+        if self.region is not None and self.region.regions:
+            # restrict *after* generation: generate_catalog draws from one
+            # shared rng across regions, so passing a region subset into it
+            # would change every draw — filtering the full catalog keeps
+            # the surviving offerings byte-identical to the K=all run
+            catalog = restrict(catalog, regions=self.region.regions)
+        return catalog
 
     # -- (de)serialization — the trace-header round trip -------------------
     def to_dict(self) -> dict:
@@ -142,6 +154,7 @@ class Scenario:
         d["demand_schedule"] = [list(x) for x in self.demand_schedule]
         d["shocks"] = [dataclasses.asdict(s) for s in self.shocks]
         d["faults"] = [dataclasses.asdict(f) for f in self.faults]
+        d["region"] = None if self.region is None else self.region.to_dict()
         return d
 
     @classmethod
@@ -152,6 +165,9 @@ class Scenario:
             tuple(x) for x in d.get("demand_schedule", ()))
         d["shocks"] = tuple(Shock(**s) for s in d.get("shocks", ()))
         d["faults"] = tuple(Fault(**f) for f in d.get("faults", ()))
+        region = d.get("region")
+        d["region"] = (None if region is None
+                       else RegionConfig.from_dict(region))
         return cls(**d)   # __post_init__ normalizes numerics/order
 
 

@@ -1,7 +1,7 @@
 """The tier-1 suite's *registered* skips — the only ones allowed.
 
 Every remaining skip in the suite is an optional-dependency gate, not a
-disabled test: the five hypothesis properties have seeded deterministic
+disabled test: the six hypothesis properties have seeded deterministic
 twins that always run (``*_deterministic``), and the two PuLP
 cross-checks are redundant with the brute-force/reference cross-checks —
 they only add the independent-CBC angle when ``pulp`` is installed (CI
@@ -32,6 +32,8 @@ REGISTERED_SKIPS = {
     "tests/test_chaos.py::test_backoff_schedule_property":
         ("hypothesis not installed",),
     "tests/test_kernels.py::test_flash_ref_property":
+        ("hypothesis not installed",),
+    "tests/test_region.py::test_region_shock_purity_property":
         ("hypothesis not installed",),
 }
 

@@ -1,0 +1,412 @@
+"""RegionPlane: correlated regional markets + cross-region failover
+(DESIGN.md §17).
+
+Covers the PR-10 acceptance surface: shock draws are pure functions of
+``(seed, region, t)`` so the §9 determinism contract holds verbatim with
+correlation active (byte-identical traces, RNG-free replay, fleet ≡
+standalone — proven under the full regional storm), single-region and
+identity-config inertness hold bit-exactly, the hazard regime and egress
+accounting agree between the standalone and fleet engines, the region
+side-constraints (caps / min-spread / egress reweight) wrap the solver
+without changing the unconstrained solve, and the hardened policy's
+failover rung engages only when region faults are declared.
+"""
+
+import dataclasses
+import json
+import math
+
+import numpy as np
+import pytest
+
+from repro.chaos import region_storm
+from repro.chaos.guard import GuardConfig, HardenedPolicy, decision_available, \
+    quarantine_mask
+from repro.core import CandidateItem, Offering
+from repro.core.gss import bracketed_gss
+from repro.region import RegionConfig, region_pool_shares
+from repro.region.market import (RegionalMarketOverlay, apply_hazard_scale,
+                                 make_overlay, region_shock,
+                                 regional_price_factors)
+from repro.region.solver import solve_with_regions
+from repro.sim import (ClusterSim, Scenario, loads_trace, run_fleet,
+                       run_fleet_paths, run_replicas)
+
+from tests._optional import given, settings, st
+
+HOME = "us-east-1"
+REGIONS = ("us-east-1", "us-west-2", "eu-west-1")
+
+
+def region_scenario(policy="hardened", *, storm=True, shock_seed=11,
+                    **overrides):
+    """A compact 24 h / 3 h-step regional storm (the ``bench_region``
+    shape scaled down): ``region_storm`` at scale 0.5 lands every window
+    inside the horizon."""
+    base = dict(
+        name="region_test", duration_hours=24.0, step_hours=3.0, pods=60,
+        demand_schedule=((6.0, 110), (12.0, 70)),
+        interrupt_model="pressure", policy=policy,
+        catalog_seed=7, max_offerings=80, market_seed=7, interrupt_seed=7,
+        region=RegionConfig(regions=REGIONS, rho=0.7, vol=0.25,
+                            shock_seed=shock_seed, home_region=HOME,
+                            egress_per_pod_hour=0.002),
+        faults=region_storm(HOME, 0.5) if storm else ())
+    base.update(overrides)
+    return Scenario(**base)
+
+
+def strip_region_header(trace: str) -> str:
+    """Normalize a trace header for inertness comparisons: the scenario
+    dict's region/name/policy fields are declared config, not behavior."""
+    lines = trace.splitlines()
+    head = json.loads(lines[0])
+    head["scenario"]["region"] = None
+    head["scenario"]["name"] = ""
+    head["scenario"]["policy"] = ""
+    lines[0] = json.dumps(head, sort_keys=True)
+    return "\n".join(lines)
+
+
+def mk_ritem(i, region, sp, pods=4, bs=1e4, t3=10):
+    """A synthetic candidate pinned to a region tag."""
+    o = Offering(offering_id=f"t{i}@{region}", instance_type=f"t{i}",
+                 family="m", generation=6, vendor="i",
+                 specialization="general", size="large", region=region,
+                 az=f"{region}a", vcpus=2, mem_gib=8.0, od_price=sp * 3,
+                 spot_price=sp, bs_core=bs, sps_single=3, t3=t3,
+                 interruption_freq=1)
+    return CandidateItem(offering=o, pods=pods, bs=bs, spot_price=sp, t3=t3)
+
+
+def region_items(per_region=4, base_sp=0.5, spread=0.1):
+    """``per_region`` items in each of the three regions; the home region
+    is cheapest (ascending ``spread`` per region index)."""
+    items = []
+    for r_i, region in enumerate(REGIONS):
+        for j in range(per_region):
+            items.append(mk_ritem(r_i * per_region + j, region,
+                                  sp=base_sp + spread * r_i + 0.01 * j))
+    return items
+
+
+# -------------------------------------------------- coordinate-pure RNG ----
+
+def test_region_shock_is_a_pure_function_of_coordinates():
+    a = region_shock(11, "us-east-1", 6.0)
+    assert a == region_shock(11, "us-east-1", 6.0)
+    # draws never come from a consumed stream: interleaving other draws
+    # cannot move them
+    region_shock(11, "us-west-2", 6.0)
+    region_shock(12, "us-east-1", 9.0)
+    assert a == region_shock(11, "us-east-1", 6.0)
+    # each coordinate axis matters
+    assert a != region_shock(12, "us-east-1", 6.0)
+    assert a != region_shock(11, "us-west-2", 6.0)
+    assert a != region_shock(11, "us-east-1", 6.25)
+    # the time coordinate is second-exact: sub-second float noise rounds
+    # onto the same draw
+    assert a == region_shock(11, "us-east-1", 6.0 + 1e-7)
+
+
+def test_regional_price_factors_correlation_structure():
+    cfg = dataclasses.replace(RegionConfig(regions=REGIONS), vol=0.25)
+    # rho = 1: only the shared factor survives — every region moves
+    # together, bit-exactly (the dangerous correlated regime)
+    f1 = regional_price_factors(dataclasses.replace(cfg, rho=1.0),
+                                REGIONS, 6.0)
+    assert len(set(f1.values())) == 1
+    # rho = 0: purely idiosyncratic — regions decouple
+    f0 = regional_price_factors(dataclasses.replace(cfg, rho=0.0),
+                                REGIONS, 6.0)
+    assert len(set(f0.values())) == len(REGIONS)
+    # vol = 0 is the identity, no draws at all
+    assert regional_price_factors(dataclasses.replace(cfg, vol=0.0),
+                                  REGIONS, 6.0) \
+        == {r: 1.0 for r in REGIONS}
+    # purity: the factor map is reproducible from coordinates alone
+    assert f0 == regional_price_factors(dataclasses.replace(cfg, rho=0.0),
+                                        REGIONS, 6.0)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(0, 2 ** 32 - 1), st.sampled_from(REGIONS),
+       st.integers(0, 400), st.floats(0.0, 1.0, allow_nan=False))
+def test_region_shock_purity_property(seed, tag, quarter_hours, rho):
+    """Purity and correlation-structure properties over random
+    coordinates (time on a quarter-hour grid so the second-exact time
+    coordinate is unambiguous)."""
+    t = quarter_hours * 0.25
+    z = region_shock(seed, tag, t)
+    assert math.isfinite(z)
+    assert z == region_shock(seed, tag, t)
+    cfg = RegionConfig(regions=REGIONS, rho=rho, vol=0.25, shock_seed=seed)
+    f = regional_price_factors(cfg, REGIONS, t)
+    assert f == regional_price_factors(cfg, REGIONS, t)
+    assert all(v > 0.0 and math.isfinite(v) for v in f.values())
+    if rho == 1.0:
+        assert len(set(f.values())) == 1
+
+
+def test_region_shock_purity_property_deterministic():
+    """Seeded twin of the hypothesis property above."""
+    rng = np.random.default_rng(41)
+    for _ in range(40):
+        seed = int(rng.integers(0, 2 ** 32))
+        tag = REGIONS[int(rng.integers(0, len(REGIONS)))]
+        t = int(rng.integers(0, 401)) * 0.25
+        rho = float(rng.uniform(0.0, 1.0))
+        z = region_shock(seed, tag, t)
+        assert math.isfinite(z)
+        assert z == region_shock(seed, tag, t)
+        cfg = RegionConfig(regions=REGIONS, rho=rho, vol=0.25,
+                           shock_seed=seed)
+        f = regional_price_factors(cfg, REGIONS, t)
+        assert f == regional_price_factors(cfg, REGIONS, t)
+        assert all(v > 0.0 and math.isfinite(v) for v in f.values())
+
+
+# ------------------------------------------------------- market overlay ----
+
+def test_overlay_inert_case_returns_inputs_by_reference():
+    items = region_items()
+    catalog = [it.offering for it in items]
+    ov = RegionalMarketOverlay(RegionConfig(regions=REGIONS), catalog)
+    spot = np.array([o.spot_price for o in catalog])
+    t3 = np.array([o.t3 for o in catalog])
+    spot2, t32 = ov.apply(spot, t3, 6.0)
+    assert spot2 is spot and t32 is t3     # the engine identity checks
+    # and no overlay is built at all for a region-free scenario
+    assert make_overlay(None, catalog, ()) is None
+    assert make_overlay(RegionConfig(), catalog, ()) is not None
+
+
+def test_overlay_brownout_thins_and_spikes_outage_blacks_out():
+    items = region_items()
+    catalog = [it.offering for it in items]
+    faults = region_storm(HOME)            # brownout @6, outage @18
+    ov = make_overlay(RegionConfig(regions=REGIONS, vol=0.0), catalog,
+                      faults)
+    spot = np.array([o.spot_price for o in catalog], dtype=np.float64)
+    t3 = np.array([o.t3 for o in catalog])
+    home = np.array([o.region == HOME for o in catalog])
+
+    bs, bt3 = ov.apply(spot, t3, 6.0)      # brownout window
+    assert (bt3[home] == np.floor(t3[home] * 0.4)).all()   # mag 0.6 thins
+    od = np.array([o.od_price for o in catalog])
+    assert (bs[home] == np.minimum(spot[home] * 1.6, od[home])).all()
+    assert (bt3[~home] == t3[~home]).all() and (bs[~home]
+                                                == spot[~home]).all()
+
+    os_, ot3 = ov.apply(spot, t3, 18.0)    # outage window: region dark
+    assert (ot3[home] == 0).all()
+    assert (ot3[~home] == t3[~home]).all() and (os_[~home]
+                                                == spot[~home]).all()
+    # partition is observed-side (ChaosController): the TRUE overlay
+    # leaves the world untouched in its window
+    ps, pt3 = ov.apply(spot, t3, 33.0)
+    assert ps is spot and pt3 is t3
+
+
+# -------------------------------------------- determinism under regions ----
+
+@pytest.mark.parametrize("policy", ["kubepacs", "hardened"])
+def test_same_seed_byte_identical_trace_with_regions(policy):
+    sc = region_scenario(policy)
+    a = ClusterSim(sc, clock=lambda: 0.0).run()
+    b = ClusterSim(sc, clock=lambda: 0.0).run()
+    assert a.recorder.dumps() == b.recorder.dumps()
+
+
+@pytest.mark.parametrize("policy", ["kubepacs", "hardened"])
+def test_replay_rng_free_with_regions(policy):
+    live = ClusterSim(region_scenario(policy), clock=lambda: 0.0).run()
+    rep = ClusterSim.replay(loads_trace(live.recorder.dumps())).run()
+    assert rep.recorder.dumps() == live.recorder.dumps()
+
+
+def test_fleet_matches_standalone_with_regions():
+    sc = region_scenario("hardened")
+    seeds = [0, 1]
+    fleet = run_fleet(sc, seeds, record_traces=True, clock=lambda: 0.0)
+    per_seed = run_replicas(sc, seeds)
+    for f, s in zip(fleet, per_seed):
+        assert f.recorder.dumps() == s.recorder.dumps()
+        assert f.total_egress == s.total_egress
+
+
+def test_run_fleet_paths_sweeps_the_shock_seed():
+    sc = region_scenario("kubepacs", storm=False)
+    paths = run_fleet_paths(sc, [11, 23], [7], record_traces=True,
+                            clock=lambda: 0.0)
+    assert len(paths) == 2 and all(len(p) == 1 for p in paths)
+    # different correlated market paths: different behavior...
+    assert paths[0][0].recorder.dumps() != paths[1][0].recorder.dumps()
+    # ...and each path is exactly run_fleet at that shock seed
+    sc23 = dataclasses.replace(sc, region=dataclasses.replace(
+        sc.region, shock_seed=23))
+    direct = run_fleet(sc23, [7], record_traces=True, clock=lambda: 0.0)
+    assert paths[1][0].recorder.dumps() == direct[0].recorder.dumps()
+    with pytest.raises(ValueError):
+        run_fleet_paths(dataclasses.replace(sc, region=None), [11], [7])
+
+
+# ----------------------------------------------------------- inertness ----
+
+def test_single_region_scenario_is_byte_inert():
+    """K=1 RegionalCatalog ≡ the region-free scenario over the identical
+    restricted catalog — every byte but the declared config header."""
+    plain = region_scenario("kubepacs", storm=False, region=None,
+                            name="plain")
+    k1 = dataclasses.replace(plain,
+                             region=RegionConfig(regions=(HOME,)))
+    cat = k1.build_catalog()
+    rk1 = ClusterSim(k1, clock=lambda: 0.0).run()
+    rpl = ClusterSim(plain, catalog=cat, clock=lambda: 0.0).run()
+    assert strip_region_header(rk1.recorder.dumps()) \
+        == strip_region_header(rpl.recorder.dumps())
+    assert rk1.total_egress == 0.0
+
+
+def test_identity_region_config_is_byte_inert():
+    """A solver-inert, price-inert, hazard-inert RegionConfig changes
+    nothing: the failover rung is bit-inert when no region faults are
+    declared (here: no faults at all), per the §17 contract."""
+    bare = region_scenario("hardened", storm=False, region=None)
+    ident = dataclasses.replace(
+        bare, region=RegionConfig(regions=REGIONS,
+                                  hazard_scale=((HOME, 1.0),)))
+    cat = ident.build_catalog()
+    rid = ClusterSim(ident, clock=lambda: 0.0).run()
+    rbare = ClusterSim(bare, catalog=cat, clock=lambda: 0.0).run()
+    assert strip_region_header(rid.recorder.dumps()) \
+        == strip_region_header(rbare.recorder.dumps())
+    assert not any(k.startswith("chaos_region")
+                   for k in rid.cache_stats)
+
+
+# ------------------------------------------------------- hazard regime ----
+
+def test_apply_hazard_scale_law():
+    p = np.array([0.0, 0.1, 0.5, 1.0])
+    # scale 1 is the identity law; 2 compounds two independent trials
+    assert np.allclose(apply_hazard_scale(p, np.ones(4)), p)
+    assert np.allclose(apply_hazard_scale(p, np.full(4, 2.0)),
+                       1.0 - (1.0 - p) ** 2)
+    # scale 0 turns hazard off entirely
+    assert (apply_hazard_scale(p, np.zeros(4)) == 0.0).all()
+
+
+def test_hazard_scale_fleet_matches_standalone():
+    """The per-region hazard regime must be applied identically by the
+    standalone model (per-entry gather) and the fleet engine's batched
+    matrix path — bitwise, via the one shared law."""
+    sc = region_scenario(
+        "kubepacs", storm=False,
+        region=RegionConfig(regions=REGIONS,
+                            hazard_scale=((HOME, 3.0),
+                                          ("us-west-2", 0.5))))
+    seeds = [0, 1]
+    fleet = run_fleet(sc, seeds, record_traces=True, clock=lambda: 0.0)
+    per_seed = run_replicas(sc, seeds)
+    for f, s in zip(fleet, per_seed):
+        assert f.recorder.dumps() == s.recorder.dumps()
+
+
+# ---------------------------------------------------- egress accounting ----
+
+def test_egress_accrues_into_billing_and_gates_on_its_knob():
+    sc = region_scenario("kubepacs", storm=False)
+    res = ClusterSim(sc, clock=lambda: 0.0).run()
+    assert res.total_egress > 0.0
+    assert res.total_cost > res.total_egress
+    off = dataclasses.replace(sc, region=dataclasses.replace(
+        sc.region, egress_per_pod_hour=0.0))
+    assert ClusterSim(off, clock=lambda: 0.0).run().total_egress == 0.0
+
+
+# ------------------------------------------------- region side-solves ----
+
+def test_solver_inert_config_is_exactly_bracketed_gss():
+    items = region_items()
+    pool, _, info = solve_with_regions(items, 40, RegionConfig())
+    ref, _ = bracketed_gss(items, 40, 0.01)
+    assert pool.as_dict() == ref.as_dict()
+    assert info == {"cap_repairs": 0, "spread_forced": 0,
+                    "egress_reweighted": False}
+
+
+def test_caps_trim_and_resolve_into_survivors():
+    items = region_items()                 # home region strictly cheapest
+    cfg = RegionConfig(regions=REGIONS, home_region=HOME,
+                       caps=((HOME, 2),))
+    pool, _, info = solve_with_regions(items, 40, cfg)
+    shares = region_pool_shares(pool)
+    assert shares.get(HOME, 0) <= 2
+    assert pool.total_pods >= 40           # residual re-solved elsewhere
+    assert info["cap_repairs"] >= 1
+
+
+def test_min_spread_forces_n_plus_one_redundancy():
+    items = region_items()
+    pool, _, info = solve_with_regions(
+        items, 40, RegionConfig(regions=REGIONS, min_spread=3))
+    assert len(region_pool_shares(pool)) >= 3
+    assert info["spread_forced"] >= 1
+
+
+def test_egress_reweight_prefers_home_but_bills_true_prices():
+    # identical spot everywhere: only data gravity separates the regions
+    items = [mk_ritem(i, r, sp=0.5) for i, r in
+             ((0, HOME), (1, "us-west-2"), (2, "eu-west-1"))]
+    cfg = RegionConfig(regions=REGIONS, home_region=HOME,
+                       egress_per_pod_hour=0.1)
+    pool, _, info = solve_with_regions(items, 4, cfg)
+    assert info["egress_reweighted"]
+    assert set(region_pool_shares(pool)) == {HOME}
+    # counts map back onto TRUE-priced items (the reweight never leaks
+    # into billing)
+    assert all(it.spot_price == 0.5 for it in pool.items)
+
+
+# ------------------------------------------------- failover + learned band -
+
+def test_failover_rung_fires_only_under_region_faults():
+    res = ClusterSim(region_scenario("hardened"), clock=lambda: 0.0).run()
+    assert res.cache_stats.get("chaos_region_failover", 0) > 0
+    assert all(decision_available(d) for _, d in res.decisions)
+    # failover decisions sit above the ladder (rung -1) and carry the
+    # quarantined-region count
+    failover = [d for _, d in res.decisions
+                if d.metrics.get("chaos_rung") == -1.0]
+    assert failover
+    assert all(d.metrics["chaos_region_failover"] >= 1.0 for d in failover)
+
+
+def test_hazard_quarantine_band_defaults_off():
+    items = region_items()
+    hazard = np.full(len(items), 0.9)
+    # rate 0 (the default): the learned band is bit-inert — the mask is
+    # exactly the fixed-bands mask however hot the estimate runs
+    assert quarantine_mask(items, GuardConfig(), hazard=hazard) is None
+    # enabled: rows whose estimated rate exceeds the band join the mask
+    cfg = GuardConfig(hazard_quarantine_rate=0.5)
+    mask = quarantine_mask(items, cfg, hazard=hazard)
+    assert mask is not None and mask.all()
+    hazard[0] = 0.1
+    assert not quarantine_mask(items, cfg, hazard=hazard)[0]
+
+
+def test_hazard_band_estimators_gate_on_the_knob():
+    catalog = [it.offering for it in region_items()]
+    off = HardenedPolicy(clock=lambda: 0.0)
+    off.bind(catalog)
+    assert off.estimators is None          # default: fixed bands only
+    on = HardenedPolicy(clock=lambda: 0.0,
+                        config=GuardConfig(hazard_quarantine_rate=0.2))
+    on.bind(catalog)
+    assert on.estimators is not None
+    # the learned band joins the decision identity: memo keys must not
+    # collide across estimator states (None stays None pre-chaos)
+    assert off.memo_digest() is None
+    assert on.memo_digest() is not None
